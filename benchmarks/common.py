@@ -1,0 +1,156 @@
+"""Shared benchmark substrate: corpora, indexes, metrics, timing.
+
+MS MARCO / BEIR and trained model weights are not available offline; every
+benchmark therefore runs on synthetic Zipfian/topical corpora
+(data/synthetic.py) and validates the paper's *relative* claims — bound
+tightness orderings, safe-mode exactness, recall/latency trade-offs,
+skipping-rate orderings (see EXPERIMENTS.md for the claim-by-claim map).
+Latency on this CPU container is a proxy measured on the jitted batched
+engine; work counters (docs/clusters/segments scored) are the
+hardware-independent efficiency metric reported alongside.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import lru_cache
+
+import jax
+import numpy as np
+
+from repro.core.clustering import (balanced_assign, dense_rep_projection,
+                                   lloyd_kmeans)
+from repro.core.index import build_index
+from repro.core.search import SearchConfig, brute_force_topk, retrieve
+from repro.core.types import ClusterIndex, QueryBatch, TopK
+from repro.data.synthetic import CorpusSpec, make_corpus, make_queries
+
+
+DEFAULT_SPEC = CorpusSpec(n_docs=6000, vocab=1024, n_topics=48,
+                          doc_terms=48, t_pad=64, query_terms=16,
+                          q_pad=24, seed=0)
+
+
+@lru_cache(maxsize=4)
+def corpus_bundle(spec: CorpusSpec = DEFAULT_SPEC, n_queries: int = 32,
+                  qseed: int = 1):
+    docs, doc_topic = make_corpus(spec)
+    queries, q_topic = make_queries(spec, n_queries, doc_topic, seed=qseed)
+    rep = np.asarray(dense_rep_projection(docs, dim=96))
+    return docs, doc_topic, queries, q_topic, rep
+
+
+@lru_cache(maxsize=16)
+def built_index(m: int, n_seg: int, seg_method: str = "random_uniform",
+                spec: CorpusSpec = DEFAULT_SPEC, seed: int = 0,
+                overcap: float = 2.0) -> ClusterIndex:
+    docs, doc_topic, _, _, rep = corpus_bundle(spec)
+    centers, _ = lloyd_kmeans(jax.random.PRNGKey(seed), rep, k=m, iters=8)
+    d_pad = max(8, int(overcap * spec.n_docs / m))
+    assign = np.asarray(balanced_assign(rep, centers, capacity=d_pad))
+    return build_index(docs, assign, m=m, n_seg=n_seg, d_pad=d_pad,
+                       seg_method=seg_method,
+                       dense_rep=rep if seg_method == "kmeans_sub" else None,
+                       seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# metrics
+# ---------------------------------------------------------------------------
+
+def mrr_at(out: TopK, q_topic: np.ndarray, doc_topic: np.ndarray,
+           k: int = 10) -> float:
+    """MRR@k against the synthetic qrels (relevant = same topic)."""
+    ids = np.asarray(out.doc_ids)[:, :k]
+    rr = []
+    for i in range(ids.shape[0]):
+        rel = np.where((ids[i] >= 0)
+                       & (doc_topic[np.maximum(ids[i], 0)]
+                          == q_topic[i]))[0]
+        rr.append(1.0 / (rel[0] + 1) if len(rel) else 0.0)
+    return float(np.mean(rr))
+
+
+def recall_vs_exact(out: TopK, oracle: TopK, k: int,
+                    tol: float = 1e-5) -> float:
+    """Score-threshold recall vs the exact top-k: a returned doc counts if
+    its score reaches the oracle's k-th score (ties at the tail of a deep
+    list — e.g. zero-score docs at k=1000 — are interchangeable, so
+    id-overlap would undercount all methods on tie-heavy corpora)."""
+    a_scores = np.asarray(out.scores)[:, :k]
+    o_scores = np.sort(np.asarray(oracle.scores), axis=1)[:, ::-1][:, :k]
+    rec = []
+    for i in range(a_scores.shape[0]):
+        kth = o_scores[i, min(k, o_scores.shape[1]) - 1]
+        n_exact = int((o_scores[i] > -1e30).sum())
+        got = int((a_scores[i] >= kth - tol).sum())
+        rec.append(got / max(1, n_exact))
+    return float(np.mean(rec))
+
+
+def recall_vs_qrels(out: TopK, q_topic: np.ndarray, doc_topic: np.ndarray,
+                    k: int) -> float:
+    ids = np.asarray(out.doc_ids)[:, :k]
+    rec = []
+    for i in range(ids.shape[0]):
+        rel_total = int((doc_topic == q_topic[i]).sum())
+        got = int(((ids[i] >= 0)
+                   & (doc_topic[np.maximum(ids[i], 0)]
+                      == q_topic[i])).sum())
+        rec.append(got / max(1, min(rel_total, k)))
+    return float(np.mean(rec))
+
+
+# ---------------------------------------------------------------------------
+# timing
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class BenchResult:
+    name: str
+    mrt_ms: float                 # mean per-query retrieval time (proxy)
+    p99_ms: float
+    pct_clusters: float           # %C — clusters not pruned
+    scored_docs: float
+    extras: dict = dataclasses.field(default_factory=dict)
+
+    def row(self) -> dict:
+        d = {"name": self.name, "mrt_ms": round(self.mrt_ms, 3),
+             "p99_ms": round(self.p99_ms, 3),
+             "pct_clusters": round(self.pct_clusters, 1),
+             "scored_docs": round(self.scored_docs, 1)}
+        d.update(self.extras)
+        return d
+
+
+def timed_retrieve(index: ClusterIndex, queries: QueryBatch,
+                   cfg: SearchConfig, name: str, reps: int = 5,
+                   **extras) -> tuple[TopK, BenchResult]:
+    fn = jax.jit(lambda i, q: retrieve(i, q, cfg))
+    out = jax.block_until_ready(fn(index, queries))     # compile + warm
+    lat = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = jax.block_until_ready(fn(index, queries))
+        lat.append((time.perf_counter() - t0) * 1e3 / queries.n_queries)
+    res = BenchResult(
+        name=name,
+        mrt_ms=float(np.mean(lat)),
+        p99_ms=float(np.percentile(lat, 99)),
+        pct_clusters=float(out.n_scored_clusters.mean()) / index.m * 100,
+        scored_docs=float(out.n_scored_docs.mean()),
+        extras=extras,
+    )
+    return out, res
+
+
+def print_table(title: str, rows: list[dict]) -> None:
+    print(f"\n== {title} ==")
+    if not rows:
+        print("(no rows)")
+        return
+    cols = list(rows[0].keys())
+    print(",".join(str(c) for c in cols))
+    for r in rows:
+        print(",".join(str(r.get(c, "")) for c in cols))

@@ -1,0 +1,58 @@
+"""Figure 2: average ratio of actual to estimated cluster bound vs the
+number of clusters, for BoundSum (Formula 2) and ASC's MaxSBound
+(Formula 3). The paper's claim: the ratio rises toward 1 with more
+clusters, and MaxSBound is uniformly tighter than BoundSum."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import built_index, corpus_bundle, print_table
+from repro.core.bounds import cluster_bounds
+from repro.core.search import score_docs_ref
+
+
+def bound_ratios(index, queries) -> tuple[float, float]:
+    """(mean actual/BoundSum, mean actual/MaxSBound) over query-cluster
+    pairs with a nonzero bound."""
+    stats = cluster_bounds(index, queries)
+    qmaps = queries.dense_map()
+    r_sum, r_max = [], []
+    for qi in range(queries.n_queries):
+        scores = score_docs_ref(index.doc_tids, index.doc_tw, qmaps[qi],
+                                index.scale)
+        scores = jnp.where(index.doc_mask, scores, -jnp.inf)
+        actual = np.asarray(jnp.max(scores, axis=1))          # (m,)
+        bs = np.asarray(stats["bound_sum"][qi])
+        ms = np.asarray(stats["max_s"][qi])
+        live = (bs > 1e-6) & np.isfinite(actual)
+        r_sum.append(np.mean(actual[live] / bs[live]))
+        live2 = (ms > 1e-6) & np.isfinite(actual)
+        r_max.append(np.mean(actual[live2] / ms[live2]))
+    return float(np.mean(r_sum)), float(np.mean(r_max))
+
+
+def run() -> list[dict]:
+    _, _, queries, _, _ = corpus_bundle()
+    rows = []
+    for m in (8, 16, 32, 64, 128):
+        idx = built_index(m=m, n_seg=8)
+        rs, rm = bound_ratios(idx, queries)
+        rows.append({"n_clusters": m,
+                     "actual/BoundSum": round(rs, 4),
+                     "actual/MaxSBound": round(rm, 4)})
+    print_table("Fig 2: bound tightness vs #clusters", rows)
+
+    # paper claims encoded as assertions
+    ratios_sum = [r["actual/BoundSum"] for r in rows]
+    ratios_max = [r["actual/MaxSBound"] for r in rows]
+    assert all(b >= a for a, b in zip(ratios_sum, ratios_sum[1:])), \
+        "BoundSum tightness must improve with more clusters"
+    assert all(m >= s for s, m in zip(ratios_sum, ratios_max)), \
+        "MaxSBound must be tighter than BoundSum (Prop 1)"
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,73 @@
+"""Figures 3 & 6: recall/latency trade-off when varying mu, the number of
+clusters m, and segments per cluster n.
+
+Fig 3 (Anytime*): recall holds at mu=0.9, drops visibly for small mu; more
+clusters add per-cluster overhead that offsets pruning gains.
+Fig 6 (ASC): curves per (m*n) config with mu swept; more clusters =>
+longer latency span, better pruning at small mu.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (built_index, corpus_bundle, print_table,
+                               recall_vs_exact, timed_retrieve)
+from repro.core.search import SearchConfig, brute_force_topk
+
+K = 100
+MUS = (0.3, 0.5, 0.7, 0.9, 1.0)
+
+
+def run() -> list[dict]:
+    _, _, queries, _, _ = corpus_bundle()
+    rows = []
+
+    # ---- Fig 3: Anytime* over #clusters x mu --------------------------
+    for m in (16, 64):
+        idx = built_index(m=m, n_seg=8)
+        oracle = brute_force_topk(idx, queries, K)
+        for mu in MUS:
+            method = "anytime" if mu == 1.0 else "anytime_star"
+            out, res = timed_retrieve(
+                idx, queries,
+                SearchConfig(k=K, mu=mu, eta=mu, method=method),
+                name=f"anytime*-{m}c", reps=3)
+            rows.append({"fig": 3, "method": "anytime*", "m": m,
+                         "n_seg": "-", "mu": mu,
+                         "recall": round(recall_vs_exact(out, oracle, K), 4),
+                         "mrt_ms": round(res.mrt_ms, 2),
+                         "pct_clusters": round(res.pct_clusters, 1)})
+
+    # ---- Fig 6: ASC over (m*n) x mu ------------------------------------
+    for m, n_seg in ((16, 16), (32, 8), (64, 8)):
+        idx = built_index(m=m, n_seg=n_seg)
+        oracle = brute_force_topk(idx, queries, K)
+        for mu in MUS:
+            out, res = timed_retrieve(
+                idx, queries, SearchConfig(k=K, mu=mu, eta=1.0),
+                name=f"asc-{m}x{n_seg}", reps=3)
+            rows.append({"fig": 6, "method": "asc", "m": m, "n_seg": n_seg,
+                         "mu": mu,
+                         "recall": round(recall_vs_exact(out, oracle, K), 4),
+                         "mrt_ms": round(res.mrt_ms, 2),
+                         "pct_clusters": round(res.pct_clusters, 1)})
+
+    print_table("Fig 3 / Fig 6: recall vs latency over mu, m, n", rows)
+
+    # claims: recall monotone-ish in mu; ASC at mu=1 is exact
+    for method in ("anytime*", "asc"):
+        sub = [r for r in rows if r["method"] == method]
+        for key in {(r["m"], r["n_seg"]) for r in sub}:
+            curve = sorted((r for r in sub
+                            if (r["m"], r["n_seg"]) == key),
+                           key=lambda r: r["mu"])
+            rec = [r["recall"] for r in curve]
+            assert rec[-1] >= 0.999, f"{method} {key} mu=1 not exact"
+            assert all(b >= a - 0.02 for a, b in zip(rec, rec[1:])), \
+                f"recall not ~monotone in mu for {method} {key}: {rec}"
+    return rows
+
+
+if __name__ == "__main__":
+    run()

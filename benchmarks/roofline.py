@@ -1,0 +1,106 @@
+"""Roofline analysis from the dry-run artifacts (deliverable g).
+
+Per (arch x shape x mesh) cell, derive the three roofline terms from the
+compiled program (TPU v5e targets):
+
+    compute    = FLOPs_per_device / 197e12          [s]
+    memory     = bytes_per_device / 819e9           [s]
+    collective = collective_bytes_per_device / 50e9 [s]
+
+``cost_analysis()`` on a pjit-compiled module is per-device (verified);
+``*_total`` fields carry the scan-over-layers extrapolation (XLA counts
+loop bodies once — see launch/dryrun.py). MODEL_FLOPS is the hand-counted
+useful work from launch/cells.py; the MODEL/HLO ratio flags remat /
+redundant compute.
+
+Output: the §Roofline table (CSV) + dominant-term identification, written
+to experiments/roofline.csv and printed.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # bytes/s / chip
+ICI_BW = 50e9              # bytes/s/link
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..",
+                          "experiments", "dryrun")
+OUT_CSV = os.path.join(os.path.dirname(__file__), "..",
+                       "experiments", "roofline.csv")
+
+COLUMNS = ["arch", "shape", "mesh", "chips", "compute_s", "memory_s",
+           "collective_s", "bound_by", "model_flops", "hlo_flops_dev",
+           "useful_ratio", "mem_gib_dev"]
+
+
+def analyze_record(rec: dict) -> dict | None:
+    if rec.get("status") != "ok":
+        return None
+    chips = rec["n_devices"]
+    flops_dev = rec.get("flops_total", rec.get("flops", 0.0))
+    bytes_dev = rec.get("bytes_total", rec.get("bytes_accessed", 0.0))
+    coll = rec.get("collectives_total", rec.get("collectives", {}))
+    coll_bytes = sum(v["bytes"] for v in coll.values())
+
+    compute_s = flops_dev / PEAK_FLOPS
+    memory_s = bytes_dev / HBM_BW
+    collective_s = coll_bytes / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bound_by = max(terms, key=terms.get)
+    model = rec.get("model_flops", 0.0)
+    useful = model / (flops_dev * chips) if flops_dev else 0.0
+    mem = rec.get("memory", {})
+    mem_dev = (mem.get("argument_size_in_bytes", 0)
+               + mem.get("temp_size_in_bytes", 0)) / 2**30
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "chips": chips,
+        "compute_s": f"{compute_s:.3e}",
+        "memory_s": f"{memory_s:.3e}",
+        "collective_s": f"{collective_s:.3e}",
+        "bound_by": bound_by,
+        "model_flops": f"{model:.3e}",
+        "hlo_flops_dev": f"{flops_dev:.3e}",
+        "useful_ratio": f"{useful:.3f}",
+        "mem_gib_dev": f"{mem_dev:.2f}",
+    }
+
+
+def run(mesh: str = "single") -> list[dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if mesh != "both" and rec.get("mesh") != mesh:
+            continue
+        row = analyze_record(rec)
+        if row:
+            rows.append(row)
+
+    rows.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    print("\n== Roofline (single-pod, per-device terms) ==")
+    print(",".join(COLUMNS))
+    for r in rows:
+        print(",".join(str(r[c]) for c in COLUMNS))
+
+    with open(OUT_CSV, "w") as f:
+        f.write(",".join(COLUMNS) + "\n")
+        for r in rows:
+            f.write(",".join(str(r[c]) for c in COLUMNS) + "\n")
+    print(f"[roofline] wrote {len(rows)} rows -> {OUT_CSV}")
+
+    counts = {}
+    for r in rows:
+        counts[r["bound_by"]] = counts.get(r["bound_by"], 0) + 1
+    print(f"[roofline] dominant terms: {counts}")
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    run(mesh=sys.argv[1] if len(sys.argv) > 1 else "single")

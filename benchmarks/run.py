@@ -1,0 +1,51 @@
+"""Benchmark driver: one module per paper table/figure + the roofline
+report. ``python -m benchmarks.run [names...]`` — each module prints its
+CSV table and asserts the paper's qualitative claims (a failed claim is a
+regression, not a soft warning)."""
+
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+
+SUITES = [
+    ("fig2_bound_tightness", "Fig 2: cluster bound tightness vs m"),
+    ("fig3_fig6_recall_latency", "Fig 3/6: recall-latency over mu, m, n"),
+    ("table2_clustering", "Table 2: clustering representations"),
+    ("table3_segmentation", "Table 3: segmentation methods"),
+    ("table4_baselines", "Table 4: ASC vs MaxScore/Anytime/Anytime*"),
+    ("table5_models", "Table 5: weight regimes"),
+    ("table6_zeroshot", "Table 6: zero-shot collections"),
+    ("table7_budget", "Table 7: budgets + static pruning"),
+    ("roofline", "Roofline from dry-run artifacts"),
+]
+
+
+def main() -> int:
+    names = sys.argv[1:] or [s for s, _ in SUITES]
+    failed = []
+    t_all = time.perf_counter()
+    for name, desc in SUITES:
+        if name not in names:
+            continue
+        print(f"\n{'=' * 70}\n[bench] {name}: {desc}\n{'=' * 70}",
+              flush=True)
+        t0 = time.perf_counter()
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+            mod.run()
+            print(f"[bench] {name} OK in "
+                  f"{time.perf_counter() - t0:.1f}s", flush=True)
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+            print(f"[bench] {name} FAILED", flush=True)
+    print(f"\n[bench] total {time.perf_counter() - t_all:.1f}s; "
+          f"{'FAILED: ' + ', '.join(failed) if failed else 'all OK'}")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,107 @@
+"""Table 4: ASC vs rank-safe MaxScore (brute force), Anytime Ranking, and
+Anytime* at k=10 and k=1000, reporting MRR/recall/latency/%C.
+
+Claims validated (relative orderings, per EXPERIMENTS.md):
+  * the three rank-safe configurations return identical result sets;
+  * safe ASC admits fewer clusters than safe Anytime (Prop 1);
+  * ASC(mu<1, eta=1) holds recall above Anytime*(same mu) —
+    the (mu, eta) vs mu headline;
+  * approximate modes do strictly less work than safe modes.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import (built_index, corpus_bundle, mrr_at,
+                               print_table, recall_vs_exact, timed_retrieve)
+from repro.core.search import SearchConfig, brute_force_topk
+
+M, NSEG = 48, 8
+
+
+def run() -> list[dict]:
+    _, doc_topic, queries, q_topic, _ = corpus_bundle()
+    idx = built_index(m=M, n_seg=NSEG)
+    rows = []
+
+    for k in (10, 1000):
+        oracle = brute_force_topk(idx, queries, k)
+        # MaxScore stand-in: exhaustive scoring timed like the others
+        fn = jax.jit(lambda i, q: brute_force_topk(i, q, k))
+        jax.block_until_ready(fn(idx, queries))
+        lat = []
+        for _ in range(3):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(idx, queries))
+            lat.append((time.perf_counter() - t0) * 1e3
+                       / queries.n_queries)
+        rows.append({
+            "k": k, "method": "MaxScore(safe)",
+            "mrr": round(mrr_at(oracle, q_topic, doc_topic), 4),
+            "recall_vs_exact": 1.0,
+            "mrt_ms": round(float(np.mean(lat)), 2),
+            "pct_clusters": 100.0,
+            "scored_docs": float(oracle.n_scored_docs.mean()),
+        })
+
+        configs = [
+            ("Anytime(safe)", SearchConfig(k=k, mu=1.0, eta=1.0,
+                                           method="anytime")),
+            ("ASC(safe)", SearchConfig(k=k, mu=1.0, eta=1.0)),
+            ("Anytime*-mu0.9", SearchConfig(k=k, mu=0.9, eta=0.9,
+                                            method="anytime_star")),
+            ("ASC-mu0.9-eta1", SearchConfig(k=k, mu=0.9, eta=1.0)),
+            ("Anytime*-mu0.7", SearchConfig(k=k, mu=0.7, eta=0.7,
+                                            method="anytime_star")),
+            ("ASC-mu0.7-eta1", SearchConfig(k=k, mu=0.7, eta=1.0)),
+            ("ASC-mu0.5-eta1", SearchConfig(k=k, mu=0.5, eta=1.0)),
+        ]
+        for name, cfg in configs:
+            out, res = timed_retrieve(idx, queries, cfg, name=name, reps=3)
+            rows.append({
+                "k": k, "method": name,
+                "mrr": round(mrr_at(out, q_topic, doc_topic), 4),
+                "recall_vs_exact": round(recall_vs_exact(out, oracle, k), 4),
+                "mrt_ms": round(res.mrt_ms, 2),
+                "pct_clusters": round(res.pct_clusters, 1),
+                "scored_docs": round(res.scored_docs, 0),
+            })
+
+    print_table("Table 4: baselines (SPLADE-analogue corpus)", rows)
+
+    by = {(r["k"], r["method"]): r for r in rows}
+    asc_names = ("ASC(safe)", "ASC-mu0.9-eta1", "ASC-mu0.7-eta1",
+                 "ASC-mu0.5-eta1")
+    star_names = ("Anytime*-mu0.9", "Anytime*-mu0.7")
+    for k in (10, 1000):
+        # safe result sets identical
+        for m_ in ("Anytime(safe)", "ASC(safe)"):
+            assert by[(k, m_)]["recall_vs_exact"] >= 0.999, (k, m_)
+        # Prop 1: safe ASC admits fewer clusters than safe Anytime
+        assert by[(k, "ASC(safe)")]["pct_clusters"] <= \
+            by[(k, "Anytime(safe)")]["pct_clusters"] + 1e-6
+        # the (mu, eta) vs mu headline is a *Pareto* claim ("faster at a
+        # similar relevance level or better in both, depending on
+        # configuration"): every Anytime* point must be dominated by some
+        # ASC point in (recall, scored work).
+        for s in star_names:
+            star = by[(k, s)]
+            assert any(
+                by[(k, a)]["recall_vs_exact"]
+                >= star["recall_vs_exact"] - 5e-3
+                and by[(k, a)]["scored_docs"]
+                <= star["scored_docs"] + 1e-6
+                for a in asc_names), \
+                f"no ASC config dominates {s} at k={k}"
+        # approximation reduces work
+        assert by[(k, "ASC-mu0.5-eta1")]["scored_docs"] <= \
+            by[(k, "ASC(safe)")]["scored_docs"] + 1e-6
+    return rows
+
+
+if __name__ == "__main__":
+    run()

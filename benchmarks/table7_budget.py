@@ -1,0 +1,111 @@
+"""Table 7 + §4.4: ASC under anytime early-termination budgets and on a
+statically-pruned (HT3-analogue) index.
+
+The paper's ms budgets become cluster-visitation budgets (identical
+visitation order => identical early-termination semantics; DESIGN.md §2).
+
+Claims validated:
+  * under the same budget, ASC(mu<1, eta=1) beats Anytime and Anytime*
+    on recall (paper: higher MRR@10 and Recall@1k in both k regimes);
+  * budgets cap tail work (p99 analogue: max clusters visited);
+  * ASC composes with static index pruning: the pruned index is smaller
+    and faster at slight recall cost.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (DEFAULT_SPEC, built_index, corpus_bundle,
+                               mrr_at, print_table, recall_vs_exact,
+                               timed_retrieve)
+from repro.core.clustering import balanced_assign, dense_rep_projection, \
+    lloyd_kmeans
+from repro.core.index import build_index
+from repro.core.search import SearchConfig, brute_force_topk
+from repro.core.static_pruning import static_prune
+from repro.data.synthetic import make_corpus
+
+import jax
+
+M, NSEG = 48, 8
+
+
+def run() -> list[dict]:
+    docs, doc_topic, queries, q_topic, rep = corpus_bundle()
+    idx = built_index(m=M, n_seg=NSEG)
+    rows = []
+
+    from benchmarks.common import recall_vs_qrels
+    for k, budget in ((10, 6), (1000, 12)):
+        oracle = brute_force_topk(idx, queries, k)
+        for name, cfg in (
+            ("Anytime+budget", SearchConfig(
+                k=k, mu=1.0, eta=1.0, method="anytime",
+                cluster_budget=budget)),
+            ("Anytime*+budget-mu0.9", SearchConfig(
+                k=k, mu=0.9, eta=0.9, method="anytime_star",
+                cluster_budget=budget)),
+            ("ASC+budget-safe", SearchConfig(
+                k=k, mu=1.0, eta=1.0, cluster_budget=budget)),
+            ("ASC+budget-mu0.9-eta1", SearchConfig(
+                k=k, mu=0.9, eta=1.0, cluster_budget=budget)),
+        ):
+            out, res = timed_retrieve(idx, queries, cfg, name=name, reps=3)
+            rows.append({
+                "k": k, "budget": budget, "method": name,
+                "mrr": round(mrr_at(out, q_topic, doc_topic), 4),
+                "recall_qrels": round(
+                    recall_vs_qrels(out, q_topic, doc_topic, k), 4),
+                "recall_vs_exact": round(recall_vs_exact(out, oracle, k), 4),
+                "max_clusters": int(out.n_scored_clusters.max()),
+                "mrt_ms": round(res.mrt_ms, 2),
+            })
+
+    print_table("Table 7: early-termination budgets", rows)
+
+    # paper Table 7 claims are on the *relevance* metrics (MRR@10 /
+    # Recall vs qrels): under the same work budget ASC beats Anytime and
+    # Anytime* because (a) MaxSBound orders clusters better and (b) pruned
+    # clusters do not consume budget.
+    by = {(r["k"], r["method"]): r for r in rows}
+    for k, budget in ((10, 6), (1000, 12)):
+        for asc in ("ASC+budget-safe", "ASC+budget-mu0.9-eta1"):
+            assert by[(k, asc)]["mrr"] >= \
+                by[(k, "Anytime+budget")]["mrr"] - 1e-6
+            assert by[(k, asc)]["mrr"] >= \
+                by[(k, "Anytime*+budget-mu0.9")]["mrr"] - 1e-6
+            assert by[(k, asc)]["recall_qrels"] >= \
+                by[(k, "Anytime+budget")]["recall_qrels"] - 0.01
+        for m_ in ("Anytime+budget", "Anytime*+budget-mu0.9",
+                   "ASC+budget-safe", "ASC+budget-mu0.9-eta1"):
+            assert by[(k, m_)]["max_clusters"] <= budget
+
+    # ---- static pruning (HT3 analogue) ---------------------------------
+    pruned_docs = static_prune(docs, keep_frac=0.5)
+    centers, _ = lloyd_kmeans(jax.random.PRNGKey(0), rep, k=M, iters=8)
+    d_pad = idx.d_pad
+    assign = np.asarray(balanced_assign(rep, centers, capacity=d_pad))
+    idx_pruned = build_index(pruned_docs, assign, m=M, n_seg=NSEG,
+                             d_pad=d_pad)
+    k = 1000
+    sp_rows = []
+    for name, ix in (("full-index", idx), ("HT3-pruned", idx_pruned)):
+        out, res = timed_retrieve(
+            ix, queries, SearchConfig(k=k, mu=0.5, eta=1.0),
+            name=name, reps=3)
+        sp_rows.append({
+            "index": name,
+            "postings": int(np.asarray(ix.doc_tw > 0).sum()),
+            "mrr": round(mrr_at(out, q_topic, doc_topic), 4),
+            "mrt_ms": round(res.mrt_ms, 2),
+            "scored_docs": round(res.scored_docs, 0),
+        })
+    print_table("Table 7b: ASC on statically-pruned index", sp_rows)
+    assert sp_rows[1]["postings"] < sp_rows[0]["postings"] * 0.8
+    assert sp_rows[1]["mrr"] >= sp_rows[0]["mrr"] - 0.05
+    return rows + sp_rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,85 @@
+"""Cross-architecture example: ASC as the retrieval layer for BERT4Rec's
+million-item catalog (DESIGN.md §5 — the one assigned arch where the
+paper's technique applies at serving time).
+
+BERT4Rec scores a user's next item as <h_user, e_item>. Offline we treat
+each item embedding as a sparse document (top coordinates of e_item),
+cluster the catalog, and ASC serves top-k item retrieval without scoring
+all items — versus the brute-force 1xN dot-product scan.
+
+    PYTHONPATH=src python examples/bert4rec_asc_retrieval.py
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.core.clustering import balanced_assign, lloyd_kmeans
+from repro.core.index import build_index
+from repro.core.search import asc_retrieve, brute_force_topk
+from repro.core.types import QueryBatch
+from repro.data import pipeline as pl
+from repro.models import recsys as rs
+from repro.models.sparse_encoder import to_sparse_docs
+
+
+def main() -> None:
+    cfg = get_arch("bert4rec").smoke_config()
+    n_items = cfg.n_items
+    params = rs.bert4rec_init(jax.random.PRNGKey(0), cfg)
+
+    # ---- offline: catalog -> sparse docs -> clustered index -----------
+    item_emb = params["item_emb"][:n_items]                  # (N, D)
+    # nonnegative decomposition: [relu(e); relu(-e)] keeps inner products
+    # comparable while meeting the sparse-retrieval nonnegativity
+    sparse_cat = jnp.concatenate([jax.nn.relu(item_emb),
+                                  jax.nn.relu(-item_emb)], axis=1)
+    vocab = sparse_cat.shape[1]
+    docs = to_sparse_docs(sparse_cat, t_pad=vocab // 2, vocab=vocab)
+
+    m = 16
+    centers, _ = lloyd_kmeans(jax.random.PRNGKey(1), item_emb, k=m,
+                              iters=10)
+    d_pad = int(2.5 * n_items / m)
+    assign = balanced_assign(item_emb, centers, capacity=d_pad)
+    index = build_index(docs, np.asarray(assign), m=m, n_seg=4,
+                        d_pad=d_pad)
+    print(f"catalog index: {n_items} items, {m} clusters, "
+          f"{index.nbytes() / 2**20:.2f} MiB")
+
+    # ---- online: encode users, retrieve via ASC ------------------------
+    batch = pl.bert4rec_batch(cfg, 8, step=0)
+    hidden = rs.bert4rec_encode(params, batch, cfg)[:, -1, :]  # (B, D)
+    q_sparse = jnp.concatenate([jax.nn.relu(hidden),
+                                jax.nn.relu(-hidden)], axis=1)
+    qd = to_sparse_docs(q_sparse, t_pad=vocab // 2, vocab=vocab)
+    queries = QueryBatch(tids=qd.tids, tw=qd.tw, mask=qd.mask, vocab=vocab)
+
+    k = 10
+    oracle = brute_force_topk(index, queries, k)
+    # ground truth: exact dot-product over the full catalog
+    exact = jnp.argsort(-(hidden @ item_emb.T), axis=1)[:, :k]
+
+    for mu in (1.0, 0.9):
+        out = asc_retrieve(index, queries, k=k, mu=mu, eta=1.0)
+        a = np.asarray(out.doc_ids)
+        o = np.asarray(oracle.doc_ids)
+        e = np.asarray(exact)
+        r_idx = np.mean([len(set(a[i]) & set(o[i])) / k
+                         for i in range(a.shape[0])])
+        r_dot = np.mean([len(set(a[i]) & set(e[i])) / k
+                         for i in range(a.shape[0])])
+        print(f"ASC mu={mu}: recall@{k} vs index-exact={r_idx:.2f}, "
+              f"vs dense dot-product={r_dot:.2f}, items scored="
+              f"{float(out.n_scored_docs.mean()):.0f}/{n_items}")
+
+    print("\nthe quantized sparse index approximates the dense scores "
+          "(vs-dot recall < 1 reflects quantization + top-coordinate "
+          "truncation); rank-safe mode is exact w.r.t. the index itself.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Launch-surface example: what a production multi-pod job submission
+looks like — resolve an (arch, shape) cell, build the mesh and shardings,
+and dry-run-compile it exactly as launch/train.py or launch/serve.py
+would on real hardware.
+
+    PYTHONPATH=src python examples/multipod_launch.py --arch olmo-1b \
+        --shape train_4k --mesh multi
+"""
+
+# The 512 placeholder devices MUST be configured before jax initializes.
+import os
+os.environ.setdefault(
+    "XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse  # noqa: E402
+
+from repro.launch.dryrun import run_cell  # noqa: E402
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo-1b")
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--mesh", default="multi", choices=["single", "multi"])
+    args = ap.parse_args()
+
+    rec = run_cell(args.arch, args.shape, args.mesh, save=False)
+    if rec["status"] != "ok":
+        raise SystemExit(f"compile failed: {rec['error']}")
+
+    mem = rec["memory"]
+    per_dev = (mem["argument_size_in_bytes"]
+               + mem["temp_size_in_bytes"]) / 2**30
+    coll = rec["collectives"]
+    print(f"\n{args.arch} x {args.shape} on the "
+          f"{'2x16x16 multi-pod' if args.mesh == 'multi' else '16x16'} "
+          f"mesh ({rec['n_devices']} chips):")
+    print(f"  compile time        {rec['compile_s']:.1f}s")
+    print(f"  memory/device       {per_dev:.2f} GiB "
+          f"(fits a 16 GiB v5e chip: {per_dev < 16})")
+    print(f"  HLO flops/device    {rec.get('flops_total', rec['flops']):.3e}")
+    print(f"  collective schedule:")
+    for kind, v in coll.items():
+        if v["count"]:
+            print(f"    {kind:20s} x{v['count']:<4d} "
+                  f"{v['bytes'] / 2**20:10.1f} MiB")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Histogram the biggest collectives in a compiled cell's HLO."""
+import os, sys, re, collections
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import jax
+from repro.distributed.sharding import use_rules
+from repro.launch.cells import build_cell
+from repro.launch.mesh import make_production_mesh
+from repro.launch.dryrun import _SHAPE_RE, _DTYPE_BYTES, _COLL_RE
+
+arch, shape, unroll = sys.argv[1], sys.argv[2], int(sys.argv[3])
+mesh = make_production_mesh(multi_pod=False)
+plan = build_cell(arch, shape, mesh, False, unroll=unroll)
+with mesh, use_rules(plan.rules):
+    c = jax.jit(plan.fn, in_shardings=plan.in_shardings,
+                out_shardings=plan.out_shardings,
+                donate_argnums=plan.donate_argnums).lower(*plan.args).compile()
+hist = collections.Counter()
+for line in c.as_text().splitlines():
+    m = _COLL_RE.search(line)
+    if not m or m.group(3) == "-done":
+        continue
+    shape_str, kind = m.group(1), m.group(2)
+    b = 0
+    for mm in _SHAPE_RE.finditer(shape_str):
+        dt, dims = mm.group(1), mm.group(2)
+        if dt not in _DTYPE_BYTES: continue
+        n = 1
+        for d in (dims.split(",") if dims else []):
+            n *= int(d)
+        b += n * _DTYPE_BYTES[dt]
+    hist[(kind, shape_str.strip())] += b
+for (kind, s), b in hist.most_common(14):
+    print(f"{b:14,d}  {kind:16s} {s[:90]}")

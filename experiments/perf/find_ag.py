@@ -1,0 +1,33 @@
+import os, sys, re
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import jax
+from repro.distributed.sharding import use_rules
+from repro.launch.cells import build_cell
+from repro.launch.mesh import make_production_mesh
+
+mesh = make_production_mesh(multi_pod=False)
+plan = build_cell("llama4-scout-17b-a16e", "train_4k", mesh, False, unroll=2)
+with mesh, use_rules(plan.rules):
+    c = jax.jit(plan.fn, in_shardings=plan.in_shardings,
+                out_shardings=plan.out_shardings,
+                donate_argnums=plan.donate_argnums).lower(*plan.args).compile()
+txt = c.as_text()
+lines = txt.splitlines()
+# find all-gather producing f32[16,4096,5120]
+defs = {}
+for i, ln in enumerate(lines):
+    m = re.match(r"\s*(%?[\w.-]+) = ", ln)
+    if m:
+        defs[m.group(1)] = i
+for i, ln in enumerate(lines):
+    if "all-gather" in ln and "f32[16,4096,5120]" in ln and "= f32[16,4096,5120]" in ln:
+        print(">>>", ln.strip()[:220])
+        # find operand name
+        mo = re.search(r"all-gather(?:-start)?\(([^),]+)", ln)
+        if mo:
+            op = mo.group(1).strip()
+            j = defs.get(op)
+            if j is not None:
+                print("  op:", lines[j].strip()[:220])
+                mo2 = re.search(r"\(([^),]+)", lines[j].split("=",1)[1])
+        print()

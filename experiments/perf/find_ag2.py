@@ -1,0 +1,19 @@
+import os, sys, re
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import jax
+from repro.distributed.sharding import use_rules
+from repro.launch.cells import build_cell
+from repro.launch.mesh import make_production_mesh
+
+mesh = make_production_mesh(multi_pod=False)
+plan = build_cell("llama4-scout-17b-a16e", "train_4k", mesh, False, unroll=2)
+with mesh, use_rules(plan.rules):
+    c = jax.jit(plan.fn, in_shardings=plan.in_shardings,
+                out_shardings=plan.out_shardings,
+                donate_argnums=plan.donate_argnums).lower(*plan.args).compile()
+lines = c.as_text().splitlines()
+targets = ["%all-gather.346", "%all-gather.362"]
+for t in targets:
+    for ln in lines:
+        if t in ln and f"{t} =" not in ln:
+            print(t, "consumer:", ln.strip()[:240]); print()

@@ -1,0 +1,17 @@
+import os, re
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import jax
+from repro.distributed.sharding import use_rules
+from repro.launch.cells import build_cell
+from repro.launch.mesh import make_production_mesh
+
+mesh = make_production_mesh(multi_pod=False)
+plan = build_cell("llama4-scout-17b-a16e", "train_4k", mesh, False, unroll=2)
+with mesh, use_rules(plan.rules):
+    c = jax.jit(plan.fn, in_shardings=plan.in_shardings,
+                out_shardings=plan.out_shardings,
+                donate_argnums=plan.donate_argnums).lower(*plan.args).compile()
+for ln in c.as_text().splitlines():
+    if "all-gather" in ln and ("f32[1,5120,8192]" in ln or "f32[5120,8192]" in ln) and "= f32" in ln:
+        m = re.search(r'op_name="([^"]+)"', ln)
+        print((m.group(1) if m else "?")[:200])

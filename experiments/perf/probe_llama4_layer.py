@@ -1,0 +1,60 @@
+"""Probe: per-layer fwd+bwd cost of the llama4 MoE layer vs variants.
+Isolates which component produces the pathological bytes-accessed."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=256"
+import jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+import dataclasses
+
+from repro.configs import get_arch
+from repro.distributed import sharding as sh
+from repro.models import transformer as tf, moe as moe_lib
+
+cfg = get_arch("llama4-scout-17b-a16e").config()
+mesh = jax.make_mesh((16, 16), ("data", "model"))
+rules = sh.lm_rules(mesh, training=True)
+B, S = 256, 4096
+
+def probe(name, fn, *args_shapes):
+    with mesh, sh.use_rules(rules):
+        c = jax.jit(fn).lower(*args_shapes).compile()
+        cost = c.cost_analysis()
+        print(f"{name:42s} flops/dev={cost.get('flops',0):.3e} "
+              f"bytes/dev={cost.get('bytes accessed',0):.3e}")
+
+key = jax.random.PRNGKey(0)
+lp_shapes = jax.eval_shape(lambda: tf._layer_init(key, cfg, jnp.float32))
+x_sh = jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16)
+
+# full layer fwd
+probe("layer fwd", lambda lp, x: tf._layer_fwd(lp, x, cfg)[0], lp_shapes, x_sh)
+# layer fwd+bwd
+def layer_loss(lp, x):
+    y, aux = tf._layer_fwd(lp, x, cfg)
+    return (y.astype(jnp.float32).sum() + aux)
+probe("layer fwd+bwd", lambda lp, x: jax.grad(layer_loss, argnums=(0,1))(lp, x), lp_shapes, x_sh)
+
+# MoE block alone fwd+bwd
+moe_shapes = jax.eval_shape(lambda: moe_lib.moe_init(key, cfg.d_model, cfg.moe, cfg.act, jnp.float32))
+def moe_loss(mp, x):
+    y, aux = moe_lib.apply_moe(mp, x, cfg.moe, cfg.act)
+    return y.astype(jnp.float32).sum() + aux
+probe("moe fwd", lambda mp, x: moe_lib.apply_moe(mp, x, cfg.moe, cfg.act)[0], moe_shapes, x_sh)
+probe("moe fwd+bwd", lambda mp, x: jax.grad(moe_loss, argnums=(0,1))(mp, x), moe_shapes, x_sh)
+
+# attention alone fwd+bwd
+from repro.models import attention as attn
+ap_shapes = jax.eval_shape(lambda: attn.attn_init(key, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, cfg.qk_norm, jnp.float32))
+def attn_loss(ap, x):
+    return attn.attend_train(ap, x, qk_norm=cfg.qk_norm, rope_theta=cfg.rope_theta, chunk=cfg.attn_chunk).astype(jnp.float32).sum()
+probe("attn fwd+bwd", lambda ap, x: jax.grad(attn_loss, argnums=(0,1))(ap, x), ap_shapes, x_sh)
+
+# lm head + CE alone (B,S,D)->loss
+head_sh = jax.ShapeDtypeStruct((cfg.d_model, cfg.vocab), jnp.float32)
+lab_sh = jax.ShapeDtypeStruct((B, S), jnp.int32)
+from repro.models.layers import cross_entropy_loss
+def head_loss(h, x, labels):
+    logits = x @ h.astype(jnp.bfloat16)
+    logits = sh.constrain(logits, "batch", "seq", "vocab")
+    return cross_entropy_loss(logits, labels, None)
+probe("lm-head+CE fwd+bwd", lambda h, x, l: jax.grad(head_loss, argnums=(0,1))(h, x, l), head_sh, x_sh, lab_sh)

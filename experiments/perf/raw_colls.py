@@ -1,0 +1,18 @@
+import os, sys
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import jax
+from repro.distributed.sharding import use_rules
+from repro.launch.cells import build_cell
+from repro.launch.mesh import make_production_mesh
+from repro.launch.dryrun import parse_collectives
+
+arch, shape = sys.argv[1], sys.argv[2]
+mesh = make_production_mesh(multi_pod=False)
+for u in (1, 2):
+    plan = build_cell(arch, shape, mesh, False, unroll=u)
+    with mesh, use_rules(plan.rules):
+        c = jax.jit(plan.fn, in_shardings=plan.in_shardings,
+                    out_shardings=plan.out_shardings,
+                    donate_argnums=plan.donate_argnums).lower(*plan.args).compile()
+    print(f"u={u}:", {k: (v['count'], f"{v['bytes']:.3e}")
+                      for k, v in parse_collectives(c.as_text()).items() if v['count']})

@@ -1,0 +1,33 @@
+"""Architecture registry: ``--arch <id>`` resolution."""
+
+from __future__ import annotations
+
+import importlib
+
+ARCHS = {
+    "stablelm-3b": "repro.configs.stablelm_3b",
+    "qwen3-14b": "repro.configs.qwen3_14b",
+    "olmo-1b": "repro.configs.olmo_1b",
+    "llama4-scout-17b-a16e": "repro.configs.llama4_scout",
+    "olmoe-1b-7b": "repro.configs.olmoe_1b_7b",
+    "meshgraphnet": "repro.configs.meshgraphnet",
+    "dlrm-mlperf": "repro.configs.dlrm_mlperf",
+    "din": "repro.configs.din",
+    "deepfm": "repro.configs.deepfm",
+    "bert4rec": "repro.configs.bert4rec",
+    "asc-splade": "repro.configs.asc_splade",
+}
+
+
+def get_arch(name: str):
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(ARCHS)}")
+    return importlib.import_module(ARCHS[name])
+
+
+def arch_kind(name: str) -> str:
+    return get_arch(name).KIND
+
+
+def list_archs() -> list[str]:
+    return sorted(ARCHS)

@@ -1,0 +1,17 @@
+"""ASC: approximate cluster-based sparse retrieval with segmented maximum
+term weights — core library (the paper's contribution)."""
+
+from repro.core.types import (ClusterIndex, QueryBatch, SparseDocs, TopK,
+                              PAD_TERM)
+from repro.core.bounds import cluster_bounds, segment_bounds_gather
+from repro.core.search import (SearchConfig, asc_retrieve, anytime_retrieve,
+                               brute_force_topk, retrieve)
+from repro.core.index import build_index
+from repro.core.clustering import lloyd_kmeans, dense_rep_projection
+
+__all__ = [
+    "ClusterIndex", "QueryBatch", "SparseDocs", "TopK", "PAD_TERM",
+    "cluster_bounds", "segment_bounds_gather",
+    "SearchConfig", "asc_retrieve", "anytime_retrieve", "brute_force_topk",
+    "retrieve", "build_index", "lloyd_kmeans", "dense_rep_projection",
+]

@@ -1,0 +1,86 @@
+"""Cluster / segment rank-score bound estimation (paper §3.1–3.2).
+
+Given a query Q and cluster index with segmented maximum term weights:
+
+    B_{i,j}        = sum_{t in Q} w_q(t) * max_{d in S_{i,j}} w_{t,d}
+    MaxSBound(C_i) = max_j B_{i,j}          (Formula 3)
+    AvgSBound(C_i) = (1/n) sum_j B_{i,j}    (Formula 4)
+    BoundSum(C_i)  = sum_{t in Q} max_{d in C_i} w_{t,d}   (Formula 2)
+
+``BoundSum`` equals ``B`` computed on the segment-collapsed table
+(max over segments), so one primitive serves every method.
+
+Two implementations of the same contraction:
+  * ``segment_bounds_gather`` — gather ``q_pad`` columns from the table and
+    dot with query weights. Work ~ m*n_seg*q_pad; best when q_pad << V.
+    This is the pure-jnp oracle.
+  * ``segment_bounds_gemm``   — scatter the query to a dense (V,) map and
+    run ``(m*n_seg, V) @ (V, n_q)`` as one quantized GEMM; the Pallas kernel
+    in ``kernels/segment_bound`` implements exactly this contraction on the
+    MXU (int8 feed, fused dequant) and is the serving hot path for query
+    batches.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import ClusterIndex, QueryBatch
+
+
+def segment_bounds_gather(index: ClusterIndex,
+                          queries: QueryBatch) -> jax.Array:
+    """(n_q, m, n_seg) float32 segment bounds B[q, i, j]."""
+    qt = jnp.where(queries.mask, queries.tids, index.vocab)      # (n_q, qp)
+    qw = jnp.where(queries.mask, queries.tw, 0.0)
+    # pad the vocab axis with a zero slot so PAD_TERM gathers are no-ops
+    table = jnp.pad(index.seg_max, ((0, 0), (0, 0), (0, 1)))     # (m,n,V+1)
+    cols = table[:, :, qt]                                       # (m,n,n_q,qp)
+    b = jnp.einsum("mnqt,qt->qmn", cols.astype(jnp.float32), qw)
+    return b * index.scale
+
+
+def segment_bounds_gemm(index: ClusterIndex, queries: QueryBatch,
+                        use_kernel: bool = False) -> jax.Array:
+    """Same contraction as one dense GEMM over the vocab axis."""
+    qmap = queries.dense_map()[:, : index.vocab]                 # (n_q, V)
+    m, n_seg, V = index.seg_max.shape
+    table = index.seg_max.reshape(m * n_seg, V)
+    if use_kernel:
+        from repro.kernels.segment_bound import ops as sb_ops
+        b = sb_ops.segment_bound_gemm(table, qmap, index.scale)
+    else:
+        b = jnp.einsum("sv,qv->qs", table.astype(jnp.float32), qmap)
+        b = b * index.scale
+    return b.reshape(queries.n_queries, m, n_seg)
+
+
+def cluster_bounds(index: ClusterIndex, queries: QueryBatch,
+                   impl: str = "gather",
+                   use_kernel: bool = False) -> dict[str, jax.Array]:
+    """All bound statistics needed by any method, each (n_q, m)."""
+    if impl == "gather":
+        b = segment_bounds_gather(index, queries)
+    elif impl == "gemm":
+        b = segment_bounds_gemm(index, queries, use_kernel=use_kernel)
+    else:
+        raise ValueError(f"unknown bounds impl {impl!r}")
+    max_s = b.max(axis=-1)
+    avg_s = b.mean(axis=-1)
+    # BoundSum: same contraction on the segment-collapsed table.
+    collapsed = ClusterIndex(
+        doc_tids=index.doc_tids, doc_tw=index.doc_tw,
+        doc_mask=index.doc_mask, doc_ids=index.doc_ids,
+        doc_seg=index.doc_seg,
+        seg_max=index.seg_max.max(axis=1, keepdims=True),
+        scale=index.scale, cluster_ndocs=index.cluster_ndocs,
+        vocab=index.vocab, n_seg=1,
+    )
+    if impl == "gather":
+        bound_sum = segment_bounds_gather(collapsed, queries)[..., 0]
+    else:
+        bound_sum = segment_bounds_gemm(collapsed, queries,
+                                        use_kernel=use_kernel)[..., 0]
+    return {"segment": b, "max_s": max_s, "avg_s": avg_s,
+            "bound_sum": bound_sum}

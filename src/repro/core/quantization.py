@@ -1,0 +1,30 @@
+"""Uint8 term-weight quantization.
+
+The paper stores 1-byte quantized segment maxima ("sufficiently accurate to
+guide pruning"). We go one step further and quantize the *document* weights
+themselves, then derive segment maxima from the quantized weights, so that
+``seg_max[i, j, t] >= w_u8(t, d)`` holds *exactly* for every doc in segment
+(i, j). All rank-safety propositions then hold exactly in quantized score
+space (DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def weight_scale(tw: jax.Array, mask: jax.Array) -> jax.Array:
+    """Global scale so the max live weight maps to 255."""
+    mx = jnp.max(jnp.where(mask, tw, 0.0))
+    return jnp.maximum(mx, 1e-6) / 255.0
+
+
+def quantize(tw: jax.Array, scale: jax.Array) -> jax.Array:
+    """Round-to-nearest uint8 quantization of nonnegative weights."""
+    q = jnp.clip(jnp.round(tw / scale), 0, 255)
+    return q.astype(jnp.uint8)
+
+
+def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale

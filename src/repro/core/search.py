@@ -1,0 +1,255 @@
+"""Top-k retrieval: ASC, Anytime Ranking, Anytime*, and the rank-safe oracle.
+
+One batched-visitation engine expresses all methods (DESIGN.md §2):
+
+  1. bounds for all clusters are computed up front (one quantized GEMM /
+     gather for the whole query batch — the Pallas hot path);
+  2. clusters are sorted by the method's ordering key (MaxSBound for ASC,
+     BoundSum for Anytime/Anytime*);
+  3. a ``lax.while_loop`` walks the sorted clusters in groups of
+     ``group_size``; per group the method's (mu, eta) pruning test masks
+     clusters, segment-level pruning masks segments, survivors are scored
+     densely (gather from the VMEM query map), and the running top-k /
+     threshold theta is updated;
+  4. the loop exits as soon as the next group's ordering key can no longer
+     beat ``theta / exit_div`` — at that point *every* remaining cluster is
+     provably pruned (keys are sorted non-increasing), which is the batched
+     analogue of the paper's sequential early termination.
+
+Pruning rules (theta = current top-k threshold):
+  ASC       : cluster pruned iff MaxS <= theta/mu  AND  AvgS <= theta/eta;
+              segment (i,j) pruned iff B_ij <= theta/eta.
+  Anytime*  : cluster pruned iff BoundSum <= theta/mu (doc level ditto,
+              expressed here as the n_seg=1 segment rule).
+  Anytime   : Anytime* with mu = 1 (rank-safe), optional cluster budget —
+              the TPU analogue of the paper's time budget is a bound on the
+              number of clusters visited (visitation order is identical, so
+              the early-termination semantics match).
+
+theta only ever grows (only true scores enter the heap), so the paper's
+Propositions 1-4 apply unchanged; batched visitation updates theta once per
+group, i.e. prunes *no more* than the sequential algorithm — approximation
+guarantees are preserved (tests/test_rank_safety.py checks them).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bounds import cluster_bounds
+from repro.core.types import ClusterIndex, QueryBatch, TopK
+
+NEG = jnp.float32(jnp.finfo(jnp.float32).min)
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchConfig:
+    k: int = 10
+    mu: float = 1.0
+    eta: float = 1.0
+    method: str = "asc"              # asc | anytime | anytime_star
+    group_size: int = 8
+    cluster_budget: int | None = None  # visit at most this many clusters
+    bounds_impl: str = "gather"        # gather | gemm
+    use_kernel: bool = False           # pallas kernels where available
+    doc_prune: bool = True             # segment-level document pruning
+
+    def __post_init__(self):
+        if not (0.0 < self.mu <= self.eta <= 1.0):
+            raise ValueError(
+                f"need 0 < mu <= eta <= 1, got mu={self.mu} eta={self.eta}")
+        if self.method not in ("asc", "anytime", "anytime_star"):
+            raise ValueError(f"unknown method {self.method!r}")
+
+
+def score_docs_ref(doc_tids: jax.Array, doc_tw: jax.Array, qmap: jax.Array,
+                   scale: jax.Array) -> jax.Array:
+    """RankScore for padded forward-layout docs.
+
+    doc_tids: (..., t_pad) int32 in [0, V]; V is the zero landing slot.
+    doc_tw:   (..., t_pad) uint8 quantized weights.
+    qmap:     (V + 1,) float32 dense query map (qmap[V] == 0).
+    """
+    gathered = qmap[doc_tids]                               # (..., t_pad)
+    return jnp.einsum("...t,...t->...", gathered,
+                      doc_tw.astype(jnp.float32)) * scale
+
+
+def _score_docs(index: ClusterIndex, cluster_ids: jax.Array,
+                qmap: jax.Array, cfg: SearchConfig) -> jax.Array:
+    """(G, d_pad) scores for the given clusters (one query)."""
+    tids = index.doc_tids[cluster_ids]                      # (G, dp, tp)
+    tw = index.doc_tw[cluster_ids]
+    if cfg.use_kernel:
+        from repro.kernels.score_docs import ops as sd_ops
+        return sd_ops.score_docs(tids, tw, qmap, index.scale)
+    return score_docs_ref(tids, tw, qmap, index.scale)
+
+
+def brute_force_topk(index: ClusterIndex, queries: QueryBatch,
+                     k: int) -> TopK:
+    """Rank-safe oracle: score every live document (the MaxScore stand-in —
+    identical result set, exhaustive execution)."""
+    qmaps = queries.dense_map()                              # (n_q, V+1)
+
+    def one(qmap):
+        scores = score_docs_ref(index.doc_tids, index.doc_tw, qmap,
+                                index.scale)                 # (m, d_pad)
+        scores = jnp.where(index.doc_mask, scores, NEG)
+        flat = scores.reshape(-1)
+        top, pos = jax.lax.top_k(flat, k)
+        ids = index.doc_ids.reshape(-1)[pos]
+        return top, jnp.where(top > NEG, ids, -1)
+
+    scores, ids = jax.vmap(one)(qmaps)
+    n_docs = index.doc_mask.sum().astype(jnp.int32)
+    nq = queries.n_queries
+    return TopK(
+        doc_ids=ids, scores=scores,
+        n_scored_docs=jnp.full((nq,), n_docs),
+        n_scored_clusters=jnp.full((nq,), index.m, jnp.int32),
+        n_scored_segments=jnp.full((nq,), index.m * index.n_seg, jnp.int32),
+    )
+
+
+def _search_one_query(index: ClusterIndex, qmap: jax.Array,
+                      seg_b: jax.Array, max_s: jax.Array, avg_s: jax.Array,
+                      order_key: jax.Array, cfg: SearchConfig) -> tuple:
+    """The grouped-visitation loop for a single query.
+
+    seg_b (m, n_seg), max_s/avg_s/order_key (m,). Returns (ids, scores,
+    counters). For anytime methods callers pass the collapsed bounds
+    (seg_b == bound_sum[:, None] with n_seg picked up from the array).
+    """
+    m = index.m
+    G = cfg.group_size
+    n_groups = -(-m // G)
+    m_padded = n_groups * G
+    k = cfg.k
+    n_seg_eff = seg_b.shape[1]
+
+    order = jnp.argsort(-order_key)                          # (m,)
+    order = jnp.pad(order, (0, m_padded - m))
+    sorted_key = jnp.pad(jnp.sort(-order_key) * -1.0,
+                         (0, m_padded - m), constant_values=NEG)
+    # work-based budget (the paper's time-budget semantics): only clusters
+    # actually *scored* consume budget — clusters skipped by the (mu, eta)
+    # test are free, so tighter pruning stretches the same budget deeper
+    # into the visitation order (Table 7's ASC+budget > Anytime+budget).
+    budget = (jnp.int32(cfg.cluster_budget)
+              if cfg.cluster_budget is not None else jnp.int32(m + 1))
+
+    mu = jnp.float32(cfg.mu)
+    eta = jnp.float32(cfg.eta)
+    # exit divisor: remaining clusters are all pruned once the sorted key
+    # drops to theta/exit_div (see module docstring / Prop 2 analysis).
+    exit_div = eta if cfg.method == "asc" else mu
+
+    def cond(state):
+        g, done, *_ = state
+        return jnp.logical_and(g < n_groups, jnp.logical_not(done))
+
+    def body(state):
+        g, done, top_scores, top_ids, n_docs, n_clusters, n_segments = state
+        theta = top_scores[k - 1]
+        pos = g * G
+        cids = jax.lax.dynamic_slice(order, (pos,), (G,))     # (G,)
+        gkey = jax.lax.dynamic_slice(sorted_key, (pos,), (G,))
+        live = (jnp.arange(G) + pos < m) & (gkey > NEG)
+
+        b = seg_b[cids]                                       # (G, n_seg)
+        if cfg.method == "asc":
+            pruned = (max_s[cids] <= theta / mu) & (avg_s[cids] <= theta / eta)
+        else:
+            pruned = gkey <= theta / mu
+        admit = live & jnp.logical_not(pruned)                # (G,)
+        # spend budget only on admitted clusters, in visitation order
+        admit = admit & (n_clusters + jnp.cumsum(admit.astype(jnp.int32))
+                         <= budget)
+
+        # segment-level document pruning: B_ij is a valid upper bound for
+        # every doc in segment j (Prop 1 proof), over-estimated by eta (ASC)
+        # / mu (Anytime*).
+        if cfg.doc_prune:
+            seg_admit = b > theta / (eta if cfg.method == "asc" else mu)
+        else:
+            seg_admit = jnp.ones_like(b, dtype=bool)
+        seg_admit = seg_admit & admit[:, None]                # (G, n_seg)
+
+        scores = _score_docs(index, cids, qmap, cfg)          # (G, d_pad)
+        dseg = index.doc_seg[cids]                            # (G, d_pad)
+        doc_admit = (index.doc_mask[cids]
+                     & jnp.take_along_axis(
+                         seg_admit, dseg % n_seg_eff, axis=1))
+        scores = jnp.where(doc_admit, scores, NEG)
+
+        cand_scores = jnp.concatenate([top_scores, scores.reshape(-1)])
+        cand_ids = jnp.concatenate([top_ids,
+                                    index.doc_ids[cids].reshape(-1)])
+        top_scores, pos_k = jax.lax.top_k(cand_scores, k)
+        top_ids = cand_ids[pos_k]
+
+        n_docs += doc_admit.sum().astype(jnp.int32)
+        n_clusters += admit.sum().astype(jnp.int32)
+        n_segments += seg_admit.sum().astype(jnp.int32)
+
+        theta_new = top_scores[k - 1]
+        nxt = jnp.minimum((g + 1) * G, m_padded - 1)
+        done = sorted_key[nxt] <= theta_new / exit_div
+        # budget exhaustion also terminates
+        done = jnp.logical_or(done, n_clusters >= budget)
+        return (g + 1, done, top_scores, top_ids,
+                n_docs, n_clusters, n_segments)
+
+    init = (jnp.int32(0), jnp.array(False),
+            jnp.full((k,), NEG), jnp.full((k,), -1, jnp.int32),
+            jnp.int32(0), jnp.int32(0), jnp.int32(0))
+    (_, _, top_scores, top_ids, n_docs, n_clusters, n_segments) = (
+        jax.lax.while_loop(cond, body, init))
+    top_ids = jnp.where(top_scores > NEG, top_ids, -1)
+    return top_ids, top_scores, n_docs, n_clusters, n_segments
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def retrieve(index: ClusterIndex, queries: QueryBatch,
+             cfg: SearchConfig) -> TopK:
+    """Batched cluster-based retrieval with the configured method."""
+    stats = cluster_bounds(index, queries, impl=cfg.bounds_impl,
+                           use_kernel=cfg.use_kernel)
+    qmaps = queries.dense_map()                               # (n_q, V+1)
+
+    if cfg.method == "asc":
+        seg_b = stats["segment"]
+        max_s, avg_s = stats["max_s"], stats["avg_s"]
+        order_key = stats["max_s"]
+    else:
+        seg_b = stats["bound_sum"][..., None]                 # (n_q, m, 1)
+        max_s = avg_s = stats["bound_sum"]
+        order_key = stats["bound_sum"]
+
+    fn = jax.vmap(
+        lambda qmap, b, mx, av, key: _search_one_query(
+            index, qmap, b, mx, av, key, cfg))
+    ids, scores, n_docs, n_clusters, n_segments = fn(
+        qmaps, seg_b, max_s, avg_s, order_key)
+    return TopK(doc_ids=ids, scores=scores, n_scored_docs=n_docs,
+                n_scored_clusters=n_clusters, n_scored_segments=n_segments)
+
+
+def asc_retrieve(index: ClusterIndex, queries: QueryBatch, k: int,
+                 mu: float = 1.0, eta: float = 1.0, **kw) -> TopK:
+    return retrieve(index, queries,
+                    SearchConfig(k=k, mu=mu, eta=eta, method="asc", **kw))
+
+
+def anytime_retrieve(index: ClusterIndex, queries: QueryBatch, k: int,
+                     mu: float = 1.0, cluster_budget: int | None = None,
+                     **kw) -> TopK:
+    method = "anytime" if mu == 1.0 else "anytime_star"
+    return retrieve(index, queries,
+                    SearchConfig(k=k, mu=mu, eta=mu, method=method,
+                                 cluster_budget=cluster_budget, **kw))

@@ -1,0 +1,212 @@
+"""Core data types for the ASC cluster-skipping index.
+
+Everything is a registered-dataclass pytree of *padded dense arrays* so the
+whole index is shardable with NamedSharding and usable inside jit. Static
+geometry (pad sizes, vocab) lives in metadata fields so jit re-traces only
+when the index geometry changes, never per query.
+
+Layout choices (see DESIGN.md §2):
+  * forward (doc-major) layout inside clusters: ``doc_tids``/``doc_tw`` give
+    each document's own nonzero terms — scoring is a gather from a dense
+    query map + dot, the TPU-idiomatic replacement for posting-list
+    traversal;
+  * a dense uint8 segment-maximum table ``seg_max`` of shape
+    ``(m, n_seg, vocab)`` — bound estimation for a batch of queries becomes
+    one int8 GEMM (kernels/segment_bound);
+  * all weights quantized to uint8 with one global scale; segment maxima are
+    computed *after* quantization so every rank-safety proposition holds
+    exactly in quantized score space.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+# Sentinel term id used to pad ``doc_tids`` rows. Points at a dedicated
+# zero-weight slot (index ``vocab``) in every dense query map.
+PAD_TERM = -1
+
+
+def _register(cls, data_fields, meta_fields):
+    return jax.tree_util.register_dataclass(
+        cls, data_fields=list(data_fields), meta_fields=list(meta_fields)
+    )
+
+
+@partial(
+    _register,
+    data_fields=("tids", "tw", "mask"),
+    meta_fields=("vocab",),
+)
+@dataclasses.dataclass(frozen=True)
+class SparseDocs:
+    """A batch of sparse documents in padded COO-per-row form.
+
+    tids: (n_docs, t_pad) int32, PAD_TERM-padded term ids.
+    tw:   (n_docs, t_pad) float32 term weights (0 at padding).
+    mask: (n_docs, t_pad) bool validity of each slot.
+    """
+
+    tids: jax.Array
+    tw: jax.Array
+    mask: jax.Array
+    vocab: int
+
+    @property
+    def n_docs(self) -> int:
+        return self.tids.shape[0]
+
+    @property
+    def t_pad(self) -> int:
+        return self.tids.shape[1]
+
+    def densify(self) -> jax.Array:
+        """(n_docs, vocab) dense matrix — test/oracle use only."""
+        tids = jnp.where(self.mask, self.tids, self.vocab)
+        dense = jnp.zeros((self.n_docs, self.vocab + 1), self.tw.dtype)
+        dense = dense.at[jnp.arange(self.n_docs)[:, None], tids].max(
+            jnp.where(self.mask, self.tw, 0.0)
+        )
+        return dense[:, : self.vocab]
+
+
+@partial(
+    _register,
+    data_fields=("tids", "tw", "mask"),
+    meta_fields=("vocab",),
+)
+@dataclasses.dataclass(frozen=True)
+class QueryBatch:
+    """A batch of sparse queries.
+
+    tids: (n_q, q_pad) int32 term ids (PAD_TERM padded).
+    tw:   (n_q, q_pad) float32 query term weights (0 at padding).
+    mask: (n_q, q_pad) bool.
+    """
+
+    tids: jax.Array
+    tw: jax.Array
+    mask: jax.Array
+    vocab: int
+
+    @property
+    def n_queries(self) -> int:
+        return self.tids.shape[0]
+
+    @property
+    def q_pad(self) -> int:
+        return self.tids.shape[1]
+
+    def dense_map(self) -> jax.Array:
+        """(n_q, vocab + 1) dense query maps; the trailing slot is the
+        zero-weight landing pad for PAD_TERM gathers."""
+        tids = jnp.where(self.mask, self.tids, self.vocab)
+        out = jnp.zeros((self.n_queries, self.vocab + 1), jnp.float32)
+        out = out.at[jnp.arange(self.n_queries)[:, None], tids].add(
+            jnp.where(self.mask, self.tw, 0.0)
+        )
+        return out.at[:, self.vocab].set(0.0)
+
+
+@partial(
+    _register,
+    data_fields=(
+        "doc_tids",
+        "doc_tw",
+        "doc_mask",
+        "doc_ids",
+        "doc_seg",
+        "seg_max",
+        "scale",
+        "cluster_ndocs",
+    ),
+    meta_fields=("vocab", "n_seg"),
+)
+@dataclasses.dataclass(frozen=True)
+class ClusterIndex:
+    """Cluster-skipping forward index with segmented maximum term weights.
+
+    m = number of clusters, d_pad = padded docs/cluster, t_pad = padded
+    terms/doc, n_seg = segments per cluster, V = vocab.
+
+    doc_tids: (m, d_pad, t_pad) uint16 (int32 if vocab >= 2^16)
+              term ids (== vocab at padding).
+    doc_tw:   (m, d_pad, t_pad) uint8   quantized term weights.
+    doc_mask: (m, d_pad) bool           per-document validity.
+    doc_ids:  (m, d_pad) int32          global document ids (-1 padding).
+    doc_seg:  (m, d_pad) int32          segment id of each doc in [0, n_seg).
+    seg_max:  (m, n_seg, V) uint8       segmented maximum term weights.
+    scale:    () float32                w_fp = w_u8 * scale.
+    cluster_ndocs: (m,) int32           live docs per cluster.
+    """
+
+    doc_tids: jax.Array
+    doc_tw: jax.Array
+    doc_mask: jax.Array
+    doc_ids: jax.Array
+    doc_seg: jax.Array
+    seg_max: jax.Array
+    scale: jax.Array
+    cluster_ndocs: jax.Array
+    vocab: int
+    n_seg: int
+
+    @property
+    def m(self) -> int:
+        return self.doc_tids.shape[0]
+
+    @property
+    def d_pad(self) -> int:
+        return self.doc_tids.shape[1]
+
+    @property
+    def t_pad(self) -> int:
+        return self.doc_tids.shape[2]
+
+    @property
+    def n_docs(self) -> jax.Array:
+        return self.cluster_ndocs.sum()
+
+    def nbytes(self) -> int:
+        return sum(
+            x.size * x.dtype.itemsize
+            for x in (self.doc_tids, self.doc_tw, self.doc_mask,
+                      self.doc_ids, self.doc_seg, self.seg_max)
+        )
+
+
+@partial(
+    _register,
+    data_fields=("doc_ids", "scores", "n_scored_docs", "n_scored_clusters",
+                 "n_scored_segments"),
+    meta_fields=(),
+)
+@dataclasses.dataclass(frozen=True)
+class TopK:
+    """Top-k result plus work counters (the TPU analogue of latency).
+
+    doc_ids: (n_q, k) int32, score-descending; -1 where fewer than k hits.
+    scores:  (n_q, k) float32.
+    n_scored_docs / n_scored_clusters / n_scored_segments: (n_q,) int32 —
+    how much work the pruning actually admitted; the efficiency metric every
+    benchmark reports alongside wall-clock.
+    """
+
+    doc_ids: jax.Array
+    scores: jax.Array
+    n_scored_docs: jax.Array
+    n_scored_clusters: jax.Array
+    n_scored_segments: jax.Array
+
+
+def tree_bytes(tree: Any) -> int:
+    return sum(
+        x.size * x.dtype.itemsize
+        for x in jax.tree_util.tree_leaves(tree)
+        if hasattr(x, "dtype")
+    )

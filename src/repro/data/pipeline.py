@@ -1,0 +1,241 @@
+"""Deterministic synthetic batch generators for every arch family.
+
+Every generator is a pure function of (spec, step) — the fault-tolerance
+contract (DESIGN.md §4): any host can (re)produce batch ``step`` after a
+restart or elastic re-mesh with no pipeline state to checkpoint beyond the
+step counter itself.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _key(seed: int, step: int) -> jax.Array:
+    return jax.random.fold_in(jax.random.PRNGKey(seed), step)
+
+
+# ---------------------------------------------------------------------------
+# LM token batches (Zipfian unigram stream with induced bigram structure so
+# the loss has signal to descend)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LMDataSpec:
+    vocab: int
+    seq_len: int
+    batch: int
+    seed: int = 0
+
+
+def lm_batch(spec: LMDataSpec, step: int) -> dict:
+    key = _key(spec.seed, step)
+    k1, k2 = jax.random.split(key)
+    # markov-ish stream: next token = f(prev) + noise -> learnable structure
+    base = jax.random.randint(
+        k1, (spec.batch, spec.seq_len + 1), 0, spec.vocab)
+    shifted = (base[:, :-1] * 31 + 7) % spec.vocab
+    use_rule = jax.random.bernoulli(k2, 0.5,
+                                    (spec.batch, spec.seq_len))
+    toks = jnp.where(use_rule, shifted, base[:, 1:])
+    tokens = jnp.concatenate([base[:, :1], toks], axis=1)
+    return {"tokens": tokens[:, :-1], "labels": tokens[:, 1:],
+            "mask": jnp.ones((spec.batch, spec.seq_len - 1), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# GNN graphs + neighbour sampler
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class GraphSpec:
+    n_nodes: int
+    n_edges: int
+    d_node: int
+    d_edge: int
+    node_out: int
+    seed: int = 0
+
+
+def random_graph(spec: GraphSpec, step: int = 0) -> dict:
+    """Padded random graph with features and regression targets."""
+    key = _key(spec.seed, step)
+    ks = jax.random.split(key, 5)
+    senders = jax.random.randint(ks[0], (spec.n_edges,), 0, spec.n_nodes)
+    receivers = jax.random.randint(ks[1], (spec.n_edges,), 0, spec.n_nodes)
+    return {
+        "node_feat": jax.random.normal(ks[2], (spec.n_nodes, spec.d_node)),
+        "edge_feat": jax.random.normal(ks[3], (spec.n_edges, spec.d_edge)),
+        "senders": senders,
+        "receivers": receivers,
+        "node_mask": jnp.ones((spec.n_nodes,), bool),
+        "edge_mask": jnp.ones((spec.n_edges,), bool),
+        "target": jax.random.normal(ks[4], (spec.n_nodes, spec.node_out)),
+    }
+
+
+def disjoint_union(graphs: list[dict]) -> dict:
+    """Flatten batched small graphs (the molecule shape) into one graph."""
+    out = {}
+    node_off, parts = 0, {k: [] for k in graphs[0]}
+    for g in graphs:
+        n = g["node_feat"].shape[0]
+        for k, v in g.items():
+            if k in ("senders", "receivers"):
+                parts[k].append(v + node_off)
+            else:
+                parts[k].append(v)
+        node_off += n
+    for k, vs in parts.items():
+        out[k] = jnp.concatenate(vs, axis=0)
+    return out
+
+
+class NeighborSampler:
+    """Layer-wise fanout sampling over a CSR adjacency (GraphSAGE style) —
+    the real sampler the ``minibatch_lg`` shape requires.
+
+    Produces fixed-shape padded subgraphs: seeds + fanout[0] 1-hop +
+    fanout[0]*fanout[1] 2-hop neighbour slots; missing neighbours are
+    masked edges. Deterministic in (seed, step).
+    """
+
+    def __init__(self, indptr: np.ndarray, indices: np.ndarray,
+                 fanout: tuple[int, ...] = (15, 10), seed: int = 0):
+        self.indptr = indptr
+        self.indices = indices
+        self.fanout = fanout
+        self.seed = seed
+        self.n_nodes = len(indptr) - 1
+
+    @staticmethod
+    def random_csr(n_nodes: int, avg_degree: int,
+                   seed: int = 0) -> tuple[np.ndarray, np.ndarray]:
+        rng = np.random.default_rng(seed)
+        deg = rng.poisson(avg_degree, n_nodes).astype(np.int64)
+        indptr = np.concatenate([[0], np.cumsum(deg)])
+        indices = rng.integers(0, n_nodes, indptr[-1])
+        return indptr, indices.astype(np.int64)
+
+    def sample(self, batch_nodes: int, step: int) -> dict[str, np.ndarray]:
+        rng = np.random.default_rng((self.seed, step))
+        seeds = rng.integers(0, self.n_nodes, batch_nodes)
+        # frontier expansion with per-layer fanout
+        all_nodes = [seeds]
+        send_list, recv_list, emask_list = [], [], []
+        node_of_slot = seeds
+        slot_off = 0
+        next_off = batch_nodes
+        for f in self.fanout:
+            n_src = len(node_of_slot)
+            nbr = np.zeros((n_src, f), np.int64)
+            ok = np.zeros((n_src, f), bool)
+            for i, u in enumerate(node_of_slot):
+                lo, hi = self.indptr[u], self.indptr[u + 1]
+                d = hi - lo
+                if d == 0:
+                    continue
+                pick = rng.integers(lo, hi, f)
+                nbr[i] = self.indices[pick]
+                ok[i] = True
+            # new slots for sampled neighbours
+            send = np.arange(next_off, next_off + n_src * f)
+            recv = np.repeat(np.arange(slot_off, slot_off + n_src), f)
+            send_list.append(send)
+            recv_list.append(recv)
+            emask_list.append(ok.reshape(-1))
+            all_nodes.append(nbr.reshape(-1))
+            slot_off = next_off
+            next_off += n_src * f
+            node_of_slot = nbr.reshape(-1)
+        return {
+            "node_ids": np.concatenate(all_nodes),
+            "senders": np.concatenate(send_list),
+            "receivers": np.concatenate(recv_list),
+            "edge_mask": np.concatenate(emask_list),
+            "seed_nodes": seeds,
+        }
+
+
+def sampled_subgraph_batch(sampler: NeighborSampler, batch_nodes: int,
+                           d_node: int, d_edge: int, node_out: int,
+                           step: int) -> dict:
+    """Sampler output -> padded model-ready graph with synthetic feats."""
+    sub = sampler.sample(batch_nodes, step)
+    n = len(sub["node_ids"])
+    e = len(sub["senders"])
+    key = _key(7, step)
+    ks = jax.random.split(key, 3)
+    return {
+        "node_feat": jax.random.normal(ks[0], (n, d_node)),
+        "edge_feat": jax.random.normal(ks[1], (e, d_edge)),
+        "senders": jnp.asarray(sub["senders"]),
+        "receivers": jnp.asarray(sub["receivers"]),
+        "node_mask": jnp.ones((n,), bool),
+        "edge_mask": jnp.asarray(sub["edge_mask"]),
+        "target": jax.random.normal(ks[2], (n, node_out)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# RecSys batches
+# ---------------------------------------------------------------------------
+
+def dlrm_batch(cfg, batch: int, step: int, seed: int = 0) -> dict:
+    key = _key(seed, step)
+    ks = jax.random.split(key, 3)
+    return {
+        "dense": jax.random.normal(ks[0], (batch, cfg.n_dense)),
+        "sparse": jax.random.randint(ks[1], (batch, cfg.n_sparse), 0,
+                                     cfg.vocab_per_table),
+        "labels": jax.random.bernoulli(ks[2], 0.3, (batch,)).astype(
+            jnp.float32),
+    }
+
+
+def din_batch(cfg, batch: int, step: int, seed: int = 0) -> dict:
+    key = _key(seed, step)
+    ks = jax.random.split(key, 6)
+    L = cfg.seq_len
+    lens = jax.random.randint(ks[4], (batch, 1), 1, L + 1)
+    return {
+        "hist_items": jax.random.randint(ks[0], (batch, L), 0, cfg.n_items),
+        "hist_cates": jax.random.randint(ks[1], (batch, L), 0, cfg.n_cates),
+        "hist_mask": jnp.arange(L)[None, :] < lens,
+        "target_item": jax.random.randint(ks[2], (batch,), 0, cfg.n_items),
+        "target_cate": jax.random.randint(ks[3], (batch,), 0, cfg.n_cates),
+        "labels": jax.random.bernoulli(ks[5], 0.5, (batch,)).astype(
+            jnp.float32),
+    }
+
+
+def deepfm_batch(cfg, batch: int, step: int, seed: int = 0) -> dict:
+    key = _key(seed, step)
+    k1, k2 = jax.random.split(key)
+    return {
+        "fields": jax.random.randint(k1, (batch, cfg.n_fields), 0,
+                                     cfg.vocab_per_field),
+        "labels": jax.random.bernoulli(k2, 0.3, (batch,)).astype(
+            jnp.float32),
+    }
+
+
+def bert4rec_batch(cfg, batch: int, step: int, seed: int = 0) -> dict:
+    key = _key(seed, step)
+    ks = jax.random.split(key, 4)
+    L = cfg.seq_len
+    items = jax.random.randint(ks[0], (batch, L), 0, cfg.n_items)
+    mask_pos = jax.random.bernoulli(ks[1], 0.2, (batch, L))
+    masked = jnp.where(mask_pos, cfg.n_items, items)   # [MASK] id
+    return {
+        "items": masked,
+        "mask": jnp.ones((batch, L), bool),
+        "labels": items,
+        "label_mask": mask_pos,
+        "negatives": jax.random.randint(ks[2], (cfg.n_negatives,), 0,
+                                        cfg.n_items),
+    }

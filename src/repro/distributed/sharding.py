@@ -1,0 +1,252 @@
+"""Logical-axis sharding rules (MaxText-style) + ambient rule context.
+
+Models annotate activations/params with *logical* axis names
+(``constrain(x, "batch", "seq", "embed")``); a :class:`ShardingRules` table
+maps logical names to physical mesh axes. Rules are installed with a
+context manager so model code never threads mesh plumbing; with no rules
+installed every annotation is a no-op (CPU unit tests).
+
+The uniform LM recipe (DESIGN.md §4) avoids every head-divisibility trap
+(qwen3/llama4 have 40 q / 8 kv heads — not divisible by a 16-way model
+axis): attention is *context-parallel* (query-sequence sharded over
+'model'), FFN/vocab/experts are tensor-parallel over 'model', batch and
+FSDP weight sharding ride ('pod', 'data').
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Mapping, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axes = str | tuple[str, ...] | None
+
+_state = threading.local()
+
+
+class ShardingRules:
+    def __init__(self, mesh: Mesh | None, table: Mapping[str, Axes]):
+        self.mesh = mesh
+        self.table = dict(table)
+
+    def spec(self, *logical: str | None) -> P:
+        mesh_axes = (set(self.mesh.axis_names)
+                     if self.mesh is not None else None)
+        phys: list[Axes] = []
+        used: set[str] = set()
+        for name in logical:
+            ax = self.table.get(name) if name is not None else None
+            # drop axes absent from the mesh (e.g. 'pod' on a single pod);
+            # a mesh axis may appear only once in a spec — later wins None
+            if isinstance(ax, tuple):
+                ax = tuple(a for a in ax
+                           if (mesh_axes is None or a in mesh_axes)
+                           and a not in used) or None
+                if ax is not None:
+                    used.update(ax)
+            elif ax is not None:
+                if (mesh_axes is not None and ax not in mesh_axes) \
+                        or ax in used:
+                    ax = None
+                else:
+                    used.add(ax)
+            phys.append(ax)
+        return P(*phys)
+
+    def sharding(self, *logical: str | None) -> NamedSharding:
+        assert self.mesh is not None
+        return NamedSharding(self.mesh, self.spec(*logical))
+
+
+@contextlib.contextmanager
+def use_rules(rules: ShardingRules | None):
+    prev = getattr(_state, "rules", None)
+    _state.rules = rules
+    try:
+        yield rules
+    finally:
+        _state.rules = prev
+
+
+def current_rules() -> ShardingRules | None:
+    return getattr(_state, "rules", None)
+
+
+def constrain(x: jax.Array, *logical: str | None) -> jax.Array:
+    """with_sharding_constraint under the ambient rules (no-op without)."""
+    rules = current_rules()
+    if rules is None or rules.mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, rules.sharding(*logical))
+
+
+def spec_for(*logical: str | None) -> P:
+    rules = current_rules()
+    if rules is None:
+        return P()
+    return rules.spec(*logical)
+
+
+# ---------------------------------------------------------------------------
+# Rule tables
+# ---------------------------------------------------------------------------
+
+def lm_rules(mesh: Mesh | None, *, training: bool = True,
+             long_context: bool = False,
+             decode: bool = False) -> ShardingRules:
+    """Uniform LM recipe: batch/FSDP on (pod, data), TP on model.
+
+    * activations: batch -> (pod, data); context-parallel attention shards
+      the query-sequence axis over 'model' during train/prefill; in decode
+      the KV-cache sequence axis is sharded over 'model' instead (XLA
+      inserts the flash-decode style softmax reductions).
+    * weights: first (input) dim FSDP over (pod, data); output-feature dims
+      (mlp / vocab / heads) over 'model'.
+    """
+    table: dict[str, Axes] = {
+        "batch": ("pod", "data"),
+        # sequence parallelism: the residual stream (and every pointwise /
+        # MLP op on it) is sharded over 'model' along the sequence axis —
+        # activation memory scales 1/(data*model), and attention is
+        # context-parallel for free (queries already seq-sharded). KV is
+        # all-gathered per layer ("seq_kv" -> None).
+        "seq": "model",
+        "seq_q": "model",            # context parallel attention queries
+        "seq_kv": None,              # KV replicated for attention
+        "cache_seq": "model",        # decode: KV cache sequence sharding
+        "embed": None,
+        "heads": None,
+        "kv_heads": None,
+        "head_dim": None,
+        "mlp": "model",
+        "vocab": "model",
+        "experts": "model",
+        "expert_cap": None,
+        # weight dims
+        "w_fsdp": ("pod", "data"),   # FSDP-sharded input dim
+        "w_mlp": "model",
+        "w_vocab": "model",
+        "w_embed": None,
+        "layers": None,
+    }
+    if not training:
+        # serving: FSDP is an anti-pattern — a decode step would re-gather
+        # the entire model (1.46 GB/layer/step f32 at qwen3-14b scale; see
+        # EXPERIMENTS.md qwen3 iteration 1). Replicate weights over the
+        # data axes and keep tensor parallelism over 'model' only.
+        table["w_fsdp"] = None
+    if decode:
+        # decode's seq axis has length 1 — mapping it to 'model' consumes
+        # the axis in every activation constraint, silently demoting
+        # mlp/vocab to replicated and forcing full per-layer weight
+        # gathers (qwen3 iteration 3). Classic TP instead: seq unsharded,
+        # mlp/vocab on 'model', flash-decode KV over 'cache_seq'.
+        table["seq"] = None
+        table["seq_q"] = None
+    if long_context:
+        # batch=1 ultra-long decode: nothing to shard on the batch axis —
+        # spread the KV cache sequence over the whole mesh instead
+        # (flash-decode with XLA-inserted softmax reductions).
+        table["batch"] = None
+        table["cache_seq"] = ("data", "model")
+    return ShardingRules(mesh, table)
+
+
+def gnn_rules(mesh: Mesh | None) -> ShardingRules:
+    """Edges/nodes sharded over every data-ish axis; features local."""
+    table: dict[str, Axes] = {
+        "edges": ("pod", "data", "model"),
+        "nodes": ("pod", "data", "model"),
+        "batch": ("pod", "data", "model"),
+        "feat": None,
+        "w_fsdp": ("pod", "data"),
+        "w_out": None,
+        "layers": None,
+    }
+    return ShardingRules(mesh, table)
+
+
+def recsys_rules(mesh: Mesh | None) -> ShardingRules:
+    """Row-sharded embedding tables over 'model', batch over the rest."""
+    table: dict[str, Axes] = {
+        "batch": ("pod", "data"),
+        "candidates": ("pod", "data"),
+        "feat": None,
+        "fields": None,
+        "seq": None,
+        "table_rows": "model",
+        "embed": None,
+        "w_fsdp": ("pod", "data"),
+        "w_out": None,
+        "layers": None,
+    }
+    return ShardingRules(mesh, table)
+
+
+def retrieval_rules(mesh: Mesh | None) -> ShardingRules:
+    """ASC serving: clusters over (pod, data), query batch over 'model'."""
+    table: dict[str, Axes] = {
+        "clusters": ("pod", "data"),
+        "queries": "model",
+        "vocab": None,
+        "doc_slots": None,
+        "seg": None,
+    }
+    return ShardingRules(mesh, table)
+
+
+def make_sharding(tree_axes: Any, rules: ShardingRules) -> Any:
+    """Map a pytree of logical-axis tuples to NamedShardings."""
+    return jax.tree_util.tree_map(
+        lambda axes: rules.sharding(*axes), tree_axes,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(a, (str, type(None))) for a in x),
+    )
+
+
+def _is_axes_leaf(x: Any) -> bool:
+    return isinstance(x, tuple) and all(
+        isinstance(a, (str, type(None))) for a in x)
+
+
+def divisible_spec(rules: ShardingRules, axes: Sequence[str | None],
+                   shape: Sequence[int]) -> P:
+    """Logical axes -> PartitionSpec, dropping mesh axes that do not divide
+    the corresponding dimension (innermost-first, so partial sharding is
+    kept when possible). This is the production divisibility guard: a
+    13-wide DLRM bottom-MLP input or a 1433-dim GNN feature column never
+    blocks compilation — it simply replicates; big divisible dims stay
+    sharded.
+    """
+    base = rules.spec(*axes)
+    sizes = dict(zip(rules.mesh.axis_names, rules.mesh.devices.shape)) \
+        if rules.mesh is not None else {}
+    out: list[Axes] = []
+    for i, entry in enumerate(base):
+        dim = shape[i] if i < len(shape) else 1
+        axs = entry if isinstance(entry, tuple) else (
+            (entry,) if entry is not None else ())
+        axs = list(axs)
+        while axs:
+            total = 1
+            for a in axs:
+                total *= sizes.get(a, 1)
+            if dim % total == 0:
+                break
+            axs.pop()                      # drop innermost first
+        out.append(tuple(axs) if len(axs) > 1 else (axs[0] if axs else None))
+    return P(*out)
+
+
+def shard_with_shapes(rules: ShardingRules, tree_axes: Any,
+                      tree_shapes: Any) -> Any:
+    """Pytree of logical-axis tuples + matching pytree of arrays /
+    ShapeDtypeStructs -> NamedShardings with per-dim divisibility checks."""
+    def one(axes, val):
+        return NamedSharding(rules.mesh,
+                             divisible_spec(rules, axes, val.shape))
+    return jax.tree_util.tree_map(one, tree_axes, tree_shapes,
+                                  is_leaf=_is_axes_leaf)

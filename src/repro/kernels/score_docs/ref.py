@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the score_docs kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def score_docs_ref(doc_tids: jax.Array, doc_tw: jax.Array, qmap: jax.Array,
+                   scale: jax.Array) -> jax.Array:
+    """score[d] = scale * sum_t qmap[tid[d, t]] * w[d, t]."""
+    return jnp.einsum("dt,dt->d", qmap[doc_tids],
+                      doc_tw.astype(jnp.float32)) * scale

@@ -1,0 +1,27 @@
+"""Jit'd public wrapper for the segment-bound kernel.
+
+``interpret=True`` everywhere in this container (CPU): the kernel body runs
+in Python for correctness validation; on TPU set
+``REPRO_PALLAS_INTERPRET=0`` (or pass interpret=False) to lower to Mosaic.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+
+from repro.kernels.segment_bound.segment_bound import (
+    segment_bound_gemm as _kernel_call)
+from repro.kernels.segment_bound.ref import segment_bound_gemm_ref
+
+INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+
+
+def segment_bound_gemm(table: jax.Array, qmap: jax.Array,
+                       scale: jax.Array, **kw) -> jax.Array:
+    kw.setdefault("interpret", INTERPRET)
+    return _kernel_call(table, qmap, scale, **kw)
+
+
+__all__ = ["segment_bound_gemm", "segment_bound_gemm_ref"]

@@ -1,0 +1,504 @@
+"""Cell definitions: (architecture x input shape) -> lowerable step.
+
+``build_cell(arch, shape, mesh, multi_pod)`` returns a :class:`CellPlan`
+with the function to lower, abstract arg shapes (ShapeDtypeStructs — no
+allocation), in/out shardings, donation, the ambient sharding rules, and
+MODEL_FLOPS (the hand-counted useful FLOPs for §Roofline's
+MODEL/HLO-FLOPs ratio).
+
+Shape sets follow the assignment table verbatim; ``molecule`` is flattened
+to one disjoint-union graph, ``minibatch_lg`` uses the neighbour-sampler
+output geometry (seeds + fanout 15-10), encoder-only/recsys archs have no
+decode cells by construction.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import arch_kind, get_arch
+from repro.distributed import sharding as sh
+from repro.training import optimizer as opt_lib
+
+I32 = jnp.int32
+F32 = jnp.float32
+BOOL = jnp.bool_
+
+
+@dataclasses.dataclass
+class CellPlan:
+    arch: str
+    shape: str
+    mode: str
+    fn: Callable
+    args: tuple                      # ShapeDtypeStructs
+    in_shardings: Any
+    out_shardings: Any               # or None (let XLA choose)
+    donate_argnums: tuple
+    rules: sh.ShardingRules
+    model_flops: float
+    notes: str = ""
+
+
+LM_SHAPES = {
+    "train_4k": {"mode": "train", "seq": 4096, "batch": 256},
+    "prefill_32k": {"mode": "prefill", "seq": 32768, "batch": 32},
+    "decode_32k": {"mode": "decode", "seq": 32768, "batch": 128},
+    "long_500k": {"mode": "decode", "seq": 524288, "batch": 1},
+}
+
+GNN_SHAPES = {
+    # Cora-geometry full batch
+    "full_graph_sm": {"mode": "train", "n_nodes": 2708, "n_edges": 10556,
+                      "d_feat": 1433, "d_edge": 16, "node_out": 7},
+    # Reddit-geometry sampled training: seeds + fanout (15, 10)
+    "minibatch_lg": {"mode": "train", "batch_nodes": 1024,
+                     "fanout": (15, 10), "d_feat": 602, "d_edge": 16,
+                     "node_out": 41},
+    # ogbn-products full batch
+    "ogb_products": {"mode": "train", "n_nodes": 2_449_029,
+                     "n_edges": 61_859_140, "d_feat": 100, "d_edge": 8,
+                     "node_out": 47},
+    # 128 molecules of 30 nodes / 64 edges, disjoint union
+    "molecule": {"mode": "train", "n_graphs": 128, "nodes_per": 30,
+                 "edges_per": 64, "d_feat": 16, "d_edge": 8, "node_out": 3},
+}
+
+RECSYS_SHAPES = {
+    "train_batch": {"mode": "train", "batch": 65536},
+    "serve_p99": {"mode": "serve", "batch": 512},
+    "serve_bulk": {"mode": "serve", "batch": 262144},
+    "retrieval_cand": {"mode": "retrieval", "batch": 1,
+                       "n_candidates": 1_000_000},
+}
+
+RETRIEVAL_SHAPES = {
+    "serve_k10": {"mode": "retrieve", "batch": 256, "k": 10},
+    "serve_k1000": {"mode": "retrieve", "batch": 64, "k": 1000},
+}
+
+SHAPES_BY_KIND = {"lm": LM_SHAPES, "gnn": GNN_SHAPES,
+                  "recsys": RECSYS_SHAPES, "retrieval": RETRIEVAL_SHAPES}
+
+
+def shapes_for(arch: str) -> list[str]:
+    return list(SHAPES_BY_KIND[arch_kind(arch)])
+
+
+def all_cells() -> list[tuple[str, str]]:
+    from repro.configs import list_archs
+    out = []
+    for arch in list_archs():
+        for shape in shapes_for(arch):
+            out.append((arch, shape))
+    return out
+
+
+def _sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _shardings(rules: sh.ShardingRules, axes_tree, shapes_tree=None):
+    """Logical axes -> NamedShardings; with ``shapes_tree`` given, mesh
+    axes that do not divide a dimension are dropped (partial sharding)
+    instead of failing compilation — see sharding.divisible_spec."""
+    if shapes_tree is not None:
+        return sh.shard_with_shapes(rules, axes_tree, shapes_tree)
+    def is_axes(x):
+        return isinstance(x, tuple) and all(
+            isinstance(a, (str, type(None))) for a in x)
+    return jax.tree_util.tree_map(
+        lambda axes: NamedSharding(rules.mesh, rules.spec(*axes)),
+        axes_tree, is_leaf=is_axes)
+
+
+def _mlp_flops(dims) -> float:
+    return 2.0 * sum(float(dims[i]) * dims[i + 1]
+                     for i in range(len(dims) - 1))
+
+
+# ===========================================================================
+# LM cells
+# ===========================================================================
+
+def _build_lm(arch: str, shape: str, mesh, multi_pod: bool,
+              unroll: int = 1) -> CellPlan:
+    from repro.models import transformer as tf
+    spec = LM_SHAPES[shape]
+    cfg = get_arch(arch).config()
+    cfg = dataclasses.replace(cfg, unroll=min(unroll, cfg.n_layers))
+    mode = spec["mode"]
+    B, S = spec["batch"], spec["seq"]
+    rules = sh.lm_rules(mesh, training=(mode == "train"),
+                        long_context=(shape == "long_500k"),
+                        decode=(mode == "decode"))
+
+    # training holds f32 master weights; serving artifacts are bf16
+    # checkpoints (halves the weight-read bytes of every decode step)
+    param_dtype = jnp.float32 if mode == "train" else jnp.bfloat16
+    params_shapes = jax.eval_shape(
+        lambda: tf.init_params(jax.random.PRNGKey(0), cfg, param_dtype))
+    p_axes = tf.param_axes(cfg)
+    p_shard = _shardings(rules, p_axes, params_shapes)
+
+    n_act = cfg.active_param_count()
+    L, h, d = cfg.n_layers, cfg.n_heads, cfg.head_dim
+
+    if mode == "train":
+        from repro.training.train_loop import TrainConfig, make_train_step
+        optimizer = opt_lib.adamw(opt_lib.cosine_schedule(3e-4, 100, 1000))
+        # NOTE(perf, llama4 iter 6 — refuted): microbatches=4 shrinks the
+        # logits/CE footprint but re-gathers FSDP weights per microbatch
+        # (4x weight traffic) and peak memory barely moves because remat
+        # already bounds activations. Kept at 1; the fit-on-v5e answer for
+        # llama4-scout is the multi-pod mesh (see EXPERIMENTS.md §Perf).
+        step = make_train_step(lambda p, b: tf.loss_fn(p, b, cfg),
+                               optimizer, TrainConfig(),
+                               grad_shardings=p_shard)
+        opt_shapes = jax.eval_shape(optimizer.init, params_shapes)
+        opt_shard = {"mu": p_shard, "nu": p_shard}
+        batch_shapes = {
+            "tokens": _sds((B, S), I32), "labels": _sds((B, S), I32),
+            "mask": _sds((B, S), F32)}
+        b_shard = {
+            "tokens": rules.sharding("batch", "seq"),
+            "labels": rules.sharding("batch", "seq"),
+            "mask": rules.sharding("batch", "seq")}
+        args = (params_shapes, opt_shapes, batch_shapes, _sds((), I32))
+        in_sh = (p_shard, opt_shard, b_shard, NamedSharding(mesh, P()))
+        out_sh = (p_shard, opt_shard, None)
+        flops = 6.0 * n_act * B * S + 6.0 * B * S * S * h * d * L
+        return CellPlan(arch, shape, mode, step, args, in_sh, out_sh,
+                        (0, 1), rules, flops)
+
+    if mode == "prefill":
+        fn = lambda p, t: tf.prefill(p, t, cfg)
+        args = (params_shapes, _sds((B, S), I32))
+        in_sh = (p_shard, rules.sharding("batch", "seq"))
+        cache_shapes = jax.eval_shape(
+            lambda p, t: tf.prefill(p, t, cfg),
+            params_shapes, _sds((B, S), I32))[1]
+        c_shard = _shardings(rules, tf.cache_axes(), cache_shapes)
+        # prefill emits last-token logits (B, 1, V): seq dim is 1 — only
+        # batch and vocab shard.
+        out_sh = (rules.sharding("batch", None, "vocab"), c_shard)
+        flops = 2.0 * n_act * B * S + 2.0 * B * S * S * h * d * L
+        return CellPlan(arch, shape, mode, fn, args, in_sh, out_sh, (),
+                        rules, flops)
+
+    # decode
+    fn = lambda p, c, t: tf.decode_step(p, c, t, cfg)
+    cache_shapes = jax.eval_shape(
+        lambda: tf.init_cache(cfg, B, S, jnp.bfloat16))
+    c_shard = _shardings(rules, tf.cache_axes(), cache_shapes)
+    args = (params_shapes, cache_shapes, _sds((B, 1), I32))
+    # decode tokens/logits have seq dim 1 — never shard it.
+    in_sh = (p_shard, c_shard, rules.sharding("batch", None))
+    out_sh = (rules.sharding("batch", None, "vocab"), c_shard)
+    flops = 2.0 * n_act * B + 4.0 * B * S * cfg.n_kv_heads * d * (
+        cfg.n_heads // cfg.n_kv_heads) * L
+    return CellPlan(arch, shape, mode, fn, args, in_sh, out_sh, (1,),
+                    rules, flops)
+
+
+# ===========================================================================
+# GNN cells
+# ===========================================================================
+
+def _gnn_geometry(spec: dict) -> tuple[int, int]:
+    if "n_nodes" in spec:
+        return spec["n_nodes"], spec["n_edges"]
+    if "batch_nodes" in spec:                      # sampled minibatch
+        n, e = spec["batch_nodes"], 0
+        frontier = spec["batch_nodes"]
+        for f in spec["fanout"]:
+            e += frontier * f
+            frontier *= f
+            n += frontier
+        return n, e
+    n = spec["n_graphs"] * spec["nodes_per"]       # molecule union
+    e = spec["n_graphs"] * spec["edges_per"]
+    return n, e
+
+
+def _build_gnn(arch: str, shape: str, mesh, multi_pod: bool,
+               unroll: int = 1) -> CellPlan:
+    from repro.models import gnn
+    from repro.training.train_loop import TrainConfig, make_train_step
+    spec = GNN_SHAPES[shape]
+    N, E = _gnn_geometry(spec)
+    # pad node/edge counts to the shard grid (the data pipeline emits
+    # masked padding nodes/edges — node_mask/edge_mask already exist);
+    # 512 = lcm of both production meshes' combined data axes.
+    N, E = -(-N // 512) * 512, -(-E // 512) * 512
+    cfg = get_arch(arch).config(node_in=spec["d_feat"],
+                                edge_in=spec["d_edge"],
+                                node_out=spec["node_out"])
+    cfg = dataclasses.replace(cfg, unroll=min(unroll, cfg.n_layers))
+    rules = sh.gnn_rules(mesh)
+
+    params_shapes = jax.eval_shape(
+        lambda: gnn.init_params(jax.random.PRNGKey(0), cfg))
+    p_shard = _shardings(rules, gnn.param_axes(cfg), params_shapes)
+
+    optimizer = opt_lib.adamw(opt_lib.cosine_schedule(1e-4, 100, 1000))
+    step = make_train_step(lambda p, b: gnn.loss_fn(p, b, cfg), optimizer,
+                           TrainConfig(), grad_shardings=p_shard)
+    opt_shapes = jax.eval_shape(optimizer.init, params_shapes)
+    opt_shard = {"mu": p_shard, "nu": p_shard}
+
+    graph_shapes = {
+        "node_feat": _sds((N, spec["d_feat"]), F32),
+        "edge_feat": _sds((E, spec["d_edge"]), F32),
+        "senders": _sds((E,), I32), "receivers": _sds((E,), I32),
+        "node_mask": _sds((N,), BOOL), "edge_mask": _sds((E,), BOOL),
+        "target": _sds((N, spec["node_out"]), F32),
+    }
+    g_shard = {
+        "node_feat": rules.sharding("nodes", "feat"),
+        "edge_feat": rules.sharding("edges", "feat"),
+        "senders": rules.sharding("edges"),
+        "receivers": rules.sharding("edges"),
+        "node_mask": rules.sharding("nodes"),
+        "edge_mask": rules.sharding("edges"),
+        "target": rules.sharding("nodes", "feat"),
+    }
+    args = (params_shapes, opt_shapes, graph_shapes, _sds((), I32))
+    in_sh = (p_shard, opt_shard, g_shard, NamedSharding(mesh, P()))
+    out_sh = (p_shard, opt_shard, None)
+
+    d = cfg.d_hidden
+    hid = [d] * cfg.mlp_layers
+    fwd = (N * _mlp_flops([cfg.node_in] + hid + [d])
+           + E * _mlp_flops([cfg.edge_in] + hid + [d])
+           + cfg.n_layers * (E * _mlp_flops([3 * d] + hid + [d])
+                             + N * _mlp_flops([2 * d] + hid + [d]))
+           + N * _mlp_flops([d] + hid + [cfg.node_out]))
+    return CellPlan(arch, shape, "train", step, args, in_sh, out_sh,
+                    (0, 1), rules, 3.0 * fwd)
+
+
+# ===========================================================================
+# RecSys cells
+# ===========================================================================
+
+def _recsys_batch_shapes(arch: str, cfg, B: int, spec: dict,
+                         rules) -> tuple[dict, dict, float]:
+    """(shapes, shardings, fwd_flops_per_sample) for a training/serving
+    batch of the given arch."""
+    if arch == "dlrm-mlperf":
+        shapes = {"dense": _sds((B, cfg.n_dense), F32),
+                  "sparse": _sds((B, cfg.n_sparse), I32),
+                  "labels": _sds((B,), F32)}
+        shard = {"dense": rules.sharding("batch", "feat"),
+                 "sparse": rules.sharding("batch", "fields"),
+                 "labels": rules.sharding("batch")}
+        f = cfg.n_sparse + 1
+        fwd = (_mlp_flops([cfg.n_dense, *cfg.bot_mlp])
+               + _mlp_flops([cfg.top_in, *cfg.top_mlp])
+               + 2.0 * f * f * cfg.embed_dim)
+    elif arch == "din":
+        L = cfg.seq_len
+        shapes = {"hist_items": _sds((B, L), I32),
+                  "hist_cates": _sds((B, L), I32),
+                  "hist_mask": _sds((B, L), BOOL),
+                  "target_item": _sds((B,), I32),
+                  "target_cate": _sds((B,), I32),
+                  "labels": _sds((B,), F32)}
+        shard = {k: rules.sharding("batch", "seq") if v.ndim == 2
+                 else rules.sharding("batch")
+                 for k, v in shapes.items()}
+        fdim = cfg.feat_dim
+        fwd = (L * _mlp_flops([4 * fdim, *cfg.attn_mlp, 1])
+               + _mlp_flops([3 * fdim, *cfg.mlp, 1]) + 2.0 * L * fdim)
+    elif arch == "deepfm":
+        shapes = {"fields": _sds((B, cfg.n_fields), I32),
+                  "labels": _sds((B,), F32)}
+        shard = {"fields": rules.sharding("batch", "fields"),
+                 "labels": rules.sharding("batch")}
+        fwd = (_mlp_flops([cfg.n_fields * cfg.embed_dim, *cfg.mlp, 1])
+               + 4.0 * cfg.n_fields * cfg.embed_dim)
+    elif arch == "bert4rec":
+        L, D = cfg.seq_len, cfg.embed_dim
+        shapes = {"items": _sds((B, L), I32), "mask": _sds((B, L), BOOL),
+                  "labels": _sds((B, L), I32),
+                  "label_mask": _sds((B, L), BOOL),
+                  "negatives": _sds((cfg.n_negatives,), I32)}
+        shard = {k: rules.sharding("batch", "seq")
+                 for k in ("items", "mask", "labels", "label_mask")}
+        shard["negatives"] = NamedSharding(rules.mesh, P())
+        per_tok = 8.0 * D * D + 4.0 * D * L + 2.0 * 8 * D * D
+        fwd = cfg.n_blocks * L * per_tok \
+            + L * 2.0 * D * (1 + cfg.n_negatives)
+    else:
+        raise KeyError(arch)
+    return shapes, shard, fwd
+
+
+def _build_recsys(arch: str, shape: str, mesh, multi_pod: bool,
+                  unroll: int = 1) -> CellPlan:
+    from repro.models import recsys as rs
+    from repro.training.train_loop import TrainConfig, make_train_step
+    spec = RECSYS_SHAPES[shape]
+    cfg = get_arch(arch).config()
+    mode = spec["mode"]
+    rules = sh.recsys_rules(mesh)
+    B = spec["batch"]
+
+    fns = {
+        "dlrm-mlperf": (rs.dlrm_init, rs.dlrm_axes, rs.dlrm_forward,
+                        rs.dlrm_loss, rs.dlrm_retrieval),
+        "din": (rs.din_init, rs.din_axes, rs.din_forward, rs.din_loss,
+                rs.din_retrieval),
+        "deepfm": (rs.deepfm_init, rs.deepfm_axes, rs.deepfm_forward,
+                   rs.deepfm_loss, rs.deepfm_retrieval),
+        "bert4rec": (rs.bert4rec_init, rs.bert4rec_axes, rs.bert4rec_encode,
+                     rs.bert4rec_loss, rs.bert4rec_retrieval),
+    }
+    init_fn, axes_fn, fwd_fn, loss_fn, retr_fn = fns[arch]
+    params_shapes = jax.eval_shape(
+        lambda: init_fn(jax.random.PRNGKey(0), cfg))
+    p_shard = _shardings(rules, axes_fn(cfg), params_shapes)
+
+    if mode == "train":
+        shapes, b_shard, fwd = _recsys_batch_shapes(arch, cfg, B, spec,
+                                                    rules)
+        # row-wise adagrad on the big tables (MLPerf recipe) for DLRM and
+        # DeepFM; AdamW elsewhere (tables are small).
+        if arch in ("dlrm-mlperf", "deepfm"):
+            optimizer = opt_lib.rowwise_adagrad(
+                opt_lib.constant_schedule(0.01))
+            opt_shard = {"acc": jax.tree_util.tree_map(
+                lambda s: NamedSharding(rules.mesh, P(s.spec[0])
+                                        if len(s.spec) else P()), p_shard)}
+        else:
+            optimizer = opt_lib.adamw(opt_lib.constant_schedule(1e-3))
+            opt_shard = {"mu": p_shard, "nu": p_shard}
+        step = make_train_step(lambda p, b: loss_fn(p, b, cfg), optimizer,
+                               TrainConfig())
+        opt_shapes = jax.eval_shape(optimizer.init, params_shapes)
+        args = (params_shapes, opt_shapes, shapes, _sds((), I32))
+        in_sh = (p_shard, opt_shard, b_shard, NamedSharding(mesh, P()))
+        out_sh = (p_shard, opt_shard, None)
+        return CellPlan(arch, shape, mode, step, args, in_sh, out_sh,
+                        (0, 1), rules, 3.0 * fwd * B)
+
+    if mode == "serve":
+        shapes, b_shard, fwd = _recsys_batch_shapes(arch, cfg, B, spec,
+                                                    rules)
+        shapes.pop("labels", None)
+        b_shard.pop("labels", None)
+        if arch == "bert4rec":
+            shapes.pop("label_mask"), shapes.pop("negatives")
+            shapes.pop("labels", None)
+            b_shard = {k: b_shard[k] for k in shapes}
+        fn = lambda p, b: fwd_fn(p, b, cfg)
+        args = (params_shapes, shapes)
+        return CellPlan(arch, shape, mode, fn, args, (p_shard, b_shard),
+                        None, (), rules, fwd * B)
+
+    # retrieval_cand
+    C = spec["n_candidates"]
+    if arch == "dlrm-mlperf":
+        shapes = {"dense": _sds((1, cfg.n_dense), F32),
+                  "sparse": _sds((1, cfg.n_sparse), I32),
+                  "cand_ids": _sds((C,), I32)}
+        _, _, fwd = _recsys_batch_shapes(arch, cfg, 1, spec, rules)
+    elif arch == "din":
+        L = cfg.seq_len
+        shapes = {"hist_items": _sds((1, L), I32),
+                  "hist_cates": _sds((1, L), I32),
+                  "hist_mask": _sds((1, L), BOOL),
+                  "cand_items": _sds((C,), I32),
+                  "cand_cates": _sds((C,), I32)}
+        _, _, fwd = _recsys_batch_shapes(arch, cfg, 1, spec, rules)
+    elif arch == "deepfm":
+        shapes = {"fields": _sds((1, cfg.n_fields), I32),
+                  "cand_ids": _sds((C,), I32)}
+        _, _, fwd = _recsys_batch_shapes(arch, cfg, 1, spec, rules)
+    else:  # bert4rec: encode once + 1M dots
+        L = cfg.seq_len
+        shapes = {"items": _sds((1, L), I32), "mask": _sds((1, L), BOOL),
+                  "cand_ids": _sds((C,), I32)}
+        fwd = 2.0 * cfg.embed_dim       # per-candidate: one D-dim dot
+    b_shard = {k: rules.sharding("candidates")
+               if v.shape == (C,) else NamedSharding(mesh, P())
+               for k, v in shapes.items()}
+    fn = lambda p, b: retr_fn(p, b, cfg)
+    args = (params_shapes, shapes)
+    return CellPlan(arch, shape, mode, fn, args, (p_shard, b_shard),
+                    rules.sharding("candidates"), (), rules, fwd * C)
+
+
+# ===========================================================================
+# ASC retrieval cells (the paper's architecture)
+# ===========================================================================
+
+def _build_retrieval(arch: str, shape: str, mesh, multi_pod: bool,
+                     unroll: int = 1) -> CellPlan:
+    from repro.core.search import SearchConfig
+    from repro.core.types import ClusterIndex, QueryBatch
+    from repro.serving import engine
+    spec = RETRIEVAL_SHAPES[shape]
+    icfg = get_arch(arch).config()
+    rules = sh.retrieval_rules(mesh)
+    B = spec["batch"]
+    m, n_seg, V = icfg.m, icfg.n_seg, icfg.vocab
+    dp, tp, qp = icfg.d_pad, icfg.t_pad, icfg.q_pad
+
+    index_shapes = ClusterIndex(
+        doc_tids=_sds((m, dp, tp),
+                      jnp.uint16 if V < 2**16 else I32),
+        doc_tw=_sds((m, dp, tp), jnp.uint8),
+        doc_mask=_sds((m, dp), BOOL), doc_ids=_sds((m, dp), I32),
+        doc_seg=_sds((m, dp), I32), seg_max=_sds((m, n_seg, V), jnp.uint8),
+        scale=_sds((), F32), cluster_ndocs=_sds((m,), I32),
+        vocab=V, n_seg=n_seg)
+    q_shapes = QueryBatch(tids=_sds((B, qp), I32), tw=_sds((B, qp), F32),
+                          mask=_sds((B, qp), BOOL), vocab=V)
+
+    ispecs = engine.index_shard_specs(index_shapes, multi_pod)
+    i_shard = jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), ispecs,
+        is_leaf=lambda x: isinstance(x, P))
+    q_shard = QueryBatch(
+        tids=NamedSharding(mesh, P("model", None)),
+        tw=NamedSharding(mesh, P("model", None)),
+        mask=NamedSharding(mesh, P("model", None)), vocab=V)
+
+    scfg = SearchConfig(k=spec["k"], mu=icfg.mu, eta=icfg.eta,
+                        method="asc", group_size=icfg.group_size)
+    fn = lambda idx, q: engine.distributed_retrieve(idx, q, scfg, mesh,
+                                                    multi_pod=multi_pod)
+    # useful work: bounds for all clusters + exhaustive scoring upper bound
+    flops = B * (2.0 * m * n_seg * qp + 2.0 * icfg.n_docs * tp)
+    return CellPlan(arch, shape, "retrieve", fn, (index_shapes, q_shapes),
+                    (i_shard, q_shard), None, (), rules, flops,
+                    notes="HLO flops reflect one while-loop group + bounds; "
+                          "pruning makes useful/HLO ratio > 1 by design")
+
+
+def build_cell(arch: str, shape: str, mesh, multi_pod: bool = False,
+               unroll: int = 1) -> CellPlan:
+    """unroll: scan-over-layers unroll factor. 1 = the production program
+    (memory analysis comes from this compile); >1 = counting compile — the
+    dry-run extrapolates per-layer FLOPs / collective bytes linearly from
+    (u=1, u=8) since XLA cost analysis counts loop bodies once."""
+    kind = arch_kind(arch)
+    builder = {"lm": _build_lm, "gnn": _build_gnn, "recsys": _build_recsys,
+               "retrieval": _build_retrieval}[kind]
+    return builder(arch, shape, mesh, multi_pod, unroll=unroll)
+
+
+def layer_count(arch: str) -> int:
+    kind = arch_kind(arch)
+    if kind == "lm":
+        return get_arch(arch).config().n_layers
+    if kind == "gnn":
+        return get_arch(arch).config().n_layers
+    return 1

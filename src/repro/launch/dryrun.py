@@ -1,0 +1,238 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+# ^ MUST precede every other import (jax locks the device count on first
+# init). 512 placeholder host devices back the production meshes; nothing
+# here allocates real buffers — cells are lowered from ShapeDtypeStructs.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell: ``jax.jit(step, in_shardings, out_shardings).lower(*abstract
+args).compile()`` on the 16x16 single-pod mesh and the 2x16x16 multi-pod
+mesh, then record
+  * memory_analysis (bytes per device — proves it fits),
+  * cost_analysis (HLO FLOPs / bytes accessed),
+  * per-collective byte totals parsed from the compiled HLO
+    (all-gather / all-reduce / reduce-scatter / all-to-all /
+    collective-permute),
+into ``experiments/dryrun/<arch>__<shape>__<mesh>.json`` — the roofline
+inputs (EXPERIMENTS.md §Dry-run / §Roofline).
+
+Usage:
+  python -m repro.launch.dryrun --arch olmo-1b --shape train_4k
+  python -m repro.launch.dryrun --all [--mesh single|multi|both] [--force]
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+
+from repro.distributed.sharding import use_rules
+from repro.launch.cells import all_cells, build_cell, layer_count
+from repro.launch.mesh import make_production_mesh
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "s8": 1, "s16": 2, "s32": 4, "s64": 8,
+    "u4": 1, "u8": 1, "u16": 2, "u32": 4, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """bytes of one HLO shape like 'bf16[8,128,2048]' or a tuple thereof."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+_COLL_RE = re.compile(
+    r"=\s*(\(?[^=()]*?\)?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(")
+
+
+def parse_collectives(hlo_text: str) -> dict[str, dict]:
+    """Sum result-shape bytes per collective op kind from HLO text.
+
+    Async pairs: the payload is attributed to the ``-start`` op; ``-done``
+    ops are skipped (their result aliases the started buffer)."""
+    out = {k: {"count": 0, "bytes": 0} for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        shape_str, kind, suffix = m.group(1), m.group(2), m.group(3)
+        if suffix == "-done":
+            continue
+        out[kind]["count"] += 1
+        out[kind]["bytes"] += _shape_bytes(shape_str)
+    return out
+
+
+def _add_layer_extrapolation(rec: dict, arch: str, shape: str, mesh,
+                             multi_pod: bool) -> None:
+    """Honest per-layer costs for scan-over-layers programs.
+
+    XLA cost analysis counts a while-loop body ONCE, so the u=1 production
+    compile under-counts an L-layer model by ~L. A second *counting*
+    compile at unroll=u (u | L) gives per-layer = (f_u - f_1)/(u - 1)
+    (verified exactly linear), and total = f_1 + (L-1) * per-layer. The
+    same extrapolation applies to bytes and per-collective payloads.
+    """
+    L = layer_count(arch)
+    if L <= 1:
+        rec["flops_total"] = rec["flops"]
+        rec["bytes_total"] = rec["bytes_accessed"]
+        rec["collectives_total"] = rec["collectives"]
+        return
+    u = 2 if L % 2 == 0 else (3 if L % 3 == 0 else L)
+    plan = build_cell(arch, shape, mesh, multi_pod, unroll=u)
+    with mesh, use_rules(plan.rules):
+        compiled = jax.jit(
+            plan.fn, in_shardings=plan.in_shardings,
+            out_shardings=plan.out_shardings,
+            donate_argnums=plan.donate_argnums).lower(*plan.args).compile()
+        cost = compiled.cost_analysis()
+        coll_u = parse_collectives(compiled.as_text())
+
+    def extrap(f1, fu):
+        per_layer = max(0.0, (fu - f1) / (u - 1))
+        return f1 + (L - 1) * per_layer
+
+    rec["counting_unroll"] = u
+    rec["flops_total"] = extrap(rec["flops"],
+                                float(cost.get("flops", 0.0)))
+    rec["bytes_total"] = extrap(rec["bytes_accessed"],
+                                float(cost.get("bytes accessed", 0.0)))
+    rec["collectives_total"] = {
+        k: {"count": int(extrap(rec["collectives"][k]["count"],
+                                coll_u[k]["count"])),
+            "bytes": extrap(rec["collectives"][k]["bytes"],
+                            coll_u[k]["bytes"])}
+        for k in rec["collectives"]}
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str,
+             save: bool = True) -> dict:
+    multi_pod = mesh_kind == "multi"
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.size
+    rec: dict = {
+        "arch": arch, "shape": shape, "mesh": mesh_kind,
+        "n_devices": n_dev, "status": "error",
+    }
+    t0 = time.perf_counter()
+    try:
+        plan = build_cell(arch, shape, mesh, multi_pod)
+        rec.update({"mode": plan.mode, "model_flops": plan.model_flops,
+                    "notes": plan.notes})
+        with mesh, use_rules(plan.rules):
+            jitted = jax.jit(
+                plan.fn, in_shardings=plan.in_shardings,
+                out_shardings=plan.out_shardings,
+                donate_argnums=plan.donate_argnums)
+            lowered = jitted.lower(*plan.args)
+            t_lower = time.perf_counter() - t0
+            compiled = lowered.compile()
+            t_compile = time.perf_counter() - t0 - t_lower
+
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            hlo = compiled.as_text()
+        rec.update({
+            "status": "ok",
+            "lower_s": round(t_lower, 2),
+            "compile_s": round(t_compile, 2),
+            "memory": {
+                k: int(getattr(mem, k, 0) or 0)
+                for k in ("argument_size_in_bytes",
+                          "output_size_in_bytes",
+                          "temp_size_in_bytes",
+                          "generated_code_size_in_bytes",
+                          "alias_size_in_bytes")
+            },
+            "flops": float(cost.get("flops", 0.0)) if cost else 0.0,
+            "bytes_accessed": float(cost.get("bytes accessed", 0.0))
+            if cost else 0.0,
+            "collectives": parse_collectives(hlo),
+            "hlo_lines": hlo.count("\n"),
+        })
+        _add_layer_extrapolation(rec, arch, shape, mesh, multi_pod)
+    except Exception as e:  # noqa: BLE001 — record the failure, keep going
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    rec["total_s"] = round(time.perf_counter() - t0, 2)
+    if save:
+        os.makedirs(OUT_DIR, exist_ok=True)
+        path = os.path.join(OUT_DIR, f"{arch}__{shape}__{mesh_kind}.json")
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    if args.all:
+        cells = all_cells()
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    n_ok = n_fail = n_skip = 0
+    for arch, shape in cells:
+        for mk in meshes:
+            path = os.path.join(OUT_DIR, f"{arch}__{shape}__{mk}.json")
+            if not args.force and os.path.exists(path):
+                with open(path) as f:
+                    if json.load(f).get("status") == "ok":
+                        n_skip += 1
+                        continue
+            rec = run_cell(arch, shape, mk)
+            tag = "OK " if rec["status"] == "ok" else "FAIL"
+            if rec["status"] == "ok":
+                n_ok += 1
+                per_dev = (rec["memory"]["argument_size_in_bytes"]
+                           + rec["memory"]["temp_size_in_bytes"]) / 2**30
+                print(f"[{tag}] {arch:22s} {shape:14s} {mk:6s} "
+                      f"compile={rec['compile_s']:.1f}s "
+                      f"mem/dev={per_dev:.2f}GiB "
+                      f"flops={rec['flops']:.3g}", flush=True)
+            else:
+                n_fail += 1
+                print(f"[{tag}] {arch:22s} {shape:14s} {mk:6s} "
+                      f"{rec['error']}", flush=True)
+    print(f"done: ok={n_ok} fail={n_fail} skipped={n_skip}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,124 @@
+"""Serving launcher: ``python -m repro.launch.serve [...]``.
+
+Builds an ASC cluster-skipping index over a synthetic corpus (or encoder
+outputs via --from-encoder) and serves query batches through the
+RetrievalEngine, printing latency percentiles and work counters. With
+``--devices N`` the index is sharded over a forced host mesh and served
+through the shard_map selective-search path — the same code that runs on
+the production (pod, data, model) mesh.
+"""
+
+import argparse
+import os
+
+
+def _parse():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n-docs", type=int, default=6000)
+    ap.add_argument("--vocab", type=int, default=1024)
+    ap.add_argument("--clusters", type=int, default=64)
+    ap.add_argument("--segments", type=int, default=8)
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--mu", type=float, default=0.9)
+    ap.add_argument("--eta", type=float, default=1.0)
+    ap.add_argument("--batches", type=int, default=8)
+    ap.add_argument("--batch-size", type=int, default=16)
+    ap.add_argument("--budget-ms", type=float, default=0.0,
+                    help="latency target (0 = unbudgeted)")
+    ap.add_argument("--devices", type=int, default=0)
+    return ap.parse_args()
+
+
+def main() -> None:
+    args = _parse()
+    if args.devices:
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={args.devices}")
+
+    import jax
+    import numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.core.clustering import (balanced_assign,
+                                       dense_rep_projection, lloyd_kmeans)
+    from repro.core.index import build_index
+    from repro.core.search import SearchConfig, retrieve
+    from repro.data.synthetic import CorpusSpec, make_corpus, make_queries
+    from repro.serving.engine import (AdaptiveBudget, RetrievalEngine,
+                                      distributed_retrieve,
+                                      index_shard_specs)
+
+    spec = CorpusSpec(n_docs=args.n_docs, vocab=args.vocab,
+                      n_topics=max(8, args.clusters // 2))
+    docs, doc_topic = make_corpus(spec)
+    rep = dense_rep_projection(docs, dim=96)
+    centers, _ = lloyd_kmeans(jax.random.PRNGKey(0), rep,
+                              k=args.clusters, iters=8)
+    d_pad = int(2.0 * args.n_docs / args.clusters)
+    assign = balanced_assign(rep, centers, capacity=d_pad)
+    index = build_index(docs, np.asarray(assign), m=args.clusters,
+                        n_seg=args.segments, d_pad=d_pad)
+    print(f"[serve] index: {args.clusters}x{args.segments}, "
+          f"{index.nbytes() / 2**20:.1f} MiB, "
+          f"{jax.device_count()} device(s)")
+
+    cfg = SearchConfig(k=args.k, mu=args.mu, eta=args.eta)
+
+    if args.devices and jax.device_count() >= 4:
+        mesh = jax.make_mesh((jax.device_count() // 2, 2),
+                             ("data", "model"))
+        ispecs = index_shard_specs(index)
+        i_shard = jax.tree_util.tree_map(
+            lambda s: NamedSharding(mesh, s), ispecs,
+            is_leaf=lambda x: isinstance(x, P))
+        index = jax.device_put(index, i_shard)
+        print("[serve] sharded over", dict(zip(mesh.axis_names,
+                                               mesh.devices.shape)))
+
+        import time
+        lat = []
+        with mesh:
+            for step in range(args.batches):
+                q, _ = make_queries(spec, args.batch_size, doc_topic,
+                                    seed=step)
+                q = jax.device_put(q, jax.tree_util.tree_map(
+                    lambda _: NamedSharding(mesh, P("model", None)), q,
+                    is_leaf=lambda x: hasattr(x, "shape")))
+                t0 = time.perf_counter()
+                out = jax.block_until_ready(
+                    distributed_retrieve(index, q, cfg, mesh))
+                lat.append((time.perf_counter() - t0) * 1e3
+                           / args.batch_size)
+        print(f"[serve] distributed: mean {np.mean(lat[1:]):.2f} ms/q "
+              f"p99 {np.percentile(lat[1:], 99):.2f}")
+        return
+
+    eng = RetrievalEngine(index, cfg)
+    warm, _ = make_queries(spec, args.batch_size, doc_topic, seed=997)
+    eng.warmup(warm)
+    ab = (AdaptiveBudget(args.budget_ms, init_cost_ms=0.05)
+          if args.budget_ms > 0 else None)
+    for step in range(args.batches):
+        q, _ = make_queries(spec, args.batch_size, doc_topic, seed=step)
+        if ab is not None:
+            budget = min(ab.budget(), index.m)
+            eng_b = RetrievalEngine(
+                index, SearchConfig(k=args.k, mu=args.mu, eta=args.eta,
+                                    cluster_budget=budget))
+            eng_b.warmup(q)
+            out = eng_b.search(q)
+            ab.observe(float(out.n_scored_clusters.mean()),
+                       eng_b.stats.mean_ms)
+            eng.stats.latencies_ms.extend(eng_b.stats.latencies_ms)
+            eng.stats.n_queries += q.n_queries
+        else:
+            out = eng.search(q)
+    s = eng.stats
+    print(f"[serve] {s.n_queries} queries: mean {s.mean_ms:.2f} ms/q, "
+          f"p50 {s.p(50):.2f}, p99 {s.p(99):.2f}; last batch scored "
+          f"{float(out.n_scored_clusters.mean()):.1f}/{index.m} clusters")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,175 @@
+"""GQA attention: chunked-causal (train/prefill) + KV-cache decode.
+
+Distribution (DESIGN.md §4): *context parallelism* — the query-sequence
+axis is sharded over 'model' in train/prefill and the KV-cache sequence
+axis in decode — avoids every head-divisibility trap (qwen3/llama4 have
+40 q / 8 kv heads, indivisible by a 16-way TP axis) and keeps one recipe
+for all five LM archs. Softmax over a sharded KV axis is handled by XLA
+SPMD (flash-decode-style partial max/sum + psum).
+
+The train/prefill path is an online-softmax scan over KV chunks (flash
+attention's algebra) so the (S_q x S_kv) score matrix is never
+materialized — required at prefill_32k and beyond.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models.layers import apply_norm, apply_rope, dense_init, norm_init
+
+NEG_INF = -1e30
+
+
+def attn_init(key, d_model: int, n_heads: int, n_kv: int, d_head: int,
+              qk_norm: bool, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 4)
+    q_per = n_heads // n_kv
+    p = {
+        "wq": dense_init(ks[0], d_model, n_kv * q_per * d_head, dtype
+                         ).reshape(d_model, n_kv, q_per, d_head),
+        "wk": dense_init(ks[1], d_model, n_kv * d_head, dtype
+                         ).reshape(d_model, n_kv, d_head),
+        "wv": dense_init(ks[2], d_model, n_kv * d_head, dtype
+                         ).reshape(d_model, n_kv, d_head),
+        "wo": (dense_init(ks[3], n_kv * q_per * d_head, d_model, dtype)
+               .reshape(n_kv, q_per, d_head, d_model)),
+    }
+    if qk_norm:
+        p["q_norm"] = norm_init("rms", d_head)
+        p["k_norm"] = norm_init("rms", d_head)
+    return p
+
+
+def attn_axes(qk_norm: bool) -> dict:
+    a = {
+        "wq": ("w_fsdp", "kv_heads", "heads", "head_dim"),
+        "wk": ("w_fsdp", "kv_heads", "head_dim"),
+        "wv": ("w_fsdp", "kv_heads", "head_dim"),
+        "wo": ("kv_heads", "heads", "head_dim", "w_fsdp"),
+    }
+    if qk_norm:
+        a["q_norm"] = {"scale": ("head_dim",)}
+        a["k_norm"] = {"scale": ("head_dim",)}
+    return a
+
+
+def _project_qkv(params, x, positions, qk_norm: bool, rope_theta: float):
+    """x (B, S, D) -> q (B, S, G, P, H), k/v (B, S, G, H)."""
+    q = jnp.einsum("bsd,dgph->bsgph", x, params["wq"])
+    k = jnp.einsum("bsd,dgh->bsgh", x, params["wk"])
+    v = jnp.einsum("bsd,dgh->bsgh", x, params["wv"])
+    if qk_norm:
+        q = apply_norm(params["q_norm"], q, "rms")
+        k = apply_norm(params["k_norm"], k, "rms")
+    # rope over the seq axis: move seq next-to-last
+    q = apply_rope(jnp.moveaxis(q, 1, 3), positions[:, None, None, :],
+                   rope_theta)
+    q = jnp.moveaxis(q, 3, 1)
+    k = apply_rope(jnp.moveaxis(k, 1, 2), positions[:, None, :], rope_theta)
+    k = jnp.moveaxis(k, 2, 1)
+    return q, k, v
+
+
+def chunked_causal_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                             *, chunk: int = 512,
+                             causal: bool = True,
+                             q_offset: int = 0) -> jax.Array:
+    """Online-softmax attention over KV chunks.
+
+    q: (B, Sq, G, P, H); k, v: (B, Skv, G, H). Returns (B, Sq, G, P, H).
+    """
+    B, Sq, G, Pp, H = q.shape
+    Skv = k.shape[1]
+    chunk = min(chunk, Skv)
+    n_chunks = -(-Skv // chunk)
+    pad = n_chunks * chunk - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = jnp.moveaxis(k.reshape(B, n_chunks, chunk, G, H), 1, 0)
+    vc = jnp.moveaxis(v.reshape(B, n_chunks, chunk, G, H), 1, 0)
+
+    qf = q.astype(jnp.float32) * (q.shape[-1] ** -0.5)
+    q_pos = q_offset + jnp.arange(Sq)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kblk, vblk, c_ix = inp
+        kv_pos = c_ix * chunk + jnp.arange(chunk)
+        s = jnp.einsum("bsgph,bcgh->bsgpc", qf, kblk.astype(jnp.float32))
+        mask = kv_pos[None, :] <= q_pos[:, None] if causal else \
+            (kv_pos < Skv)[None, :].repeat(Sq, 0)
+        mask = mask & (kv_pos < Skv)[None, :]
+        s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + p.sum(-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bsgpc,bcgh->bsgph", p, vblk.astype(jnp.float32))
+        return (m_new, l, acc), None
+
+    init = (jnp.full((B, Sq, G, Pp), NEG_INF, jnp.float32),
+            jnp.zeros((B, Sq, G, Pp), jnp.float32),
+            jnp.zeros((B, Sq, G, Pp, H), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(
+        body, init, (kc, vc, jnp.arange(n_chunks)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.astype(q.dtype)
+
+
+def attend_train(params: dict, x: jax.Array, *, qk_norm: bool,
+                 rope_theta: float, chunk: int = 512,
+                 causal: bool = True) -> jax.Array:
+    """Full self-attention for train / prefill. x: (B, S, D)."""
+    B, S, D = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    q, k, v = _project_qkv(params, x, positions, qk_norm, rope_theta)
+    # context parallelism: queries sharded over 'model', KV replicated
+    q = constrain(q, "batch", "seq_q", "kv_heads", "heads", "head_dim")
+    k = constrain(k, "batch", "seq_kv", "kv_heads", "head_dim")
+    v = constrain(v, "batch", "seq_kv", "kv_heads", "head_dim")
+    out = chunked_causal_attention(q, k, v, chunk=chunk, causal=causal)
+    out = jnp.einsum("bsgph,gphd->bsd", out, params["wo"])
+    return constrain(out, "batch", "seq", "embed")
+
+
+def attend_decode(params: dict, x: jax.Array, cache_k: jax.Array,
+                  cache_v: jax.Array, cur_len: jax.Array, *,
+                  qk_norm: bool, rope_theta: float):
+    """One-token decode against a KV cache.
+
+    x: (B, 1, D); cache_k/v: (B, S_max, G, H) (seq sharded over 'model').
+    Returns (out (B, 1, D), new cache_k, new cache_v).
+    """
+    B, _, D = x.shape
+    S_max = cache_k.shape[1]
+    positions = jnp.broadcast_to(cur_len, (B, 1)).astype(jnp.int32)
+    q, k, v = _project_qkv(params, x, positions, qk_norm, rope_theta)
+
+    # one-hot masked write instead of dynamic_update_slice: a DUS with a
+    # dynamic offset along the sharded 'cache_seq' axis makes GSPMD
+    # all-gather the whole cache per step (~1.1 GB/layer at qwen3
+    # decode_32k scale — EXPERIMENTS.md qwen3 iteration 2). The masked
+    # select is elementwise, so every shard updates its local slice with
+    # zero collective traffic.
+    slot = (jnp.arange(S_max) == cur_len)[None, :, None, None]
+    cache_k = jnp.where(slot, k.astype(cache_k.dtype), cache_k)
+    cache_v = jnp.where(slot, v.astype(cache_v.dtype), cache_v)
+    cache_k = constrain(cache_k, "batch", "cache_seq", "kv_heads",
+                        "head_dim")
+    cache_v = constrain(cache_v, "batch", "cache_seq", "kv_heads",
+                        "head_dim")
+
+    qf = q.astype(jnp.float32) * (q.shape[-1] ** -0.5)
+    s = jnp.einsum("bsgph,bcgh->bsgpc", qf,
+                   cache_k.astype(jnp.float32))          # (B,1,G,P,S_max)
+    valid = jnp.arange(S_max)[None, :] <= cur_len
+    s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bsgpc,bcgh->bsgph", p, cache_v.astype(jnp.float32))
+    out = jnp.einsum("bsgph,gphd->bsd", out.astype(x.dtype), params["wo"])
+    return constrain(out, "batch", "seq", "embed"), cache_k, cache_v

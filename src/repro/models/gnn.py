@@ -1,0 +1,156 @@
+"""MeshGraphNet (Pfaff et al., arXiv:2010.03409): encode-process-decode
+MPNN with edge+node MLP updates and sum aggregation.
+
+Message passing is ``jax.ops.segment_sum`` over an edge index — the JAX
+substrate for sparse aggregation (no CSR SpMM; see kernel_taxonomy §GNN).
+Graphs are padded-dense: {node_feat, edge_feat, senders, receivers,
+node_mask, edge_mask}; batched small graphs (the molecule shape) are
+flattened into one disjoint union by the data layer.
+
+Distribution: edges and nodes shard over the combined data axes; the
+segment-sum runs over the locally-owned edge slice and XLA inserts the
+scatter-reduce collective for cross-shard receivers (full-graph shapes), or
+everything stays local for sampled minibatches.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models.layers import apply_norm, norm_init
+
+
+@dataclasses.dataclass(frozen=True)
+class GNNConfig:
+    name: str
+    node_in: int
+    edge_in: int
+    node_out: int
+    n_layers: int = 15
+    d_hidden: int = 128
+    mlp_layers: int = 2
+    aggregator: str = "sum"
+    dtype: str = "float32"
+    unroll: int = 1   # dry-run sets n_layers for honest cost_analysis
+
+
+def _mlp_init(key, dims, dtype):
+    ks = jax.random.split(key, len(dims) - 1)
+    return {
+        f"l{i}": {
+            "w": (jax.random.normal(ks[i], (dims[i], dims[i + 1]),
+                                    jnp.float32)
+                  * (1.0 / jnp.sqrt(dims[i]))).astype(dtype),
+            "b": jnp.zeros((dims[i + 1],), dtype),
+        }
+        for i in range(len(dims) - 1)
+    }
+
+
+def _mlp_apply(p, x):
+    n = len(p)
+    for i in range(n):
+        x = x @ p[f"l{i}"]["w"] + p[f"l{i}"]["b"]
+        if i < n - 1:
+            x = jax.nn.relu(x)
+    return x
+
+
+def _mlp_axes(dims):
+    return {f"l{i}": {"w": ("w_fsdp", "w_out"), "b": ("w_out",)}
+            for i in range(len(dims) - 1)}
+
+
+def init_params(key, cfg: GNNConfig) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    d = cfg.d_hidden
+    hidden = [d] * cfg.mlp_layers
+    ks = jax.random.split(key, 4)
+
+    def layer_init(k):
+        k1, k2 = jax.random.split(k)
+        return {
+            "edge_mlp": _mlp_init(k1, [3 * d] + hidden + [d], dt),
+            "edge_ln": norm_init("ln", d, dt),
+            "node_mlp": _mlp_init(k2, [2 * d] + hidden + [d], dt),
+            "node_ln": norm_init("ln", d, dt),
+        }
+
+    layers = jax.vmap(layer_init)(jax.random.split(ks[2], cfg.n_layers))
+    return {
+        "node_enc": _mlp_init(ks[0], [cfg.node_in] + hidden + [d], dt),
+        "edge_enc": _mlp_init(ks[1], [cfg.edge_in] + hidden + [d], dt),
+        "layers": layers,
+        "decoder": _mlp_init(ks[3], [d] + hidden + [cfg.node_out], dt),
+    }
+
+
+def param_axes(cfg: GNNConfig) -> dict:
+    d = cfg.d_hidden
+    hidden = [d] * cfg.mlp_layers
+
+    def stack(ax):
+        return jax.tree_util.tree_map(
+            lambda t: ("layers",) + t, ax,
+            is_leaf=lambda x: isinstance(x, tuple) and all(
+                isinstance(a, (str, type(None))) for a in x))
+
+    layer_ax = {
+        "edge_mlp": stack(_mlp_axes([3 * d] + hidden + [d])),
+        "edge_ln": stack({"scale": ("feat",), "bias": ("feat",)}),
+        "node_mlp": stack(_mlp_axes([2 * d] + hidden + [d])),
+        "node_ln": stack({"scale": ("feat",), "bias": ("feat",)}),
+    }
+    return {
+        "node_enc": _mlp_axes([cfg.node_in] + hidden + [d]),
+        "edge_enc": _mlp_axes([cfg.edge_in] + hidden + [d]),
+        "layers": layer_ax,
+        "decoder": _mlp_axes([d] + hidden + [cfg.node_out]),
+    }
+
+
+def forward(params: dict, graph: dict, cfg: GNNConfig) -> jax.Array:
+    """graph: node_feat (N, Fn), edge_feat (E, Fe), senders/receivers (E,),
+    node_mask (N,), edge_mask (E,). Returns (N, node_out)."""
+    n_nodes = graph["node_feat"].shape[0]
+    h = _mlp_apply(params["node_enc"], graph["node_feat"])
+    e = _mlp_apply(params["edge_enc"], graph["edge_feat"])
+    h = constrain(h, "nodes", "feat")
+    e = constrain(e, "edges", "feat")
+    snd = graph["senders"]
+    rcv = graph["receivers"]
+    emask = graph["edge_mask"][:, None].astype(h.dtype)
+
+    def layer(carry, lp):
+        h, e = carry
+        msg_in = jnp.concatenate([e, h[snd], h[rcv]], axis=-1)
+        e_new = _mlp_apply(lp["edge_mlp"], msg_in)
+        e_new = apply_norm(lp["edge_ln"], e_new, "ln")
+        e = e + e_new * emask
+        e = constrain(e, "edges", "feat")
+        agg = jax.ops.segment_sum(e * emask, rcv, num_segments=n_nodes)
+        if cfg.aggregator == "mean":
+            deg = jax.ops.segment_sum(emask, rcv, num_segments=n_nodes)
+            agg = agg / jnp.maximum(deg, 1.0)
+        h_new = _mlp_apply(lp["node_mlp"], jnp.concatenate([h, agg], -1))
+        h_new = apply_norm(lp["node_ln"], h_new, "ln")
+        h = h + h_new
+        h = constrain(h, "nodes", "feat")
+        return (h, e), None
+
+    (h, e), _ = jax.lax.scan(layer, (h, e), params["layers"],
+                             unroll=cfg.unroll)
+    out = _mlp_apply(params["decoder"], h)
+    return out * graph["node_mask"][:, None].astype(out.dtype)
+
+
+def loss_fn(params: dict, graph: dict, cfg: GNNConfig) -> jax.Array:
+    """L2 regression against graph['target'] (N, node_out)."""
+    pred = forward(params, graph, cfg)
+    mask = graph["node_mask"][:, None].astype(pred.dtype)
+    err = (pred - graph["target"]) ** 2 * mask
+    return jnp.sum(err) / jnp.maximum(jnp.sum(mask), 1.0)

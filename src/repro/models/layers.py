@@ -1,0 +1,151 @@
+"""Shared neural building blocks (pure JAX, params = nested dicts)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+
+
+def truncated_normal_init(key, shape, scale: float, dtype=jnp.float32):
+    stddev = scale / max(1.0, (shape[0] if shape else 1)) ** 0.5
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * stddev).astype(dtype)
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32):
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32)
+            * (1.0 / jnp.sqrt(d_in))).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms: rms | ln | nonparam_ln (OLMo's non-parametric LayerNorm)
+# ---------------------------------------------------------------------------
+
+def norm_init(norm: str, dim: int, dtype=jnp.float32) -> dict:
+    if norm == "rms":
+        return {"scale": jnp.ones((dim,), dtype)}
+    if norm == "ln":
+        return {"scale": jnp.ones((dim,), dtype),
+                "bias": jnp.zeros((dim,), dtype)}
+    if norm == "nonparam_ln":
+        return {}
+    raise ValueError(f"unknown norm {norm!r}")
+
+
+def apply_norm(params: dict, x: jax.Array, norm: str,
+               eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    if norm == "rms":
+        x = x * jax.lax.rsqrt(jnp.mean(x * x, -1, keepdims=True) + eps)
+        x = x * params["scale"].astype(jnp.float32)
+    else:
+        mu = jnp.mean(x, -1, keepdims=True)
+        var = jnp.mean((x - mu) ** 2, -1, keepdims=True)
+        x = (x - mu) * jax.lax.rsqrt(var + eps)
+        if norm == "ln":
+            x = x * params["scale"].astype(jnp.float32) + \
+                params["bias"].astype(jnp.float32)
+    return x.astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# MLP: swiglu | gelu
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d_model: int, d_ff: int, act: str,
+             dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 3)
+    p = {"w_up": dense_init(ks[0], d_model, d_ff, dtype),
+         "w_down": dense_init(ks[1], d_ff, d_model, dtype)}
+    if act == "swiglu":
+        p["w_gate"] = dense_init(ks[2], d_model, d_ff, dtype)
+    return p
+
+
+def mlp_axes(act: str) -> dict:
+    a = {"w_up": ("w_fsdp", "w_mlp"), "w_down": ("w_mlp", "w_fsdp")}
+    if act == "swiglu":
+        a["w_gate"] = ("w_fsdp", "w_mlp")
+    return a
+
+
+def apply_mlp(params: dict, x: jax.Array, act: str) -> jax.Array:
+    up = x @ params["w_up"]
+    up = constrain(up, "batch", "seq", "mlp")
+    if act == "swiglu":
+        gate = x @ params["w_gate"]
+        h = jax.nn.silu(gate) * up
+    elif act == "gelu":
+        h = jax.nn.gelu(up)
+    else:
+        raise ValueError(f"unknown act {act!r}")
+    out = h @ params["w_down"]
+    return constrain(out, "batch", "seq", "embed")
+
+
+def mlp_stack_init(key, dims: list[int], dtype=jnp.float32,
+                   final_bias: bool = True) -> dict:
+    """Plain MLP tower ([in, h1, ..., out]) with biases — recsys/GNN use."""
+    ks = jax.random.split(key, len(dims) - 1)
+    return {
+        f"layer{i}": {
+            "w": dense_init(ks[i], dims[i], dims[i + 1], dtype),
+            "b": jnp.zeros((dims[i + 1],), dtype),
+        }
+        for i in range(len(dims) - 1)
+    }
+
+
+def apply_mlp_stack(params: dict, x: jax.Array, act=jax.nn.relu,
+                    final_act: bool = False) -> jax.Array:
+    n = len(params)
+    for i in range(n):
+        p = params[f"layer{i}"]
+        x = x @ p["w"] + p["b"]
+        if i < n - 1 or final_act:
+            x = act(x)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (GPT-NeoX half-rotation convention)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(d_head: int, theta: float) -> jax.Array:
+    return 1.0 / theta ** (jnp.arange(0, d_head, 2, jnp.float32) / d_head)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array,
+               theta: float = 1e4) -> jax.Array:
+    """x: (..., seq, d_head); positions: (..., seq) int32."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (d/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (...,s,d/2)
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+def cross_entropy_loss(logits: jax.Array, labels: jax.Array,
+                       mask: jax.Array | None = None) -> jax.Array:
+    """Mean CE over valid positions; logits (..., V) may be vocab-sharded.
+
+    The label log-prob is extracted with a masked reduction instead of
+    ``take_along_axis`` — a gather across a sharded vocab axis makes XLA
+    all-gather the full logits (hundreds of GB at 150k vocab); the masked
+    sum partitions cleanly (local reduce + psum).
+    """
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    vocab_ids = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                         logits.ndim - 1)
+    ll = jnp.sum(jnp.where(vocab_ids == labels[..., None], logits, 0.0),
+                 axis=-1)
+    nll = lse - ll
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,382 @@
+"""RecSys architectures: DLRM (MLPerf), DIN, DeepFM, BERT4Rec.
+
+Common shape: huge row-sharded embedding tables -> feature interaction
+(dot / FM / target-attention / bidirectional self-attention) -> small MLP.
+Per-field tables with uniform vocab are stacked into one (F * R, D) array
+(ids offset by field * R) so a single row-sharded lookup serves all fields.
+
+``retrieval_score`` implements the ``retrieval_cand`` shape for each arch:
+one query scored against a candidate block — candidates shard over 'model'
+and everything is batched matmul, never a loop.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models.embedding import (embedding_init, embedding_lookup)
+from repro.models.layers import (apply_mlp_stack, apply_norm,
+                                 mlp_stack_init, norm_init)
+
+
+def _bce(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    z = logits.reshape(-1).astype(jnp.float32)
+    y = labels.reshape(-1).astype(jnp.float32)
+    return jnp.mean(jnp.maximum(z, 0) - z * y + jnp.log1p(jnp.exp(-jnp.abs(z))))
+
+
+def _mlp_stack_axes(n: int) -> dict:
+    return {f"layer{i}": {"w": ("w_fsdp", "w_out"), "b": ("w_out",)}
+            for i in range(n)}
+
+
+# ===========================================================================
+# DLRM (MLPerf config, arXiv:1906.00091)
+# ===========================================================================
+
+@dataclasses.dataclass(frozen=True)
+class DLRMConfig:
+    name: str = "dlrm-mlperf"
+    n_dense: int = 13
+    n_sparse: int = 26
+    embed_dim: int = 128
+    vocab_per_table: int = 4_000_000
+    bot_mlp: tuple = (512, 256, 128)
+    top_mlp: tuple = (1024, 1024, 512, 256, 1)
+    interaction: str = "dot"
+    dtype: str = "float32"
+
+    @property
+    def n_pairs(self) -> int:
+        f = self.n_sparse + 1
+        return f * (f - 1) // 2
+
+    @property
+    def top_in(self) -> int:
+        return self.n_pairs + self.bot_mlp[-1]
+
+
+def dlrm_init(key, cfg: DLRMConfig) -> dict:
+    ks = jax.random.split(key, 3)
+    return {
+        "tables": embedding_init(
+            ks[0], cfg.n_sparse * cfg.vocab_per_table, cfg.embed_dim),
+        "bot": mlp_stack_init(ks[1], [cfg.n_dense, *cfg.bot_mlp]),
+        "top": mlp_stack_init(ks[2], [cfg.top_in, *cfg.top_mlp]),
+    }
+
+
+def dlrm_axes(cfg: DLRMConfig) -> dict:
+    return {
+        "tables": ("table_rows", "embed"),
+        "bot": _mlp_stack_axes(len(cfg.bot_mlp)),
+        "top": _mlp_stack_axes(len(cfg.top_mlp)),
+    }
+
+
+def _dot_interaction(vectors: jax.Array) -> jax.Array:
+    """vectors (B, F, D) -> (B, F*(F-1)/2) upper-tri pairwise dots."""
+    z = jnp.einsum("bfd,bgd->bfg", vectors, vectors)
+    f = vectors.shape[1]
+    iu, ju = jnp.triu_indices(f, k=1)
+    return z[:, iu, ju]
+
+
+def dlrm_forward(params: dict, batch: dict, cfg: DLRMConfig) -> jax.Array:
+    """batch: dense (B, 13) f32, sparse (B, 26) int32 -> logits (B,)."""
+    ids = batch["sparse"] + (jnp.arange(cfg.n_sparse, dtype=jnp.int32)
+                             * cfg.vocab_per_table)[None, :]
+    emb = embedding_lookup(params["tables"], ids)          # (B, 26, D)
+    emb = constrain(emb, "batch", "fields", "embed")
+    bot = apply_mlp_stack(params["bot"], batch["dense"], final_act=True)
+    x = jnp.concatenate([bot[:, None, :], emb], axis=1)    # (B, 27, D)
+    inter = _dot_interaction(x)                            # (B, 351)
+    top_in = jnp.concatenate([bot, inter], axis=-1)
+    logit = apply_mlp_stack(params["top"], top_in)[:, 0]
+    return constrain(logit, "batch")
+
+
+def dlrm_loss(params: dict, batch: dict, cfg: DLRMConfig) -> jax.Array:
+    return _bce(dlrm_forward(params, batch, cfg), batch["labels"])
+
+
+def dlrm_retrieval(params: dict, batch: dict, cfg: DLRMConfig) -> jax.Array:
+    """One user against a candidate block: candidates replace sparse field
+    0 and the user context is broadcast. batch: dense (1, 13),
+    sparse (1, 26), cand_ids (C,). Returns (C,) scores."""
+    c = batch["cand_ids"].shape[0]
+    sparse = jnp.broadcast_to(batch["sparse"], (c, cfg.n_sparse))
+    sparse = sparse.at[:, 0].set(batch["cand_ids"])
+    dense = jnp.broadcast_to(batch["dense"], (c, cfg.n_dense))
+    return dlrm_forward(params, {"dense": dense, "sparse": sparse}, cfg)
+
+
+# ===========================================================================
+# DIN (arXiv:1706.06978)
+# ===========================================================================
+
+@dataclasses.dataclass(frozen=True)
+class DINConfig:
+    name: str = "din"
+    embed_dim: int = 18
+    seq_len: int = 100
+    attn_mlp: tuple = (80, 40)
+    mlp: tuple = (200, 80)
+    n_items: int = 1_000_000
+    n_cates: int = 10_000
+    dtype: str = "float32"
+
+    @property
+    def feat_dim(self) -> int:          # item ++ category embedding
+        return 2 * self.embed_dim
+
+
+def din_init(key, cfg: DINConfig) -> dict:
+    ks = jax.random.split(key, 4)
+    f = cfg.feat_dim
+    return {
+        "item_emb": embedding_init(ks[0], cfg.n_items, cfg.embed_dim),
+        "cate_emb": embedding_init(ks[1], cfg.n_cates, cfg.embed_dim),
+        "attn": mlp_stack_init(ks[2], [4 * f, *cfg.attn_mlp, 1]),
+        "mlp": mlp_stack_init(ks[3], [3 * f, *cfg.mlp, 1]),
+    }
+
+
+def din_axes(cfg: DINConfig) -> dict:
+    return {
+        "item_emb": ("table_rows", "embed"),
+        "cate_emb": ("table_rows", "embed"),
+        "attn": _mlp_stack_axes(len(cfg.attn_mlp) + 1),
+        "mlp": _mlp_stack_axes(len(cfg.mlp) + 1),
+    }
+
+
+def _din_feat(params, items, cates):
+    return jnp.concatenate([embedding_lookup(params["item_emb"], items),
+                            embedding_lookup(params["cate_emb"], cates)],
+                           axis=-1)
+
+
+def din_forward(params: dict, batch: dict, cfg: DINConfig) -> jax.Array:
+    """batch: hist_items/hist_cates (B, L), hist_mask (B, L),
+    target_item/target_cate (B,) -> logits (B,)."""
+    h = _din_feat(params, batch["hist_items"], batch["hist_cates"])
+    t = _din_feat(params, batch["target_item"], batch["target_cate"])
+    h = constrain(h, "batch", "seq", "embed")
+    tb = jnp.broadcast_to(t[:, None, :], h.shape)
+    att_in = jnp.concatenate([h, tb, h - tb, h * tb], axis=-1)
+    w = apply_mlp_stack(params["attn"], att_in)[..., 0]     # (B, L)
+    w = jnp.where(batch["hist_mask"], w, -1e30)
+    w = jax.nn.softmax(w, axis=-1)
+    user = jnp.einsum("bl,blf->bf", w, h)
+    x = jnp.concatenate([user, t, user * t], axis=-1)
+    return apply_mlp_stack(params["mlp"], x)[:, 0]
+
+
+def din_loss(params: dict, batch: dict, cfg: DINConfig) -> jax.Array:
+    return _bce(din_forward(params, batch, cfg), batch["labels"])
+
+
+def din_retrieval(params: dict, batch: dict, cfg: DINConfig) -> jax.Array:
+    """One user history vs candidate block. batch: hist_* (1, L),
+    cand_items (C,), cand_cates (C,)."""
+    c = batch["cand_items"].shape[0]
+    rep = {
+        "hist_items": jnp.broadcast_to(batch["hist_items"],
+                                       (c, cfg.seq_len)),
+        "hist_cates": jnp.broadcast_to(batch["hist_cates"],
+                                       (c, cfg.seq_len)),
+        "hist_mask": jnp.broadcast_to(batch["hist_mask"], (c, cfg.seq_len)),
+        "target_item": batch["cand_items"],
+        "target_cate": batch["cand_cates"],
+    }
+    return din_forward(params, rep, cfg)
+
+
+# ===========================================================================
+# DeepFM (arXiv:1703.04247)
+# ===========================================================================
+
+@dataclasses.dataclass(frozen=True)
+class DeepFMConfig:
+    name: str = "deepfm"
+    n_fields: int = 39
+    embed_dim: int = 10
+    vocab_per_field: int = 1_000_000
+    mlp: tuple = (400, 400, 400)
+    dtype: str = "float32"
+
+
+def deepfm_init(key, cfg: DeepFMConfig) -> dict:
+    ks = jax.random.split(key, 3)
+    rows = cfg.n_fields * cfg.vocab_per_field
+    return {
+        "emb": embedding_init(ks[0], rows, cfg.embed_dim),
+        "w1": embedding_init(ks[1], rows, 1),
+        "mlp": mlp_stack_init(
+            ks[2], [cfg.n_fields * cfg.embed_dim, *cfg.mlp, 1]),
+        "bias": jnp.zeros((), jnp.float32),
+    }
+
+
+def deepfm_axes(cfg: DeepFMConfig) -> dict:
+    return {
+        "emb": ("table_rows", "embed"),
+        "w1": ("table_rows", "embed"),
+        "mlp": _mlp_stack_axes(len(cfg.mlp) + 1),
+        "bias": (),
+    }
+
+
+def deepfm_forward(params: dict, batch: dict, cfg: DeepFMConfig
+                   ) -> jax.Array:
+    """batch: fields (B, 39) int32 -> logits (B,)."""
+    ids = batch["fields"] + (jnp.arange(cfg.n_fields, dtype=jnp.int32)
+                             * cfg.vocab_per_field)[None, :]
+    e = embedding_lookup(params["emb"], ids)                # (B, F, D)
+    e = constrain(e, "batch", "fields", "embed")
+    first = embedding_lookup(params["w1"], ids)[..., 0].sum(-1)
+    s = e.sum(axis=1)
+    fm = 0.5 * (s * s - (e * e).sum(axis=1)).sum(-1)
+    deep = apply_mlp_stack(params["mlp"],
+                           e.reshape(e.shape[0], -1))[:, 0]
+    return params["bias"] + first + fm + deep
+
+
+def deepfm_loss(params: dict, batch: dict, cfg: DeepFMConfig) -> jax.Array:
+    return _bce(deepfm_forward(params, batch, cfg), batch["labels"])
+
+
+def deepfm_retrieval(params: dict, batch: dict, cfg: DeepFMConfig
+                     ) -> jax.Array:
+    c = batch["cand_ids"].shape[0]
+    fields = jnp.broadcast_to(batch["fields"], (c, cfg.n_fields))
+    fields = fields.at[:, 0].set(batch["cand_ids"])
+    return deepfm_forward(params, {"fields": fields}, cfg)
+
+
+# ===========================================================================
+# BERT4Rec (arXiv:1904.06690)
+# ===========================================================================
+
+@dataclasses.dataclass(frozen=True)
+class Bert4RecConfig:
+    name: str = "bert4rec"
+    n_items: int = 1_000_000
+    embed_dim: int = 64
+    n_blocks: int = 2
+    n_heads: int = 2
+    seq_len: int = 200
+    n_negatives: int = 1024      # sampled softmax at 10^6-item catalogs
+    dtype: str = "float32"
+
+
+def bert4rec_init(key, cfg: Bert4RecConfig) -> dict:
+    d = cfg.embed_dim
+    ks = jax.random.split(key, 3)
+
+    def block_init(k):
+        kk = jax.random.split(k, 4)
+        init = lambda k_, i, o: (jax.random.normal(k_, (i, o), jnp.float32)
+                                 / jnp.sqrt(i))
+        return {
+            "wq": init(kk[0], d, d), "wk": init(kk[1], d, d),
+            "wv": init(kk[2], d, d), "wo": init(kk[3], d, d),
+            "ln1": norm_init("ln", d), "ln2": norm_init("ln", d),
+            "ff1": {"w": init(jax.random.fold_in(kk[0], 1), d, 4 * d),
+                    "b": jnp.zeros((4 * d,))},
+            "ff2": {"w": init(jax.random.fold_in(kk[1], 1), 4 * d, d),
+                    "b": jnp.zeros((d,))},
+        }
+
+    blocks = jax.vmap(block_init)(jax.random.split(ks[0], cfg.n_blocks))
+    return {
+        # +1 row: the [MASK] item; rows padded so the row-sharded table
+        # divides the 'model' mesh axis (n_items+1 is odd).
+        "item_emb": embedding_init(ks[1], cfg.n_items + 1, d, 0.02,
+                                   pad_rows_to=2048),
+        "pos_emb": embedding_init(ks[2], cfg.seq_len, d, 0.02),
+        "blocks": blocks,
+        "final_ln": norm_init("ln", d),
+    }
+
+
+def bert4rec_axes(cfg: Bert4RecConfig) -> dict:
+    def s(t):
+        return ("layers",) + t
+    block_ax = {
+        "wq": s(("embed", "w_out")), "wk": s(("embed", "w_out")),
+        "wv": s(("embed", "w_out")), "wo": s(("embed", "w_out")),
+        "ln1": {"scale": s(("embed",)), "bias": s(("embed",))},
+        "ln2": {"scale": s(("embed",)), "bias": s(("embed",))},
+        "ff1": {"w": s(("embed", "w_out")), "b": s(("w_out",))},
+        "ff2": {"w": s(("w_out", "embed")), "b": s(("embed",))},
+    }
+    return {"item_emb": ("table_rows", "embed"), "pos_emb": ("seq", "embed"),
+            "blocks": block_ax, "final_ln": {"scale": ("embed",),
+                                             "bias": ("embed",)}}
+
+
+def bert4rec_encode(params: dict, batch: dict, cfg: Bert4RecConfig
+                    ) -> jax.Array:
+    """batch: items (B, L) int32 (n_items == MASK), mask (B, L) bool.
+    Returns hidden (B, L, D)."""
+    items, mask = batch["items"], batch["mask"]
+    d, h = cfg.embed_dim, cfg.n_heads
+    x = embedding_lookup(params["item_emb"], items) + params["pos_emb"]
+    x = constrain(x, "batch", "seq", "embed")
+    neg = jnp.float32(-1e30)
+
+    def block(x, bp):
+        y = apply_norm(bp["ln1"], x, "ln")
+        B, L, _ = y.shape
+        q = (y @ bp["wq"]).reshape(B, L, h, d // h)
+        k = (y @ bp["wk"]).reshape(B, L, h, d // h)
+        v = (y @ bp["wv"]).reshape(B, L, h, d // h)
+        s = jnp.einsum("blhd,bmhd->bhlm", q, k) / jnp.sqrt(d // h)
+        s = jnp.where(mask[:, None, None, :], s, neg)
+        a = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhlm,bmhd->blhd", a, v).reshape(B, L, d)
+        x = x + o @ bp["wo"]
+        y = apply_norm(bp["ln2"], x, "ln")
+        y = jax.nn.gelu(y @ bp["ff1"]["w"] + bp["ff1"]["b"])
+        x = x + (y @ bp["ff2"]["w"] + bp["ff2"]["b"])
+        return x, None
+
+    x, _ = jax.lax.scan(block, x, params["blocks"],
+                        unroll=cfg.n_blocks)
+    return apply_norm(params["final_ln"], x, "ln")
+
+
+def bert4rec_loss(params: dict, batch: dict, cfg: Bert4RecConfig
+                  ) -> jax.Array:
+    """Masked-item prediction with sampled softmax (n_negatives shared
+    negatives — a 10^6-item full softmax over B x L positions is neither
+    feasible nor standard at this catalog size).
+
+    batch adds: labels (B, L) int32, label_mask (B, L) bool,
+    negatives (n_negatives,) int32.
+    """
+    hidden = bert4rec_encode(params, batch, cfg)             # (B, L, D)
+    pos_emb = embedding_lookup(params["item_emb"], batch["labels"])
+    neg_emb = embedding_lookup(params["item_emb"], batch["negatives"])
+    pos_logit = jnp.einsum("bld,bld->bl", hidden, pos_emb)
+    neg_logit = jnp.einsum("bld,nd->bln", hidden, neg_emb)
+    logits = jnp.concatenate([pos_logit[..., None], neg_logit], axis=-1)
+    nll = (jax.nn.logsumexp(logits, axis=-1) - pos_logit)
+    w = batch["label_mask"].astype(jnp.float32)
+    return jnp.sum(nll * w) / jnp.maximum(jnp.sum(w), 1.0)
+
+
+def bert4rec_retrieval(params: dict, batch: dict, cfg: Bert4RecConfig
+                       ) -> jax.Array:
+    """Encode once, dot against the candidate block. batch: items (1, L),
+    mask (1, L), cand_ids (C,). Returns (C,)."""
+    hidden = bert4rec_encode(params, batch, cfg)[:, -1, :]   # (1, D)
+    cand = embedding_lookup(params["item_emb"], batch["cand_ids"])
+    cand = constrain(cand, "candidates", "embed")
+    return (cand @ hidden[0]).astype(jnp.float32)

@@ -1,0 +1,118 @@
+"""SPLADE-like learned sparse encoder (paper §3.4 substrate).
+
+A bidirectional transformer encoder with a tied MLM head; the sparse
+document/query representation is ``max_pool_over_positions(log1p(relu(
+mlm_logits)))`` (SPLADE's activation). The same forward pass also emits the
+*max-pooled dense token embeddings* the paper clusters with (Table 2's
+winning "Dense-SPLADE-Max" option) — one encoder feeds both the inverted
+index and the k-means clustering.
+
+Training: in-batch-negative InfoNCE between query and document sparse
+vectors + SPLADE's FLOPS regularizer (sum-of-mean-activations squared) to
+control posting-list density.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models import attention as attn
+from repro.models.layers import (apply_mlp, apply_norm, mlp_init, norm_init,
+                                 truncated_normal_init)
+
+
+@dataclasses.dataclass(frozen=True)
+class SparseEncConfig:
+    name: str = "splade-encoder"
+    vocab: int = 30522
+    d_model: int = 256
+    n_layers: int = 4
+    n_heads: int = 4
+    d_ff: int = 1024
+    max_seq: int = 128
+    flops_reg: float = 1e-3
+    dtype: str = "float32"
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+
+def init_params(key, cfg: SparseEncConfig) -> dict:
+    ks = jax.random.split(key, 3)
+
+    def layer_init(k):
+        k1, k2 = jax.random.split(k)
+        return {
+            "ln1": norm_init("ln", cfg.d_model),
+            "ln2": norm_init("ln", cfg.d_model),
+            "attn": attn.attn_init(k1, cfg.d_model, cfg.n_heads,
+                                   cfg.n_heads, cfg.head_dim, False),
+            "mlp": mlp_init(k2, cfg.d_model, cfg.d_ff, "gelu"),
+        }
+
+    layers = jax.vmap(layer_init)(jax.random.split(ks[0], cfg.n_layers))
+    return {
+        "embed": truncated_normal_init(ks[1], (cfg.vocab, cfg.d_model), 1.0),
+        "layers": layers,
+        "final_ln": norm_init("ln", cfg.d_model),
+        "mlm_bias": jnp.zeros((cfg.vocab,), jnp.float32),
+    }
+
+
+def encode(params: dict, tokens: jax.Array, mask: jax.Array,
+           cfg: SparseEncConfig) -> dict:
+    """tokens/mask (B, S) -> {sparse (B, V), dense_max (B, D),
+    token_emb (B, S, D)} — sparse vec + the clustering counterpart."""
+    x = params["embed"][tokens]
+    x = constrain(x, "batch", "seq", "embed")
+
+    def body(x, lp):
+        h = apply_norm(lp["ln1"], x, "ln")
+        x = x + attn.attend_train(lp["attn"], h, qk_norm=False,
+                                  rope_theta=1e4, chunk=cfg.max_seq,
+                                  causal=False)
+        h = apply_norm(lp["ln2"], x, "ln")
+        x = x + apply_mlp(lp["mlp"], h, "gelu")
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    x = apply_norm(params["final_ln"], x, "ln")
+
+    logits = x @ params["embed"].T + params["mlm_bias"]       # (B, S, V)
+    act = jnp.log1p(jax.nn.relu(logits))
+    neg = jnp.float32(-1e30)
+    live = mask[..., None]
+    sparse = jnp.max(jnp.where(live, act, 0.0), axis=1)       # (B, V)
+    dense_max = jnp.max(jnp.where(live, x, neg), axis=1)      # (B, D)
+    return {"sparse": sparse, "dense_max": dense_max, "token_emb": x}
+
+
+def contrastive_loss(params: dict, batch: dict,
+                     cfg: SparseEncConfig) -> jax.Array:
+    """In-batch InfoNCE + FLOPS regularizer. batch: q_tokens/q_mask (B, S),
+    d_tokens/d_mask (B, S); doc i is the positive of query i."""
+    q = encode(params, batch["q_tokens"], batch["q_mask"], cfg)["sparse"]
+    d = encode(params, batch["d_tokens"], batch["d_mask"], cfg)["sparse"]
+    scores = q @ d.T                                          # (B, B)
+    labels = jnp.arange(q.shape[0])
+    nll = jax.nn.logsumexp(scores, -1) - jnp.take_along_axis(
+        scores, labels[:, None], -1)[:, 0]
+    flops = jnp.sum(jnp.mean(q, axis=0) ** 2) + jnp.sum(
+        jnp.mean(d, axis=0) ** 2)
+    return jnp.mean(nll) + cfg.flops_reg * flops
+
+
+def to_sparse_docs(sparse_mat: jax.Array, t_pad: int, vocab: int):
+    """Convert dense (B, V) sparse activations to padded SparseDocs form
+    (top-t_pad terms per doc)."""
+    from repro.core.types import SparseDocs
+    w, ids = jax.lax.top_k(sparse_mat, t_pad)
+    mask = w > 0.0
+    return SparseDocs(tids=ids.astype(jnp.int32),
+                      tw=jnp.where(mask, w, 0.0),
+                      mask=mask, vocab=vocab)

@@ -1,0 +1,335 @@
+"""Decoder-only LM: GQA + RoPE + (optional) qk-norm / non-parametric LN /
+MoE, with scan-over-layers (compile-time O(1) in depth) and selective
+remat. Covers stablelm-3b / qwen3-14b / olmo-1b / llama4-scout / olmoe.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models import attention as attn
+from repro.models import moe as moe_lib
+from repro.models.layers import (apply_mlp, apply_norm, cross_entropy_loss,
+                                 mlp_axes, mlp_init, norm_init,
+                                 truncated_normal_init)
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    d_head: int | None = None
+    norm: str = "rms"                    # rms | ln | nonparam_ln
+    qk_norm: bool = False
+    act: str = "swiglu"
+    rope_theta: float = 1e6
+    moe: moe_lib.MoEConfig | None = None
+    tie_embeddings: bool = False
+    dtype: str = "bfloat16"
+    remat: bool = True
+    # "nothing" = full remat (only layer inputs saved — the memory-safe
+    # default at these batch sizes); "dots" = save no-batch-dim dot
+    # outputs (faster, ~8x more activation memory) — a §Perf knob.
+    remat_policy: str = "nothing"
+    attn_chunk: int = 512
+    # scan-over-layers unroll factor. 1 = compile-time O(1) in depth (the
+    # production setting); n_layers = fully unrolled, used by the dry-run
+    # so cost_analysis / collective counts see every layer.
+    unroll: int = 1
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_head or self.d_model // self.n_heads
+
+    @property
+    def compute_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    def param_count(self) -> int:
+        D, F, V, L = self.d_model, self.d_ff, self.vocab, self.n_layers
+        H, G = self.head_dim, self.n_kv_heads
+        attn_p = D * (self.n_heads * H) * 2 + D * G * H * 2
+        if self.moe:
+            E, Fe = self.moe.n_experts, self.moe.d_ff_expert
+            n_mats = 3 if self.act == "swiglu" else 2
+            ffn_p = D * E + E * n_mats * D * Fe
+            if self.moe.n_shared:
+                ffn_p += n_mats * D * Fe * self.moe.n_shared
+        else:
+            ffn_p = (3 if self.act == "swiglu" else 2) * D * F
+        emb = V * D * (1 if self.tie_embeddings else 2)
+        return L * (attn_p + ffn_p) + emb
+
+    def active_param_count(self) -> int:
+        """Per-token active params (MoE: top_k + shared experts only)."""
+        if not self.moe:
+            return self.param_count()
+        D, L = self.d_model, self.n_layers
+        H, G = self.head_dim, self.n_kv_heads
+        attn_p = D * (self.n_heads * H) * 2 + D * G * H * 2
+        n_mats = 3 if self.act == "swiglu" else 2
+        Fe = self.moe.d_ff_expert
+        ffn_p = (D * self.moe.n_experts
+                 + (self.moe.top_k + self.moe.n_shared) * n_mats * D * Fe)
+        emb = self.vocab * D * (1 if self.tie_embeddings else 2)
+        return L * (attn_p + ffn_p) + emb
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _layer_init(key, cfg: LMConfig, dtype) -> dict:
+    ks = jax.random.split(key, 4)
+    p = {
+        "ln1": norm_init(cfg.norm, cfg.d_model),
+        "ln2": norm_init(cfg.norm, cfg.d_model),
+        "attn": attn.attn_init(ks[0], cfg.d_model, cfg.n_heads,
+                               cfg.n_kv_heads, cfg.head_dim, cfg.qk_norm,
+                               dtype),
+    }
+    if cfg.moe:
+        p["moe"] = moe_lib.moe_init(ks[1], cfg.d_model, cfg.moe, cfg.act,
+                                    dtype)
+    else:
+        p["mlp"] = mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.act, dtype)
+    return p
+
+
+def init_params(key, cfg: LMConfig, param_dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 3)
+    layer_keys = jax.random.split(ks[0], cfg.n_layers)
+    layers = jax.vmap(lambda k: _layer_init(k, cfg, param_dtype))(layer_keys)
+    p = {
+        "embed": truncated_normal_init(ks[1], (cfg.vocab, cfg.d_model), 1.0,
+                                       param_dtype),
+        "layers": layers,
+        "final_norm": norm_init(cfg.norm, cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = truncated_normal_init(
+            ks[2], (cfg.d_model, cfg.vocab), 1.0, param_dtype)
+    return p
+
+
+def layer_axes(cfg: LMConfig) -> dict:
+    """Per-layer logical axes WITHOUT the scanned 'layers' dim — the form
+    seen inside the scan body (used by the cast-site sharding constraint
+    in ``_cast_params``)."""
+    norm_ax = {} if cfg.norm == "nonparam_ln" else (
+        {"scale": ("embed",)} if cfg.norm == "rms"
+        else {"scale": ("embed",), "bias": ("embed",)})
+    ax: dict[str, Any] = {
+        "ln1": norm_ax, "ln2": norm_ax,
+        "attn": attn.attn_axes(cfg.qk_norm),
+    }
+    if cfg.moe:
+        ax["moe"] = moe_lib.moe_axes(cfg.moe, cfg.act)
+    else:
+        ax["mlp"] = mlp_axes(cfg.act)
+    return ax
+
+
+def param_axes(cfg: LMConfig) -> dict:
+    """Pytree of logical-axis tuples mirroring ``init_params`` output."""
+    norm_ax = {} if cfg.norm == "nonparam_ln" else (
+        {"scale": ("embed",)} if cfg.norm == "rms"
+        else {"scale": ("embed",), "bias": ("embed",)})
+
+    def stack(ax):  # add the scanned layer axis
+        return jax.tree_util.tree_map(
+            lambda t: ("layers",) + t, ax,
+            is_leaf=lambda x: isinstance(x, tuple) and all(
+                isinstance(a, (str, type(None))) for a in x))
+
+    layer_ax = stack(layer_axes(cfg))
+    p = {
+        "embed": ("w_vocab", "w_embed"),
+        "layers": layer_ax,
+        "final_norm": norm_ax,
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = ("w_embed", "w_vocab")
+    return p
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _cast_params(p: dict, dt, axes=None) -> dict:
+    """Cast f32 master weights to the compute dtype at use site (the
+    canonical mixed-precision pattern: optimizer sees f32, matmuls run
+    bf16).
+
+    With ``axes`` (matching pytree of logical-axis tuples, layer dim
+    stripped) each cast output is sharding-constrained to the param
+    layout: without the annotation GSPMD is free to all-gather the f32
+    master and convert afterwards — observed in rematted backward
+    regions, doubling FSDP wire bytes (EXPERIMENTS.md llama4 iter 4)."""
+    from repro.distributed.sharding import constrain as _constrain
+
+    def cast(w, ax=None):
+        if w.dtype == jnp.float32:
+            w = w.astype(dt)
+            if ax is not None:
+                w = _constrain(w, *ax)
+        return w
+
+    if axes is None:
+        return jax.tree_util.tree_map(cast, p)
+    return jax.tree_util.tree_map(
+        lambda ax, w: cast(w, ax), axes, p,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(a, (str, type(None))) for a in x))
+
+
+def _layer_fwd(lp: dict, x: jax.Array, cfg: LMConfig) -> tuple[jax.Array,
+                                                               jax.Array]:
+    lp = _cast_params(lp, cfg.compute_dtype, layer_axes(cfg))
+    h = apply_norm(lp["ln1"], x, cfg.norm)
+    x = x + attn.attend_train(lp["attn"], h, qk_norm=cfg.qk_norm,
+                              rope_theta=cfg.rope_theta,
+                              chunk=cfg.attn_chunk)
+    h = apply_norm(lp["ln2"], x, cfg.norm)
+    if cfg.moe:
+        y, aux = moe_lib.apply_moe(lp["moe"], h, cfg.moe, cfg.act)
+    else:
+        y, aux = apply_mlp(lp["mlp"], h, cfg.act), jnp.float32(0.0)
+    x = constrain(x + y, "batch", "seq", "embed")
+    return x, aux
+
+
+def forward(params: dict, tokens: jax.Array, cfg: LMConfig
+            ) -> tuple[jax.Array, jax.Array]:
+    """tokens (B, S) -> (logits (B, S, V), aux_loss)."""
+    dt = cfg.compute_dtype
+    x = params["embed"].astype(dt)[tokens]
+    x = constrain(x, "batch", "seq", "embed")
+
+    def body(x, lp):
+        fn = _layer_fwd
+        if cfg.remat:
+            policy = (jax.checkpoint_policies.nothing_saveable
+                      if cfg.remat_policy == "nothing" else
+                      jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+            fn = jax.checkpoint(fn, policy=policy, static_argnums=(2,))
+        x, aux = fn(lp, x, cfg)
+        return x, aux
+
+    x, aux = jax.lax.scan(lambda c, lp: body(c, lp), x, params["layers"],
+                          unroll=cfg.unroll)
+    x = apply_norm(_cast_params(params["final_norm"], dt), x, cfg.norm)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = x @ head.astype(dt)
+    return constrain(logits, "batch", "seq", "vocab"), aux.sum()
+
+
+def loss_fn(params: dict, batch: dict, cfg: LMConfig) -> jax.Array:
+    logits, aux = forward(params, batch["tokens"], cfg)
+    return cross_entropy_loss(logits, batch["labels"],
+                              batch.get("mask")) + aux
+
+
+def prefill(params: dict, tokens: jax.Array, cfg: LMConfig,
+            cache_dtype=jnp.bfloat16) -> tuple[jax.Array, dict]:
+    """Serving prefill: run the full sequence, emit the KV cache and the
+    *last-token* logits only (a (B, S, V) logits tensor at 32k x 150k vocab
+    would be hundreds of GB — never materialized)."""
+    dt = cfg.compute_dtype
+    B, S = tokens.shape
+    x = params["embed"].astype(dt)[tokens]
+    x = constrain(x, "batch", "seq", "embed")
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+    def body(x, lp):
+        lp = _cast_params(lp, dt, layer_axes(cfg))
+        h = apply_norm(lp["ln1"], x, cfg.norm)
+        q, k, v = attn._project_qkv(lp["attn"], h, positions, cfg.qk_norm,
+                                    cfg.rope_theta)
+        q = constrain(q, "batch", "seq_q", "kv_heads", "heads", "head_dim")
+        k = constrain(k, "batch", "cache_seq", "kv_heads", "head_dim")
+        v = constrain(v, "batch", "cache_seq", "kv_heads", "head_dim")
+        o = attn.chunked_causal_attention(q, k, v, chunk=cfg.attn_chunk)
+        o = jnp.einsum("bsgph,gphd->bsd", o, lp["attn"]["wo"])
+        x = x + constrain(o, "batch", "seq", "embed")
+        h = apply_norm(lp["ln2"], x, cfg.norm)
+        if cfg.moe:
+            y, _ = moe_lib.apply_moe(lp["moe"], h, cfg.moe, cfg.act)
+        else:
+            y = apply_mlp(lp["mlp"], h, cfg.act)
+        x = constrain(x + y, "batch", "seq", "embed")
+        return x, (k.astype(cache_dtype), v.astype(cache_dtype))
+
+    fn = body
+    if cfg.remat:
+        fn = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, (ks, vs) = jax.lax.scan(fn, x, params["layers"],
+                               unroll=cfg.unroll)
+    x = apply_norm(_cast_params(params["final_norm"], dt), x[:, -1:, :],
+                   cfg.norm)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = x @ head.astype(dt)
+    cache = {"k": ks, "v": vs, "len": jnp.int32(S)}
+    return constrain(logits, "batch", "seq", "vocab"), cache
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: LMConfig, batch: int, max_seq: int,
+               dtype=jnp.bfloat16) -> dict:
+    shape = (cfg.n_layers, batch, max_seq, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+            "len": jnp.zeros((), jnp.int32)}
+
+
+def cache_axes() -> dict:
+    return {"k": ("layers", "batch", "cache_seq", "kv_heads", "head_dim"),
+            "v": ("layers", "batch", "cache_seq", "kv_heads", "head_dim"),
+            "len": ()}
+
+
+def decode_step(params: dict, cache: dict, tokens: jax.Array,
+                cfg: LMConfig) -> tuple[jax.Array, dict]:
+    """One decode step. tokens (B, 1) -> (logits (B, 1, V), new cache)."""
+    dt = cfg.compute_dtype
+    x = params["embed"].astype(dt)[tokens]
+    x = constrain(x, "batch", "seq", "embed")
+    cur = cache["len"]
+
+    def body(x, lp_kv):
+        lp, ck, cv = lp_kv
+        lp = _cast_params(lp, dt, layer_axes(cfg))
+        h = apply_norm(lp["ln1"], x, cfg.norm)
+        a, ck, cv = attn.attend_decode(lp["attn"], h, ck, cv, cur,
+                                       qk_norm=cfg.qk_norm,
+                                       rope_theta=cfg.rope_theta)
+        x = x + a
+        h = apply_norm(lp["ln2"], x, cfg.norm)
+        if cfg.moe:
+            y, _ = moe_lib.apply_moe(lp["moe"], h, cfg.moe, cfg.act)
+        else:
+            y = apply_mlp(lp["mlp"], h, cfg.act)
+        return x + y, (ck, cv)
+
+    x, (new_k, new_v) = jax.lax.scan(
+        body, x, (params["layers"], cache["k"], cache["v"]),
+        unroll=cfg.unroll)
+    x = apply_norm(_cast_params(params["final_norm"], dt), x, cfg.norm)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = x @ head.astype(dt)
+    new_cache = {"k": new_k, "v": new_v, "len": cur + 1}
+    return constrain(logits, "batch", "seq", "vocab"), new_cache

@@ -1,0 +1,147 @@
+"""ASC retrieval serving engine.
+
+Single-host path: jitted batched retrieval with any SearchConfig.
+Distributed path (``distributed_retrieve``): the selective-search layout —
+clusters shard over ('pod', 'data'), the query batch shards over 'model';
+every shard runs the *full* two-level (mu, eta) search on its local
+clusters and a k-sized all-gather + top-k merge assembles the global
+result. Rank-safety composes: per-shard theta is a lower bound of global
+theta, so per-shard pruning is never more aggressive than global pruning
+— the merged result satisfies the same (mu, eta) guarantees.
+
+Time budgets: the paper's ms budget becomes a *cluster visitation budget*
+(visitation order is identical to Anytime Ranking's, so early-termination
+semantics match; see DESIGN.md §2). ``AdaptiveBudget`` converts a latency
+target to a budget from observed per-cluster cost — the serving-loop
+feedback controller.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core.search import SearchConfig, retrieve, _search_one_query
+from repro.core.bounds import cluster_bounds
+from repro.core.types import ClusterIndex, QueryBatch, TopK
+
+
+@dataclasses.dataclass
+class ServeStats:
+    n_queries: int = 0
+    total_time_s: float = 0.0
+    latencies_ms: list = dataclasses.field(default_factory=list)
+
+    @property
+    def mean_ms(self) -> float:
+        return float(np.mean(self.latencies_ms)) if self.latencies_ms else 0.0
+
+    def p(self, q: float) -> float:
+        return float(np.percentile(self.latencies_ms, q)) \
+            if self.latencies_ms else 0.0
+
+
+class RetrievalEngine:
+    """Batched ASC serving with latency accounting."""
+
+    def __init__(self, index: ClusterIndex, cfg: SearchConfig):
+        self.index = index
+        self.cfg = cfg
+        self.stats = ServeStats()
+        self._fn = jax.jit(lambda idx, q: retrieve(idx, q, cfg))
+
+    def warmup(self, queries: QueryBatch) -> None:
+        jax.block_until_ready(self._fn(self.index, queries))
+
+    def search(self, queries: QueryBatch) -> TopK:
+        t0 = time.perf_counter()
+        out = jax.block_until_ready(self._fn(self.index, queries))
+        dt = time.perf_counter() - t0
+        self.stats.n_queries += queries.n_queries
+        self.stats.total_time_s += dt
+        self.stats.latencies_ms.append(dt * 1e3 / max(queries.n_queries, 1))
+        return out
+
+
+class AdaptiveBudget:
+    """Latency target -> cluster budget, from an online cost estimate."""
+
+    def __init__(self, target_ms: float, init_cost_ms: float = 0.05,
+                 ema: float = 0.9):
+        self.target_ms = target_ms
+        self.cost_ms = init_cost_ms
+        self.ema = ema
+
+    def budget(self) -> int:
+        return max(8, int(self.target_ms / max(self.cost_ms, 1e-6)))
+
+    def observe(self, clusters_scored: float, elapsed_ms: float) -> None:
+        if clusters_scored > 0:
+            c = elapsed_ms / clusters_scored
+            self.cost_ms = self.ema * self.cost_ms + (1 - self.ema) * c
+
+
+# ---------------------------------------------------------------------------
+# Distributed retrieval (shard_map over the cluster axis)
+# ---------------------------------------------------------------------------
+
+def index_shard_specs(index: ClusterIndex,
+                      multi_pod: bool = False) -> ClusterIndex:
+    """PartitionSpecs for every ClusterIndex field (clusters sharded);
+    metadata copied from the live index so the pytree structures match."""
+    c = ("pod", "data") if multi_pod else ("data",)
+    return ClusterIndex(
+        doc_tids=P(c, None, None), doc_tw=P(c, None, None),
+        doc_mask=P(c, None), doc_ids=P(c, None), doc_seg=P(c, None),
+        seg_max=P(c, None, None), scale=P(),
+        cluster_ndocs=P(c), vocab=index.vocab, n_seg=index.n_seg)
+
+
+def distributed_retrieve(index: ClusterIndex, queries: QueryBatch,
+                         cfg: SearchConfig, mesh,
+                         multi_pod: bool = False) -> TopK:
+    """shard_map retrieval: local two-level search per cluster shard,
+    global top-k merge via all_gather over the cluster axes."""
+    caxes = ("pod", "data") if multi_pod else ("data",)
+    qaxis = "model"
+    ispecs = index_shard_specs(index, multi_pod)
+    qspec = QueryBatch(tids=P(qaxis, None), tw=P(qaxis, None),
+                       mask=P(qaxis, None), vocab=queries.vocab)
+
+    def local(index_local: ClusterIndex, q_local: QueryBatch) -> TopK:
+        stats = cluster_bounds(index_local, q_local, impl=cfg.bounds_impl,
+                               use_kernel=cfg.use_kernel)
+        qmaps = q_local.dense_map()
+        if cfg.method == "asc":
+            seg_b, max_s = stats["segment"], stats["max_s"]
+            avg_s, key = stats["avg_s"], stats["max_s"]
+        else:
+            seg_b = stats["bound_sum"][..., None]
+            max_s = avg_s = key = stats["bound_sum"]
+        ids, scores, nd, nc, ns = jax.vmap(
+            lambda qm, b, mx, av, k_: _search_one_query(
+                index_local, qm, b, mx, av, k_, cfg))(
+            qmaps, seg_b, max_s, avg_s, key)
+        # merge the per-shard top-k across the cluster axes
+        for ax in caxes:
+            all_scores = jax.lax.all_gather(scores, ax, axis=1, tiled=True)
+            all_ids = jax.lax.all_gather(ids, ax, axis=1, tiled=True)
+            scores, pos = jax.lax.top_k(all_scores, cfg.k)
+            ids = jnp.take_along_axis(all_ids, pos, axis=1)
+        nd = jax.lax.psum(nd, caxes)
+        nc = jax.lax.psum(nc, caxes)
+        ns = jax.lax.psum(ns, caxes)
+        return TopK(doc_ids=ids, scores=scores, n_scored_docs=nd,
+                    n_scored_clusters=nc, n_scored_segments=ns)
+
+    out_specs = TopK(doc_ids=P(qaxis, None), scores=P(qaxis, None),
+                     n_scored_docs=P(qaxis), n_scored_clusters=P(qaxis),
+                     n_scored_segments=P(qaxis))
+    fn = jax.shard_map(local, mesh=mesh, in_specs=(ispecs, qspec),
+                       out_specs=out_specs, check_vma=False)
+    return fn(index, queries)

@@ -1,0 +1,59 @@
+"""Gradient compression for the thin cross-pod links.
+
+int8 quantized mean-all-reduce with error feedback (1-bit Adam lineage):
+each tensor is scaled to int8 by its absmax, psum'd over the given mesh
+axis, dequantized, and the quantization residual is carried to the next
+step (error feedback keeps the compounding bias bounded; convergence
+matches fp32 all-reduce in expectation).
+
+Intended placement (DESIGN.md §4): *only* the 'pod' axis — intra-pod ICI
+is fast enough for fp32 reduce-scatter, the pod-to-pod DCI is the pipe
+worth compressing 4x. Runs inside shard_map (explicit collectives).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    amax = jnp.max(jnp.abs(x)) + 1e-12
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_mean(grads, ef_state, axis: str):
+    """Mean over ``axis`` of int8-compressed grads, with error feedback.
+
+    Must run inside shard_map / with the named axis bound. Returns
+    (mean grads, new error-feedback state).
+    """
+    if ef_state is None:
+        ef_state = jax.tree_util.tree_map(
+            lambda g: jnp.zeros_like(g, jnp.float32), grads)
+
+    def one(g, ef):
+        g32 = g.astype(jnp.float32) + ef
+        # shared scale across the axis (one scalar pmax — negligible
+        # traffic) so the int8 payloads are summable exactly.
+        amax = jax.lax.pmax(jnp.max(jnp.abs(g32)), axis) + 1e-12
+        scale = amax / 127.0
+        q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+        ef_new = g32 - q.astype(jnp.float32) * scale
+        total = jax.lax.psum(q.astype(jnp.int32), axis)
+        n = jax.lax.psum(jnp.ones((), jnp.float32), axis)
+        mean = total.astype(jnp.float32) * scale / n
+        return mean.astype(g.dtype), ef_new
+
+    out = jax.tree_util.tree_map(one, grads, ef_state)
+    mean = jax.tree_util.tree_map(lambda o: o[0], out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+    ef = jax.tree_util.tree_map(lambda o: o[1], out,
+                                is_leaf=lambda x: isinstance(x, tuple))
+    return mean, ef

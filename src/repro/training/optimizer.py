@@ -1,0 +1,215 @@
+"""Pure-JAX optimizers (no optax in this environment): AdamW, row-wise
+Adagrad (embedding tables — state is one scalar per row, not two full
+moments), SGD+momentum, plus LR schedules, global-norm clipping, and a
+path-prefix *mixed* optimizer so DLRM runs AdamW on its MLPs and row-wise
+Adagrad on its 10^8-row tables (the MLPerf recipe, and the only way the
+optimizer state fits).
+
+Interface mirrors optax: ``opt.init(params) -> state``,
+``opt.update(grads, state, params, step) -> (updates, state)``; updates are
+*added* to params by the caller.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+Schedule = Callable[[jax.Array], jax.Array]
+
+
+def constant_schedule(lr: float) -> Schedule:
+    return lambda step: jnp.float32(lr)
+
+
+def cosine_schedule(lr: float, warmup: int, total: int,
+                    final_frac: float = 0.1) -> Schedule:
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = lr * step / max(warmup, 1)
+        t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = final_frac * lr + (1 - final_frac) * lr * 0.5 * (
+            1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup, warm, cos)
+    return fn
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable  # (grads, state, params, step) -> (updates, state)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads
+    ), norm
+
+
+def adamw(schedule: Schedule, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.1) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros_like(p, jnp.float32)
+        return {"mu": jax.tree_util.tree_map(zeros, params),
+                "nu": jax.tree_util.tree_map(zeros, params)}
+
+    def update(grads, state, params, step):
+        lr = schedule(step)
+        t = step.astype(jnp.float32) + 1.0
+        c1 = 1.0 - b1 ** t
+        c2 = 1.0 - b2 ** t
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            u = -lr * ((m / c1) / (jnp.sqrt(v / c2) + eps)
+                       + weight_decay * p.astype(jnp.float32))
+            return u.astype(p.dtype), m, v
+
+        out = jax.tree_util.tree_map(upd, grads, state["mu"], state["nu"],
+                                     params)
+        updates = jax.tree_util.tree_map(lambda o: o[0], out,
+                                         is_leaf=lambda x: isinstance(x, tuple))
+        mu = jax.tree_util.tree_map(lambda o: o[1], out,
+                                    is_leaf=lambda x: isinstance(x, tuple))
+        nu = jax.tree_util.tree_map(lambda o: o[2], out,
+                                    is_leaf=lambda x: isinstance(x, tuple))
+        return updates, {"mu": mu, "nu": nu}
+
+    return Optimizer(init, update)
+
+
+def rowwise_adagrad(schedule: Schedule, eps: float = 1e-8) -> Optimizer:
+    """One accumulator scalar per table *row* (FBGEMM/MLPerf style)."""
+    def init(params):
+        return {"acc": jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape[:1], jnp.float32), params)}
+
+    def update(grads, state, params, step):
+        lr = schedule(step)
+
+        def upd(g, a, p):
+            g = g.astype(jnp.float32)
+            red = tuple(range(1, g.ndim))
+            a = a + jnp.mean(g * g, axis=red) if g.ndim > 1 else a + g * g
+            scale = jax.lax.rsqrt(a + eps)
+            u = -lr * g * scale.reshape(scale.shape + (1,) * (g.ndim - 1))
+            return u.astype(p.dtype), a
+
+        out = jax.tree_util.tree_map(upd, grads, state["acc"], params)
+        updates = jax.tree_util.tree_map(lambda o: o[0], out,
+                                         is_leaf=lambda x: isinstance(x, tuple))
+        acc = jax.tree_util.tree_map(lambda o: o[1], out,
+                                     is_leaf=lambda x: isinstance(x, tuple))
+        return updates, {"acc": acc}
+
+    return Optimizer(init, update)
+
+
+def sgd(schedule: Schedule, momentum: float = 0.0) -> Optimizer:
+    def init(params):
+        if momentum == 0.0:
+            return {}
+        return {"mom": jax.tree_util.tree_map(
+            lambda p: jnp.zeros_like(p, jnp.float32), params)}
+
+    def update(grads, state, params, step):
+        lr = schedule(step)
+        if momentum == 0.0:
+            ups = jax.tree_util.tree_map(
+                lambda g, p: (-lr * g.astype(jnp.float32)).astype(p.dtype),
+                grads, params)
+            return ups, state
+
+        def upd(g, m, p):
+            m = momentum * m + g.astype(jnp.float32)
+            return (-lr * m).astype(p.dtype), m
+
+        out = jax.tree_util.tree_map(upd, grads, state["mom"], params)
+        ups = jax.tree_util.tree_map(lambda o: o[0], out,
+                                     is_leaf=lambda x: isinstance(x, tuple))
+        mom = jax.tree_util.tree_map(lambda o: o[1], out,
+                                     is_leaf=lambda x: isinstance(x, tuple))
+        return ups, {"mom": mom}
+
+    return Optimizer(init, update)
+
+
+def _leaf_path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                    for p in path)
+
+
+def mixed(rules: list[tuple[str, Optimizer]],
+          default: Optimizer) -> Optimizer:
+    """Route leaves to optimizers by param-path prefix.
+
+    ``rules = [("tables", rowwise_adagrad(...))]`` sends every leaf whose
+    tree path starts with 'tables' to adagrad, the rest to ``default``.
+    Implementation: flatten once, group leaf indices per label, run each
+    optimizer over a flat list pytree (lists are pytrees), scatter updates
+    back into leaf order.
+    """
+    table = {prefix: opt for prefix, opt in rules}
+    table["__default__"] = default
+
+    def _labels(params):
+        flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+        labels = []
+        for path, _ in flat:
+            name = _leaf_path_str(path)
+            lab = "__default__"
+            for prefix, _opt in rules:
+                if name.startswith(prefix):
+                    lab = prefix
+                    break
+            labels.append(lab)
+        return flat, treedef, labels
+
+    def init(params):
+        flat, _, labels = _labels(params)
+        state = {}
+        for name, opt in table.items():
+            leaves = [leaf for (_, leaf), lab in zip(flat, labels)
+                      if lab == name]
+            state[name] = opt.init(leaves)
+        return state
+
+    def update(grads, state, params, step):
+        gflat, gdef = jax.tree_util.tree_flatten(grads)
+        pflat_p, _, labels = _labels(params)
+        pflat = [leaf for _, leaf in pflat_p]
+        new_state = {}
+        updates_flat: list = [None] * len(gflat)
+        for name, opt in table.items():
+            ix = [i for i, lab in enumerate(labels) if lab == name]
+            if not ix:
+                new_state[name] = state[name]
+                continue
+            ups, st = opt.update([gflat[i] for i in ix], state[name],
+                                 [pflat[i] for i in ix], step)
+            new_state[name] = st
+            for i, u in zip(ix, ups):
+                updates_flat[i] = u
+        return jax.tree_util.tree_unflatten(gdef, updates_flat), new_state
+
+    return Optimizer(init, update)
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(
+        lambda p, u: p if u is None else p + u.astype(p.dtype),
+        params, updates, is_leaf=lambda x: x is None)

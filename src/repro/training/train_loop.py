@@ -1,0 +1,142 @@
+"""Train-step factory + driver loop with fault tolerance.
+
+``make_train_step(loss_fn, optimizer, ...)`` builds the jittable step:
+value_and_grad -> (optional microbatch accumulation via lax.scan) ->
+(optional int8 cross-pod gradient compression) -> global-norm clip ->
+optimizer update. Sharding comes from the ambient rules installed by the
+caller (launch/train.py) — the step itself is mesh-agnostic.
+
+``fit`` is the driver: resume-from-latest checkpoint, periodic async
+saves, deterministic data order keyed by step (a restart on any node
+re-produces the same batch sequence — the straggler/elastic story in
+DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.training import optimizer as opt_lib
+from repro.training.checkpoint import CheckpointManager
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    steps: int = 100
+    log_every: int = 10
+    checkpoint_every: int = 50
+    max_to_keep: int = 3
+    grad_clip: float = 1.0
+    microbatches: int = 1          # gradient accumulation
+    grad_compression: bool = False  # int8 + error feedback on 'pod' axis
+
+
+def make_train_step(loss_fn: Callable, optimizer: opt_lib.Optimizer,
+                    cfg: TrainConfig, compression_axis: str | None = None,
+                    grad_shardings=None):
+    """loss_fn(params, batch) -> scalar. Returns step(params, opt_state,
+    batch, step_no, [ef_state]) -> (params, opt_state, metrics[, ef]).
+
+    ``grad_shardings``: optional pytree of NamedSharding (same structure
+    as params) — gradients are sharding-constrained to the param layout
+    right after value_and_grad, so the scan-backward accumulator never
+    materializes unsharded full-precision grads."""
+
+    def grads_of(params, batch):
+        if cfg.microbatches <= 1:
+            return jax.value_and_grad(loss_fn)(params, batch)
+        # split the leading batch dim into microbatches and accumulate
+        def split(x):
+            b = x.shape[0]
+            mb = b // cfg.microbatches
+            return x.reshape(cfg.microbatches, mb, *x.shape[1:])
+        mbatch = jax.tree_util.tree_map(split, batch)
+
+        def acc_fn(carry, mb):
+            loss_acc, g_acc = carry
+            loss, g = jax.value_and_grad(loss_fn)(params, mb)
+            g_acc = jax.tree_util.tree_map(jnp.add, g_acc, g)
+            return (loss_acc + loss, g_acc), None
+
+        zero = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss, grads), _ = jax.lax.scan(acc_fn, (jnp.float32(0.0), zero),
+                                        mbatch)
+        scale = 1.0 / cfg.microbatches
+        grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
+        return loss * scale, grads
+
+    def _constrain_grads(grads):
+        if grad_shardings is None:
+            return grads
+        return jax.tree_util.tree_map(
+            jax.lax.with_sharding_constraint, grads, grad_shardings)
+
+    def step(params, opt_state, batch, step_no, ef_state=None):
+        loss, grads = grads_of(params, batch)
+        grads = _constrain_grads(grads)
+        if cfg.grad_compression and compression_axis is not None:
+            from repro.training.compression import compressed_mean
+            grads, ef_state = compressed_mean(grads, ef_state,
+                                              axis=compression_axis)
+        grads, gnorm = opt_lib.clip_by_global_norm(grads, cfg.grad_clip)
+        updates, opt_state = optimizer.update(grads, opt_state, params,
+                                              step_no)
+        params = opt_lib.apply_updates(params, updates)
+        metrics = {"loss": loss, "grad_norm": gnorm}
+        if cfg.grad_compression and compression_axis is not None:
+            return params, opt_state, metrics, ef_state
+        return params, opt_state, metrics
+
+    return step
+
+
+def fit(*, params, optimizer: opt_lib.Optimizer, loss_fn: Callable,
+        data_fn: Callable[[int], Any], cfg: TrainConfig,
+        ckpt_dir: str | None = None, jit: bool = True,
+        log_fn: Callable[[str], None] = print) -> tuple[Any, list[dict]]:
+    """Driver loop. ``data_fn(step) -> batch`` must be deterministic in
+    ``step`` (fault-tolerant replay). Returns (params, history)."""
+    opt_state = optimizer.init(params)
+    start_step = 0
+    mgr = None
+    if ckpt_dir is not None:
+        mgr = CheckpointManager(ckpt_dir, max_to_keep=cfg.max_to_keep)
+        template = {"step": 0, "params": params, "opt_state": opt_state}
+        restored = mgr.restore_latest(template)
+        if restored is not None:
+            start_step = int(restored["step"]) + 1
+            params = mgr.cast_like(restored["params"], params)
+            opt_state = mgr.cast_like(restored["opt_state"], opt_state)
+            log_fn(f"[fit] resumed from step {start_step - 1}")
+
+    step_fn = make_train_step(loss_fn, optimizer, cfg)
+    if jit:
+        step_fn = jax.jit(step_fn)
+
+    history = []
+    t0 = time.perf_counter()
+    for step in range(start_step, cfg.steps):
+        batch = data_fn(step)
+        params, opt_state, metrics = step_fn(params, opt_state, batch,
+                                             jnp.int32(step))
+        if step % cfg.log_every == 0 or step == cfg.steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            m["step"] = step
+            m["elapsed_s"] = time.perf_counter() - t0
+            history.append(m)
+            log_fn(f"[fit] step {step}: loss={m['loss']:.4f} "
+                   f"gnorm={m['grad_norm']:.3f}")
+        if mgr is not None and (step + 1) % cfg.checkpoint_every == 0:
+            mgr.save(step, {"step": step, "params": params,
+                            "opt_state": opt_state}, async_save=True)
+    if mgr is not None:
+        mgr.save(cfg.steps - 1, {"step": cfg.steps - 1, "params": params,
+                                 "opt_state": opt_state})
+        mgr.wait()
+    return params, history

@@ -1,0 +1,36 @@
+"""Small shared helpers."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rank_within_run(sorted_keys: jax.Array) -> jax.Array:
+    """Position of each element within its run of equal keys.
+
+    ``sorted_keys`` must be sorted; used for balanced/capacity placement
+    (k-means balancing, MoE expert dispatch).
+    """
+    n = sorted_keys.shape[0]
+    idx = jnp.arange(n, dtype=jnp.int32)
+    starts = jnp.where(
+        jnp.concatenate(
+            [jnp.ones((1,), bool), sorted_keys[1:] != sorted_keys[:-1]]),
+        idx, 0)
+    run_start = jax.lax.associative_scan(jnp.maximum, starts)
+    return idx - run_start
+
+
+def pretty_bytes(n: float) -> str:
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(n) < 1024:
+            return f"{n:.2f}{unit}"
+        n /= 1024
+    return f"{n:.2f}PB"
+
+
+def tree_size_bytes(tree) -> int:
+    return sum(x.size * x.dtype.itemsize
+               for x in jax.tree_util.tree_leaves(tree)
+               if hasattr(x, "dtype"))

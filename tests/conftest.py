@@ -1,0 +1,55 @@
+"""Shared fixtures: a small topical corpus + built indexes.
+
+The main pytest process keeps the default single CPU device (dry-run
+machinery that needs 512 placeholder devices runs in subprocesses — see
+test_distributed.py / launch/dryrun.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+import pytest
+
+jax.config.update("jax_enable_x64", False)
+
+from repro.core.clustering import dense_rep_projection, lloyd_kmeans
+from repro.core.index import build_index
+from repro.data.synthetic import CorpusSpec, make_corpus, make_queries
+
+
+SPEC = CorpusSpec(n_docs=1500, vocab=512, n_topics=16, doc_terms=40,
+                  t_pad=56, query_terms=12, q_pad=20, seed=0)
+
+
+@pytest.fixture(scope="session")
+def corpus():
+    docs, doc_topic = make_corpus(SPEC)
+    return docs, doc_topic
+
+
+@pytest.fixture(scope="session")
+def queries(corpus):
+    _, doc_topic = corpus
+    q, q_topic = make_queries(SPEC, 16, doc_topic, seed=3)
+    return q, q_topic
+
+
+@pytest.fixture(scope="session")
+def assignment(corpus):
+    docs, _ = corpus
+    rep = dense_rep_projection(docs, dim=64)
+    _, assign = lloyd_kmeans(jax.random.PRNGKey(0), rep, k=24, iters=6)
+    return np.asarray(assign)
+
+
+@pytest.fixture(scope="session")
+def index(corpus, assignment):
+    docs, _ = corpus
+    return build_index(docs, assignment, m=24, n_seg=4, seed=0)
+
+
+@pytest.fixture(scope="session")
+def index_1seg(corpus, assignment):
+    docs, _ = corpus
+    return build_index(docs, assignment, m=24, n_seg=1, seed=0)

@@ -1,0 +1,290 @@
+"""Unit tests for the index substrate: bounds implementations, offline
+index construction invariants, quantization, segmentation, clustering."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bounds import (cluster_bounds, segment_bounds_gather,
+                               segment_bounds_gemm)
+from repro.core.clustering import (balanced_assign, dense_rep_pooled,
+                                   dense_rep_projection, lloyd_kmeans,
+                                   sq_distances)
+from repro.core.index import build_index, capacity_rebalance
+from repro.core.quantization import dequantize, quantize, weight_scale
+from repro.core.segmentation import (kmeans_sub_segments,
+                                     random_uniform_segments)
+from repro.core.types import SparseDocs
+from repro.data.synthetic import CorpusSpec, make_corpus, make_queries
+
+
+# ---------------------------------------------------------------------------
+# bounds: the two implementations are the same contraction
+# ---------------------------------------------------------------------------
+
+def test_bounds_impls_agree(index, queries):
+    q, _ = queries
+    a = segment_bounds_gather(index, q)
+    b = segment_bounds_gemm(index, q)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_bound_sum_is_segment_collapse(index, queries):
+    """BoundSum must equal the bound computed on max-over-segments table."""
+    q, _ = queries
+    stats = cluster_bounds(index, q)
+    # manual: collapse the table then one gather-bound pass
+    seg_max = np.asarray(index.seg_max)                 # (m, n, V)
+    collapsed = seg_max.max(axis=1)                     # (m, V)
+    qt = np.asarray(jnp.where(q.mask, q.tids, index.vocab))
+    qw = np.asarray(jnp.where(q.mask, q.tw, 0.0))
+    table = np.pad(collapsed, ((0, 0), (0, 1)))
+    manual = np.einsum("mqt,qt->qm", table[:, qt].astype(np.float32), qw)
+    manual *= float(index.scale)
+    np.testing.assert_allclose(np.asarray(stats["bound_sum"]), manual,
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# index construction invariants
+# ---------------------------------------------------------------------------
+
+def test_every_doc_placed_exactly_once(corpus, index):
+    docs, _ = corpus
+    ids = np.asarray(index.doc_ids)[np.asarray(index.doc_mask)]
+    assert len(ids) == docs.n_docs
+    assert len(np.unique(ids)) == docs.n_docs
+
+
+def test_cluster_ndocs_consistent(index):
+    mask_counts = np.asarray(index.doc_mask).sum(axis=1)
+    np.testing.assert_array_equal(mask_counts,
+                                  np.asarray(index.cluster_ndocs))
+
+
+def test_seg_max_is_exact_max(corpus, index):
+    """seg_max[c, j, t] == max over quantized weights of term t among docs
+    of segment j in cluster c (checked exhaustively on the small index)."""
+    docs, _ = corpus
+    V = index.vocab
+    seg_max = np.asarray(index.seg_max)
+    doc_tids = np.asarray(index.doc_tids)
+    doc_tw = np.asarray(index.doc_tw)
+    doc_seg = np.asarray(index.doc_seg)
+    doc_mask = np.asarray(index.doc_mask)
+
+    expected = np.zeros_like(seg_max)
+    m, d_pad, _ = doc_tids.shape
+    for c in range(m):
+        for d in range(d_pad):
+            if not doc_mask[c, d]:
+                continue
+            j = doc_seg[c, d]
+            t, w = doc_tids[c, d], doc_tw[c, d]
+            keep = t < V
+            np.maximum.at(expected[c, j], t[keep], w[keep])
+    np.testing.assert_array_equal(seg_max, expected)
+
+
+def test_quantized_scores_match_dense_oracle(corpus, index, queries):
+    """Index scoring == dense matmul on the quantized corpus."""
+    from repro.core.search import score_docs_ref
+    docs, _ = corpus
+    q, _ = queries
+    qmaps = q.dense_map()
+    # dense quantized corpus
+    dense = np.asarray(docs.densify())
+    scale = float(index.scale)
+    dense_q = np.clip(np.round(dense / scale), 0, 255) * scale
+    expected_all = dense_q @ np.asarray(qmaps[:, : index.vocab]).T  # (n, q)
+
+    ids = np.asarray(index.doc_ids)
+    mask = np.asarray(index.doc_mask)
+    for qi in range(min(4, q.n_queries)):
+        got = np.asarray(score_docs_ref(index.doc_tids, index.doc_tw,
+                                        qmaps[qi], index.scale))
+        np.testing.assert_allclose(got[mask], expected_all[ids[mask], qi],
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_index_tid_dtype_u16(corpus, index):
+    """vocab < 2^16 => uint16 term ids (3 B/posting index layout)."""
+    assert index.doc_tids.dtype == jnp.uint16
+    # padding slots point at the zero landing pad V
+    pad = np.asarray(index.doc_tids)[~np.asarray(index.doc_mask)]
+    assert (pad == index.vocab).all()
+
+
+def test_index_tid_dtype_i32_for_large_vocab():
+    from repro.data.synthetic import CorpusSpec, make_corpus
+    spec = CorpusSpec(n_docs=64, vocab=70_000, n_topics=4, doc_terms=8,
+                      t_pad=12)
+    docs, doc_topic = make_corpus(spec)
+    idx = build_index(docs, doc_topic % 4, m=4, n_seg=2)
+    assert idx.doc_tids.dtype == jnp.int32
+
+
+def test_capacity_rebalance():
+    assign = np.array([0] * 10 + [1] * 2)
+    out = capacity_rebalance(assign, m=3, d_pad=5)
+    counts = np.bincount(out, minlength=3)
+    assert (counts <= 5).all()
+    assert counts.sum() == 12
+
+
+def test_capacity_rebalance_impossible():
+    with pytest.raises(ValueError):
+        capacity_rebalance(np.zeros(10, np.int64), m=2, d_pad=4)
+
+
+def test_build_index_dpad_override(corpus):
+    docs, doc_topic = corpus
+    idx = build_index(docs, doc_topic % 8, m=8, n_seg=2, d_pad=256)
+    assert idx.d_pad == 256
+    counts = np.asarray(idx.doc_mask).sum(1)
+    assert (counts <= 256).all()
+
+
+# ---------------------------------------------------------------------------
+# quantization
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.floats(0.0, 100.0), min_size=1, max_size=64))
+def test_quantize_roundtrip_error_bound(ws):
+    w = jnp.asarray(ws, jnp.float32)
+    scale = weight_scale(w, jnp.ones_like(w, bool))
+    q = quantize(w, scale)
+    back = dequantize(q, scale)
+    # error bounded by half a quantization step
+    assert float(jnp.max(jnp.abs(back - w))) <= float(scale) / 2 + 1e-6
+
+
+def test_quantize_monotone():
+    w = jnp.asarray([0.0, 0.5, 1.0, 2.0, 50.0, 100.0])
+    scale = weight_scale(w, jnp.ones_like(w, bool))
+    q = np.asarray(quantize(w, scale))
+    assert (np.diff(q.astype(np.int32)) >= 0).all()
+
+
+# ---------------------------------------------------------------------------
+# segmentation
+# ---------------------------------------------------------------------------
+
+def test_random_uniform_segments_balanced():
+    rng = np.random.default_rng(0)
+    seg = random_uniform_segments(rng, 103, 8)
+    counts = np.bincount(seg, minlength=8)
+    assert counts.max() - counts.min() <= 1       # even split
+    assert seg.shape == (103,)
+
+
+def test_random_uniform_segments_distribution():
+    """Each doc equally likely in any segment (Prop 4's requirement)."""
+    rng = np.random.default_rng(1)
+    hits = np.zeros((50, 4))
+    for _ in range(300):
+        seg = random_uniform_segments(rng, 50, 4)
+        hits[np.arange(50), seg] += 1
+    freq = hits / 300.0
+    assert np.abs(freq - 0.25).max() < 0.12
+
+
+def test_kmeans_sub_segments_shape():
+    rng = np.random.default_rng(2)
+    x = rng.normal(size=(60, 16)).astype(np.float32)
+    seg = kmeans_sub_segments(x, 4, rng=rng)
+    assert seg.shape == (60,)
+    assert seg.min() >= 0 and seg.max() < 4
+
+
+# ---------------------------------------------------------------------------
+# clustering
+# ---------------------------------------------------------------------------
+
+def test_lloyd_kmeans_reduces_inertia():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (500, 16))
+    centers0 = x[jax.random.choice(key, 500, (8,), replace=False)]
+    inertia0 = float(jnp.min(sq_distances(x, centers0), axis=1).sum())
+    centers, assign = lloyd_kmeans(key, x, k=8, iters=10)
+    inertia = float(jnp.min(sq_distances(x, centers), axis=1).sum())
+    assert inertia <= inertia0
+    assert assign.shape == (500,)
+
+
+def test_kmeans_plus_plus_seeding():
+    key = jax.random.PRNGKey(1)
+    x = jax.random.normal(key, (300, 8))
+    centers, assign = lloyd_kmeans(key, x, k=6, iters=5,
+                                   seed_mode="kmeans++")
+    assert centers.shape == (6, 8)
+    assert int(assign.max()) < 6
+
+
+def test_balanced_assign_respects_capacity():
+    key = jax.random.PRNGKey(2)
+    x = jax.random.normal(key, (200, 8))
+    centers = jax.random.normal(jax.random.PRNGKey(3), (10, 8))
+    assign = balanced_assign(x, centers, capacity=25)
+    counts = np.bincount(np.asarray(assign), minlength=10)
+    assert (counts <= 25).all()
+    assert counts.sum() == 200
+
+
+def test_dense_rep_projection_preserves_geometry(corpus):
+    """Random projection approximately preserves inner products, so
+    topically-similar docs should cluster together."""
+    docs, doc_topic = corpus
+    rep = np.asarray(dense_rep_projection(docs, dim=128))
+    # same-topic pairs should be closer than cross-topic on average
+    rng = np.random.default_rng(0)
+    same, cross = [], []
+    for _ in range(400):
+        i, j = rng.integers(0, docs.n_docs, 2)
+        d = float(np.sum((rep[i] - rep[j]) ** 2))
+        (same if doc_topic[i] == doc_topic[j] else cross).append(d)
+    assert np.mean(same) < np.mean(cross)
+
+
+def test_dense_rep_pooled_modes():
+    key = jax.random.PRNGKey(4)
+    tok = jax.random.normal(key, (6, 12, 32))
+    mask = jnp.ones((6, 12), bool).at[:, 8:].set(False)
+    for mode in ("max", "mean", "cls"):
+        out = dense_rep_pooled(tok, mask, mode)
+        assert out.shape == (6, 32)
+        assert bool(jnp.all(jnp.isfinite(out)))
+    mx = dense_rep_pooled(tok, mask, "max")
+    # masked positions must not contribute
+    tok2 = tok.at[:, 8:, :].set(1e9)
+    mx2 = dense_rep_pooled(tok2, mask, "max")
+    np.testing.assert_allclose(np.asarray(mx), np.asarray(mx2))
+
+
+# ---------------------------------------------------------------------------
+# paper Table 3 effect: random segmentation has smaller Max-Avg gap than
+# k-means sub-clustering
+# ---------------------------------------------------------------------------
+
+def test_random_seg_smaller_gap_than_kmeans(corpus, queries):
+    docs, doc_topic = corpus
+    q, _ = queries
+    rep = np.asarray(dense_rep_projection(docs, dim=64))
+    assign = doc_topic % 16
+
+    idx_rand = build_index(docs, assign, m=16, n_seg=4,
+                           seg_method="random_uniform", seed=0)
+    idx_km = build_index(docs, assign, m=16, n_seg=4,
+                         seg_method="kmeans_sub", dense_rep=rep, seed=0)
+    s_rand = cluster_bounds(idx_rand, q)
+    s_km = cluster_bounds(idx_km, q)
+    gap_rand = float((s_rand["max_s"] - s_rand["avg_s"]).mean())
+    gap_km = float((s_km["max_s"] - s_km["avg_s"]).mean())
+    # Table 3 (lower panel): random partitioning's Max-Avg gap is smaller
+    assert gap_rand < gap_km

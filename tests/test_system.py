@@ -1,0 +1,108 @@
+"""End-to-end system test: the full paper pipeline on a synthetic corpus.
+
+encoder-style dense reps -> k-means clustering -> index build (random
+segmentation, uint8 quantization) -> ASC / Anytime / Anytime* retrieval ->
+metric accounting — the complete offline + online flow of Figure 1.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.clustering import (balanced_assign, dense_rep_projection,
+                                   lloyd_kmeans)
+from repro.core.index import build_index
+from repro.core.search import (SearchConfig, anytime_retrieve, asc_retrieve,
+                               brute_force_topk, retrieve)
+from repro.data.synthetic import CorpusSpec, make_corpus, make_queries
+
+
+@pytest.fixture(scope="module")
+def pipeline():
+    spec = CorpusSpec(n_docs=3000, vocab=768, n_topics=24, doc_terms=44,
+                      t_pad=64, query_terms=14, q_pad=24, seed=7)
+    docs, doc_topic = make_corpus(spec)
+    queries, q_topic = make_queries(spec, 24, doc_topic, seed=8)
+
+    # offline: cluster on dense counterparts (paper §3.4), capacity-bounded
+    rep = dense_rep_projection(docs, dim=96)
+    m = 32
+    centers, _ = lloyd_kmeans(jax.random.PRNGKey(0), rep, k=m, iters=8)
+    d_pad = int(2.0 * spec.n_docs / m)
+    assign = balanced_assign(rep, centers, capacity=d_pad)
+    index = build_index(docs, np.asarray(assign), m=m, n_seg=8,
+                        d_pad=d_pad, seed=0)
+    return index, queries, doc_topic, q_topic
+
+
+def test_full_pipeline_safe_equals_oracle(pipeline):
+    index, queries, *_ = pipeline
+    k = 10
+    oracle = brute_force_topk(index, queries, k)
+    safe = asc_retrieve(index, queries, k=k, mu=1.0, eta=1.0)
+    np.testing.assert_allclose(
+        np.sort(np.asarray(safe.scores), 1),
+        np.sort(np.asarray(oracle.scores), 1), rtol=1e-5, atol=1e-5)
+
+
+def test_full_pipeline_work_ordering(pipeline):
+    """ASC <= Anytime <= brute force in scored documents; approximate ASC
+    below safe ASC (the paper's efficiency ladder)."""
+    index, queries, *_ = pipeline
+    k = 10
+    oracle = brute_force_topk(index, queries, k)
+    anytime = anytime_retrieve(index, queries, k=k, mu=1.0)
+    asc_safe = asc_retrieve(index, queries, k=k, mu=1.0, eta=1.0)
+    asc_fast = asc_retrieve(index, queries, k=k, mu=0.5, eta=1.0)
+
+    w = lambda o: float(o.n_scored_docs.mean())
+    assert w(asc_safe) <= w(anytime) + 1e-6
+    assert w(anytime) <= w(oracle) + 1e-6
+    assert w(asc_fast) <= w(asc_safe) + 1e-6
+
+
+def test_full_pipeline_relevance_retention(pipeline):
+    """ASC at mu=0.9/eta=1 must retain ~all recall vs exact top-k (the
+    paper's headline Table 4 row: 'similar relevance, faster')."""
+    index, queries, *_ = pipeline
+    k = 10
+    oracle = brute_force_topk(index, queries, k)
+    approx = asc_retrieve(index, queries, k=k, mu=0.9, eta=1.0)
+    o_ids, a_ids = np.asarray(oracle.doc_ids), np.asarray(approx.doc_ids)
+    recall = np.mean([len(set(a_ids[i]) & set(o_ids[i])) / k
+                      for i in range(a_ids.shape[0])])
+    assert recall >= 0.95
+
+
+def test_full_pipeline_clustering_beats_random_assignment(pipeline):
+    """Topical k-means clustering must enable more skipping than a random
+    cluster assignment (cluster structure is what ASC exploits)."""
+    index, queries, doc_topic, _ = pipeline
+    spec = CorpusSpec(n_docs=3000, vocab=768, n_topics=24, doc_terms=44,
+                      t_pad=64, query_terms=14, q_pad=24, seed=7)
+    docs, _ = make_corpus(spec)
+    rng = np.random.default_rng(0)
+    rand_assign = rng.integers(0, 32, spec.n_docs)
+    rand_index = build_index(docs, rand_assign, m=32, n_seg=8,
+                             d_pad=index.d_pad, seed=0)
+    k = 10
+    clustered = asc_retrieve(index, queries, k=k, mu=1.0, eta=1.0)
+    random_ = asc_retrieve(rand_index, queries, k=k, mu=1.0, eta=1.0)
+    # %C — the paper's cluster-admission metric (Table 2/4): topical
+    # clusters let bound-based pruning reject far more clusters than a
+    # random assignment, whose per-cluster maxima all look alike.
+    assert float(clustered.n_scored_clusters.mean()) < \
+        float(random_.n_scored_clusters.mean())
+
+
+def test_counters_are_consistent(pipeline):
+    index, queries, *_ = pipeline
+    out = asc_retrieve(index, queries, k=10, mu=0.7, eta=1.0)
+    n_seg_max = index.m * index.n_seg
+    assert int(out.n_scored_clusters.max()) <= index.m
+    assert int(out.n_scored_segments.max()) <= n_seg_max
+    # scored docs bounded by admitted clusters * cluster capacity
+    assert bool(np.all(np.asarray(out.n_scored_docs)
+                       <= np.asarray(out.n_scored_clusters) * index.d_pad))
