@@ -19,6 +19,7 @@ SUITES = [
     ("table5_models", "Table 5: weight regimes"),
     ("table6_zeroshot", "Table 6: zero-shot collections"),
     ("table7_budget", "Table 7: budgets + static pruning"),
+    ("lifecycle_churn", "Lifecycle: churn vs full rebuild"),
     ("roofline", "Roofline from dry-run artifacts"),
 ]
 

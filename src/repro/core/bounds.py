@@ -69,14 +69,8 @@ def cluster_bounds(index: ClusterIndex, queries: QueryBatch,
     max_s = b.max(axis=-1)
     avg_s = b.mean(axis=-1)
     # BoundSum: same contraction on the segment-collapsed table.
-    collapsed = ClusterIndex(
-        doc_tids=index.doc_tids, doc_tw=index.doc_tw,
-        doc_mask=index.doc_mask, doc_ids=index.doc_ids,
-        doc_seg=index.doc_seg,
-        seg_max=index.seg_max.max(axis=1, keepdims=True),
-        scale=index.scale, cluster_ndocs=index.cluster_ndocs,
-        vocab=index.vocab, n_seg=1,
-    )
+    collapsed = index.replace(
+        seg_max=index.seg_max.max(axis=1, keepdims=True), n_seg=1)
     if impl == "gather":
         bound_sum = segment_bounds_gather(collapsed, queries)[..., 0]
     else:

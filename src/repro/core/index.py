@@ -5,6 +5,11 @@ sparse corpus + a cluster assignment and emits the padded, quantized,
 TPU-shardable :class:`ClusterIndex`. At production scale this runs sharded
 over the data pipeline (each host builds the clusters it owns); the layout
 below is identical per shard.
+
+The packing core (:func:`pack_clusters`) is shared with the online write
+path: ``lifecycle.MutableIndex`` compaction re-packs the live documents of
+a mutated index through exactly this code, so offline builds and online
+re-segmentation can never diverge in layout or seg_max semantics.
 """
 
 from __future__ import annotations
@@ -44,49 +49,48 @@ def capacity_rebalance(assign: np.ndarray, m: int, d_pad: int,
     return assign.astype(np.int32)
 
 
-def build_index(
-    docs: SparseDocs,
+def pack_clusters(
+    safe_tids: np.ndarray,
+    tw_u8: np.ndarray,
     assign: np.ndarray,
     m: int,
     n_seg: int,
-    d_pad: int | None = None,
+    d_pad: int,
+    vocab: int,
+    doc_ids: np.ndarray | None = None,
     seg_method: str = "random_uniform",
     dense_rep: np.ndarray | None = None,
-    seed: int = 0,
-) -> ClusterIndex:
-    """Assemble the padded forward index + segmented max-weight table."""
-    tids = np.asarray(docs.tids)
-    tw = np.asarray(docs.tw, np.float32)
-    mask = np.asarray(docs.mask)
-    n_docs, t_pad = tids.shape
-    V = docs.vocab
-    rng = np.random.default_rng(seed)
+    rng: np.random.Generator | None = None,
+) -> dict[str, np.ndarray]:
+    """Pack quantized docs into the (m, d_pad) slab layout + seg_max table.
 
-    assign = np.asarray(assign, np.int64)
-    if d_pad is None:
-        d_pad = int(max(1, np.bincount(assign, minlength=m).max()))
-    assign = capacity_rebalance(assign, m, d_pad)
+    safe_tids: (n_docs, t_pad) term ids with padding already mapped to
+               ``vocab`` (the zero landing slot), dtype uint16/int32.
+    tw_u8:     (n_docs, t_pad) quantized weights (0 at padding).
+    doc_ids:   global id per row (defaults to arange) — compaction passes
+               the surviving original ids through here.
 
-    # ---- global uint8 quantization (weights first, maxima after) ----
-    live_max = float((tw * mask).max()) if n_docs else 1.0
-    scale = max(live_max, 1e-6) / 255.0
-    tw_u8 = np.clip(np.round(tw / scale), 0, 255).astype(np.uint8)
-    tw_u8 = np.where(mask, tw_u8, 0).astype(np.uint8)
+    Returns the host-side arrays of a :class:`ClusterIndex` (everything
+    except ``scale``). Used by both the offline build and online
+    compaction/re-segmentation, which is what keeps the seg_max invariant
+    (exact max over the packed docs' quantized weights) single-sourced.
+    """
+    n_docs, t_pad = safe_tids.shape
+    V = vocab
+    rng = rng or np.random.default_rng(0)
+    if doc_ids is None:
+        doc_ids_in = np.arange(n_docs, dtype=np.int64)
+    else:
+        doc_ids_in = np.asarray(doc_ids, np.int64)
 
-    # ---- place docs into (m, d_pad) slabs ----
-    # term ids are uint16 when the vocab allows (WordPiece's 30522 does):
-    # 3 bytes/posting instead of 5 — the TPU-native stand-in for the
-    # paper's SIMD-BP128 posting compression (EXPERIMENTS.md asc iter 1)
-    tid_dtype = np.uint16 if V < 2**16 else np.int32
+    tid_dtype = safe_tids.dtype
     doc_tids = np.full((m, d_pad, t_pad), V, tid_dtype)
     doc_tw = np.zeros((m, d_pad, t_pad), np.uint8)
     doc_mask = np.zeros((m, d_pad), bool)
-    doc_ids = np.full((m, d_pad), -1, np.int32)
+    out_ids = np.full((m, d_pad), -1, np.int32)
     doc_seg = np.zeros((m, d_pad), np.int32)
     seg_max = np.zeros((m, n_seg, V), np.uint8)
     cluster_ndocs = np.zeros((m,), np.int32)
-
-    safe_tids = np.where(mask, tids, V).astype(tid_dtype)
 
     for c in range(m):
         members = np.nonzero(assign == c)[0]
@@ -97,7 +101,7 @@ def build_index(
         doc_tids[c, :nc] = safe_tids[members]
         doc_tw[c, :nc] = tw_u8[members]
         doc_mask[c, :nc] = True
-        doc_ids[c, :nc] = members
+        out_ids[c, :nc] = doc_ids_in[members]
 
         if seg_method == "random_uniform":
             seg = segmentation.random_uniform_segments(rng, nc, n_seg)
@@ -118,15 +122,68 @@ def build_index(
             keep = t < V
             np.maximum.at(seg_max[c, j], t[keep], w[keep])
 
+    return dict(doc_tids=doc_tids, doc_tw=doc_tw, doc_mask=doc_mask,
+                doc_ids=out_ids, doc_seg=doc_seg, seg_max=seg_max,
+                cluster_ndocs=cluster_ndocs)
+
+
+def build_index(
+    docs: SparseDocs,
+    assign: np.ndarray,
+    m: int,
+    n_seg: int,
+    d_pad: int | None = None,
+    seg_method: str = "random_uniform",
+    dense_rep: np.ndarray | None = None,
+    seed: int = 0,
+    scale: float | None = None,
+    doc_ids: np.ndarray | None = None,
+) -> ClusterIndex:
+    """Assemble the padded forward index + segmented max-weight table.
+
+    ``scale`` overrides the derived global quantization scale — the online
+    write path pins it so an incrementally-mutated index and its
+    rebuilt-from-scratch equivalent quantize identically (and so the churn
+    tests can compare them bit-exactly).
+    """
+    tids = np.asarray(docs.tids)
+    tw = np.asarray(docs.tw, np.float32)
+    mask = np.asarray(docs.mask)
+    n_docs, _ = tids.shape
+    V = docs.vocab
+    rng = np.random.default_rng(seed)
+
+    assign = np.asarray(assign, np.int64)
+    if d_pad is None:
+        d_pad = int(max(1, np.bincount(assign, minlength=m).max()))
+    assign = capacity_rebalance(assign, m, d_pad)
+
+    # ---- global uint8 quantization (weights first, maxima after) ----
+    if scale is None:
+        live_max = float((tw * mask).max()) if n_docs else 1.0
+        scale = max(live_max, 1e-6) / 255.0
+    tw_u8 = np.clip(np.round(tw / scale), 0, 255).astype(np.uint8)
+    tw_u8 = np.where(mask, tw_u8, 0).astype(np.uint8)
+
+    # term ids are uint16 when the vocab allows (WordPiece's 30522 does):
+    # 3 bytes/posting instead of 5 — the TPU-native stand-in for the
+    # paper's SIMD-BP128 posting compression (EXPERIMENTS.md asc iter 1)
+    tid_dtype = np.uint16 if V < 2**16 else np.int32
+    safe_tids = np.where(mask, tids, V).astype(tid_dtype)
+
+    packed = pack_clusters(safe_tids, tw_u8, assign, m, n_seg, d_pad, V,
+                           doc_ids=doc_ids, seg_method=seg_method,
+                           dense_rep=dense_rep, rng=rng)
+
     return ClusterIndex(
-        doc_tids=jnp.asarray(doc_tids),
-        doc_tw=jnp.asarray(doc_tw),
-        doc_mask=jnp.asarray(doc_mask),
-        doc_ids=jnp.asarray(doc_ids),
-        doc_seg=jnp.asarray(doc_seg),
-        seg_max=jnp.asarray(seg_max),
+        doc_tids=jnp.asarray(packed["doc_tids"]),
+        doc_tw=jnp.asarray(packed["doc_tw"]),
+        doc_mask=jnp.asarray(packed["doc_mask"]),
+        doc_ids=jnp.asarray(packed["doc_ids"]),
+        doc_seg=jnp.asarray(packed["doc_seg"]),
+        seg_max=jnp.asarray(packed["seg_max"]),
         scale=jnp.float32(scale),
-        cluster_ndocs=jnp.asarray(cluster_ndocs),
+        cluster_ndocs=jnp.asarray(packed["cluster_ndocs"]),
         vocab=V,
         n_seg=n_seg,
     )

@@ -118,12 +118,16 @@ def brute_force_topk(index: ClusterIndex, queries: QueryBatch,
 
 def _search_one_query(index: ClusterIndex, qmap: jax.Array,
                       seg_b: jax.Array, max_s: jax.Array, avg_s: jax.Array,
-                      order_key: jax.Array, cfg: SearchConfig) -> tuple:
+                      order_key: jax.Array, cfg: SearchConfig,
+                      budget: jax.Array | None = None) -> tuple:
     """The grouped-visitation loop for a single query.
 
     seg_b (m, n_seg), max_s/avg_s/order_key (m,). Returns (ids, scores,
     counters). For anytime methods callers pass the collapsed bounds
     (seg_b == bound_sum[:, None] with n_seg picked up from the array).
+    ``budget`` is an optional *traced* cluster-budget override so the
+    serving feedback loop can retarget latency without recompiling
+    (cfg.cluster_budget is static and would re-trace on every change).
     """
     m = index.m
     G = cfg.group_size
@@ -140,8 +144,11 @@ def _search_one_query(index: ClusterIndex, qmap: jax.Array,
     # actually *scored* consume budget — clusters skipped by the (mu, eta)
     # test are free, so tighter pruning stretches the same budget deeper
     # into the visitation order (Table 7's ASC+budget > Anytime+budget).
-    budget = (jnp.int32(cfg.cluster_budget)
-              if cfg.cluster_budget is not None else jnp.int32(m + 1))
+    if budget is None:
+        budget = (jnp.int32(cfg.cluster_budget)
+                  if cfg.cluster_budget is not None else jnp.int32(m + 1))
+    else:
+        budget = jnp.asarray(budget, jnp.int32)
 
     mu = jnp.float32(cfg.mu)
     eta = jnp.float32(cfg.eta)
@@ -216,8 +223,11 @@ def _search_one_query(index: ClusterIndex, qmap: jax.Array,
 
 @partial(jax.jit, static_argnames=("cfg",))
 def retrieve(index: ClusterIndex, queries: QueryBatch,
-             cfg: SearchConfig) -> TopK:
-    """Batched cluster-based retrieval with the configured method."""
+             cfg: SearchConfig, budget: jax.Array | None = None) -> TopK:
+    """Batched cluster-based retrieval with the configured method.
+
+    ``budget`` (optional, traced) overrides ``cfg.cluster_budget`` without
+    retracing — the serving engine's adaptive-latency knob."""
     stats = cluster_bounds(index, queries, impl=cfg.bounds_impl,
                            use_kernel=cfg.use_kernel)
     qmaps = queries.dense_map()                               # (n_q, V+1)
@@ -233,7 +243,7 @@ def retrieve(index: ClusterIndex, queries: QueryBatch,
 
     fn = jax.vmap(
         lambda qmap, b, mx, av, key: _search_one_query(
-            index, qmap, b, mx, av, key, cfg))
+            index, qmap, b, mx, av, key, cfg, budget=budget))
     ids, scores, n_docs, n_clusters, n_segments = fn(
         qmaps, seg_b, max_s, avg_s, order_key)
     return TopK(doc_ids=ids, scores=scores, n_scored_docs=n_docs,

@@ -172,6 +172,17 @@ class ClusterIndex:
     def n_docs(self) -> jax.Array:
         return self.cluster_ndocs.sum()
 
+    @property
+    def free_slots(self) -> jax.Array:
+        """(m,) free slots per cluster — the write path's admission /
+        headroom metadata. ``cluster_ndocs`` counts live docs and slots
+        freed by tombstoning are reusable, so this is exact under churn."""
+        return self.d_pad - self.cluster_ndocs
+
+    def replace(self, **updates) -> "ClusterIndex":
+        """Functional update of data fields and/or static metadata."""
+        return dataclasses.replace(self, **updates)
+
     def nbytes(self) -> int:
         return sum(
             x.size * x.dtype.itemsize

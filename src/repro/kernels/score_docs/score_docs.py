@@ -21,6 +21,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.utils import pallas_tpu_compiler_params
+
+_CompilerParams = pallas_tpu_compiler_params()
+
 
 def _kernel(scale_ref, tids_ref, tw_ref, qmap_ref, out_ref):
     tids = tids_ref[...].astype(jnp.int32)                # (BD, T)
@@ -61,7 +65,7 @@ def score_docs_kernel(
         ],
         out_specs=pl.BlockSpec((block_d, 1), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((Dp, 1), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary",)),
         interpret=interpret,
     )(scale.reshape(1), doc_tids, doc_tw, qmap)

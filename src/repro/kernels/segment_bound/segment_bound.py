@@ -24,6 +24,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.utils import pallas_tpu_compiler_params
+
+_CompilerParams = pallas_tpu_compiler_params()
+
 
 def _kernel(scale_ref, table_ref, qmap_ref, out_ref, *, n_v: int):
     k = pl.program_id(2)
@@ -80,7 +84,7 @@ def segment_bound_gemm(
         ],
         out_specs=pl.BlockSpec((block_q, block_s), lambda i, j, k: (j, i)),
         out_shape=jax.ShapeDtypeStruct((Qp, Sp), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(scale.reshape(1), table, qmap)

@@ -1,11 +1,22 @@
 """Serving launcher: ``python -m repro.launch.serve [...]``.
 
-Builds an ASC cluster-skipping index over a synthetic corpus (or encoder
-outputs via --from-encoder) and serves query batches through the
-RetrievalEngine, printing latency percentiles and work counters. With
-``--devices N`` the index is sharded over a forced host mesh and served
-through the shard_map selective-search path — the same code that runs on
-the production (pod, data, model) mesh.
+Builds an ASC cluster-skipping index over a synthetic corpus (or cold
+starts from a saved one via --load-dir) and serves query batches through
+the RetrievalEngine, printing latency percentiles and work counters.
+
+Lifecycle options:
+  --churn N       between batches, delete+insert N docs through the
+                  IndexWriter and publish a new epoch; the engine serves
+                  from the SnapshotPublisher, pinning one epoch per batch.
+  --budget-ms T   adaptive latency target: the engine's AdaptiveBudget
+                  feedback loop retargets the cluster budget per batch
+                  (traced scalar — no recompiles).
+  --save-dir D    persist the final index (versioned npz shards).
+  --load-dir D    cold-start from a persisted index instead of building.
+
+With ``--devices N`` the index is sharded over a forced host mesh and
+served through the shard_map selective-search path — the same code that
+runs on the production (pod, data, model) mesh.
 """
 
 import argparse
@@ -25,6 +36,10 @@ def _parse():
     ap.add_argument("--batch-size", type=int, default=16)
     ap.add_argument("--budget-ms", type=float, default=0.0,
                     help="latency target (0 = unbudgeted)")
+    ap.add_argument("--churn", type=int, default=0,
+                    help="docs deleted+inserted between batches")
+    ap.add_argument("--save-dir", type=str, default="")
+    ap.add_argument("--load-dir", type=str, default="")
     ap.add_argument("--devices", type=int, default=0)
     return ap.parse_args()
 
@@ -45,6 +60,7 @@ def main() -> None:
     from repro.core.index import build_index
     from repro.core.search import SearchConfig, retrieve
     from repro.data.synthetic import CorpusSpec, make_corpus, make_queries
+    from repro.lifecycle import IndexWriter, load_index, save_index
     from repro.serving.engine import (AdaptiveBudget, RetrievalEngine,
                                       distributed_retrieve,
                                       index_shard_specs)
@@ -52,20 +68,33 @@ def main() -> None:
     spec = CorpusSpec(n_docs=args.n_docs, vocab=args.vocab,
                       n_topics=max(8, args.clusters // 2))
     docs, doc_topic = make_corpus(spec)
-    rep = dense_rep_projection(docs, dim=96)
-    centers, _ = lloyd_kmeans(jax.random.PRNGKey(0), rep,
-                              k=args.clusters, iters=8)
-    d_pad = int(2.0 * args.n_docs / args.clusters)
-    assign = balanced_assign(rep, centers, capacity=d_pad)
-    index = build_index(docs, np.asarray(assign), m=args.clusters,
-                        n_seg=args.segments, d_pad=d_pad)
-    print(f"[serve] index: {args.clusters}x{args.segments}, "
+    if args.load_dir:
+        index, manifest = load_index(args.load_dir)
+        print(f"[serve] cold start from {args.load_dir} "
+              f"(epoch {manifest['epoch']}, v{manifest['format_version']})")
+        if index.vocab != spec.vocab:
+            raise SystemExit(
+                f"[serve] queries are generated over --vocab {spec.vocab} "
+                f"but the loaded index covers vocab {index.vocab}; pass a "
+                f"matching --vocab with --load-dir")
+    else:
+        rep = dense_rep_projection(docs, dim=96)
+        centers, _ = lloyd_kmeans(jax.random.PRNGKey(0), rep,
+                                  k=args.clusters, iters=8)
+        d_pad = int(2.0 * args.n_docs / args.clusters)
+        assign = balanced_assign(rep, centers, capacity=d_pad)
+        index = build_index(docs, np.asarray(assign), m=args.clusters,
+                            n_seg=args.segments, d_pad=d_pad)
+    print(f"[serve] index: {index.m}x{index.n_seg}, "
           f"{index.nbytes() / 2**20:.1f} MiB, "
           f"{jax.device_count()} device(s)")
 
     cfg = SearchConfig(k=args.k, mu=args.mu, eta=args.eta)
 
     if args.devices and jax.device_count() >= 4:
+        if args.churn or args.save_dir or args.budget_ms:
+            print("[serve] warning: --churn/--save-dir/--budget-ms are "
+                  "ignored on the distributed (--devices) path")
         mesh = jax.make_mesh((jax.device_count() // 2, 2),
                              ("data", "model"))
         ispecs = index_shard_specs(index)
@@ -94,30 +123,60 @@ def main() -> None:
               f"p99 {np.percentile(lat[1:], 99):.2f}")
         return
 
-    eng = RetrievalEngine(index, cfg)
-    warm, _ = make_queries(spec, args.batch_size, doc_topic, seed=997)
-    eng.warmup(warm)
+    writer = None
+    if args.churn > 0:
+        # synthetic churn docs have no dense representation, so placement
+        # is least-loaded; pass centroids + dense_rep for real corpora
+        writer = IndexWriter(index, seed=9)
+        source = writer.publisher
+    else:
+        source = index
     ab = (AdaptiveBudget(args.budget_ms, init_cost_ms=0.05)
           if args.budget_ms > 0 else None)
+    eng = RetrievalEngine(source, cfg, adaptive=ab)
+    warm, _ = make_queries(spec, args.batch_size, doc_topic, seed=997)
+    eng.warmup(warm)
+
+    rng = np.random.default_rng(123)
+    out = None
     for step in range(args.batches):
+        if writer is not None:
+            live = writer.mutable.live_ids()
+            for d in rng.choice(live, min(args.churn, live.size),
+                                replace=False):
+                writer.delete(int(d))
+            # cap inserts at remaining capacity so a churn rate above the
+            # delete rate degrades to steady state instead of overflowing
+            free = int(writer.mutable.free_slots.sum())
+            for _ in range(min(args.churn, free)):
+                nnz = int(rng.integers(4, 24))
+                t = rng.choice(spec.vocab, nnz, replace=False)
+                w = rng.lognormal(0.0, 0.6, nnz).astype(np.float32)
+                writer.insert(t, w)
+            snap = writer.commit()
         q, _ = make_queries(spec, args.batch_size, doc_topic, seed=step)
-        if ab is not None:
-            budget = min(ab.budget(), index.m)
-            eng_b = RetrievalEngine(
-                index, SearchConfig(k=args.k, mu=args.mu, eta=args.eta,
-                                    cluster_budget=budget))
-            eng_b.warmup(q)
-            out = eng_b.search(q)
-            ab.observe(float(out.n_scored_clusters.mean()),
-                       eng_b.stats.mean_ms)
-            eng.stats.latencies_ms.extend(eng_b.stats.latencies_ms)
-            eng.stats.n_queries += q.n_queries
-        else:
-            out = eng.search(q)
+        out = eng.search(q)
+
     s = eng.stats
-    print(f"[serve] {s.n_queries} queries: mean {s.mean_ms:.2f} ms/q, "
-          f"p50 {s.p(50):.2f}, p99 {s.p(99):.2f}; last batch scored "
-          f"{float(out.n_scored_clusters.mean()):.1f}/{index.m} clusters")
+    line = (f"[serve] {s.n_queries} queries: mean {s.mean_ms:.2f} ms/q, "
+            f"p50 {s.p(50):.2f}, p99 {s.p(99):.2f}")
+    if out is not None:
+        line += (f"; last batch scored "
+                 f"{float(out.n_scored_clusters.mean()):.1f}"
+                 f"/{index.m} clusters")
+    if writer is not None:
+        line += (f"; epoch {eng.last_epoch}, "
+                 f"{writer.mutable.n_compactions} compaction(s)")
+    if ab is not None:
+        line += f"; adaptive budget -> {ab.budget()} clusters"
+    print(line)
+
+    if args.save_dir:
+        final = eng.index
+        epoch = eng.last_epoch or 0
+        save_index(args.save_dir, final, epoch=epoch,
+                   n_shards=min(4, final.m))
+        print(f"[serve] saved epoch {epoch} -> {args.save_dir}")
 
 
 if __name__ == "__main__":

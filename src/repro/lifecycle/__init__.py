@@ -1,0 +1,20 @@
+"""Online index lifecycle: incremental mutation, epoch snapshots,
+persistence. See docs/lifecycle.md for the rank-safety argument."""
+
+from repro.lifecycle.mutable import IndexFullError, MutableIndex
+from repro.lifecycle.persist import (FORMAT_VERSION, load_index,
+                                     read_manifest, save_index)
+from repro.lifecycle.snapshot import (IndexSnapshot, IndexWriter,
+                                      SnapshotPublisher)
+
+__all__ = [
+    "FORMAT_VERSION",
+    "IndexFullError",
+    "IndexSnapshot",
+    "IndexWriter",
+    "MutableIndex",
+    "SnapshotPublisher",
+    "load_index",
+    "read_manifest",
+    "save_index",
+]

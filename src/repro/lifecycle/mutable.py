@@ -1,0 +1,311 @@
+"""Online index mutation: the write path over a static ClusterIndex.
+
+The read path (core/search.py) only ever sees immutable pytrees; all
+mutation happens here on host-side numpy mirrors of the index arrays, and
+readers pick up changes through epoch snapshots (lifecycle/snapshot.py).
+
+Rank-safety under churn (docs/lifecycle.md has the full argument):
+
+  * insert — the new document's quantized weights are max-folded into its
+    segment's row of ``seg_max`` (a monotone update), so after an insert
+    every segment bound is still the *exact* maximum over its live docs:
+    all of the paper's Propositions 1-4 hold exactly, unchanged.
+  * delete — tombstone only: ``doc_mask`` drops the doc from scoring and
+    from the brute-force oracle, while ``seg_max`` keeps the dead doc's
+    contribution. A stale maximum can only *over*-estimate, and every
+    pruning proposition only requires seg_max to upper-bound live-doc
+    scores — so bounds stay valid (just looser), and mu = eta = 1 remains
+    rank-safe. The cost is wasted work, not wrong results.
+  * quantization — the global ``scale`` is pinned at build time. An
+    inserted weight above ``255 * scale`` clips; scoring and bounds both
+    use the clipped uint8 value, so safety in quantized score space is
+    unaffected, but the doc's score is under-resolved. Clips are counted
+    as staleness, and the clipped documents' *true float weights* are
+    retained on the side so compaction can widen the scale and restore
+    their resolution (from the stored uint8 alone the original range
+    would be unrecoverable).
+
+``slack()`` turns both staleness sources (tombstones + clips) into one
+scalar; when it crosses ``compact_threshold`` the index is re-packed
+through :func:`repro.core.index.pack_clusters` — the *same* code the
+offline build uses — restoring tight maxima and a fresh scale.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.index import capacity_rebalance, pack_clusters
+from repro.core.types import ClusterIndex, SparseDocs
+
+
+class IndexFullError(RuntimeError):
+    """No cluster has a free slot for the inserted document."""
+
+
+class MutableIndex:
+    """Mutable host-side mirror of a :class:`ClusterIndex`.
+
+    Single-writer: callers serialize access (the IndexWriter in
+    lifecycle/snapshot.py does). Readers never touch this object — they
+    search immutable snapshots taken with :meth:`snapshot`.
+    """
+
+    def __init__(self, index: ClusterIndex,
+                 centroids: np.ndarray | None = None,
+                 compact_threshold: float = 0.25,
+                 seg_method: str = "random_uniform",
+                 seed: int = 0):
+        self.doc_tids = np.asarray(index.doc_tids).copy()
+        self.doc_tw = np.asarray(index.doc_tw).copy()
+        self.doc_mask = np.asarray(index.doc_mask).copy()
+        self.doc_ids = np.asarray(index.doc_ids).copy()
+        self.doc_seg = np.asarray(index.doc_seg).copy()
+        self.seg_max = np.asarray(index.seg_max).copy()
+        self.cluster_ndocs = np.asarray(index.cluster_ndocs).copy()
+        self.scale = float(index.scale)
+        self.vocab = index.vocab
+        self.n_seg = index.n_seg
+
+        self.centroids = (np.asarray(centroids, np.float32)
+                          if centroids is not None else None)
+        self.compact_threshold = compact_threshold
+        if seg_method != "random_uniform":
+            # compaction re-segments without dense representations, which
+            # kmeans_sub needs; fail here, not mid-serving at first compact
+            raise ValueError(
+                f"online re-segmentation supports only 'random_uniform', "
+                f"got {seg_method!r}")
+        self.seg_method = seg_method
+        self._rng = np.random.default_rng(seed)
+
+        live = self.doc_ids[self.doc_mask]
+        cl, sl = np.nonzero(self.doc_mask)
+        self._loc = {int(d): (int(c), int(s))
+                     for d, c, s in zip(live, cl, sl)}
+        self._next_doc_id = int(live.max()) + 1 if live.size else 0
+
+        self.n_inserts = 0
+        self.n_deletes = 0          # tombstones since last compaction
+        self.n_clipped = 0          # scale-overflow inserts since compaction
+        self.n_compactions = 0
+        # true float weights of clipped inserts, so requantization can
+        # restore their resolution: doc_id -> (tids, tw)
+        self._clipped: dict[int, tuple[np.ndarray, np.ndarray]] = {}
+
+    # -- geometry ---------------------------------------------------------
+    @property
+    def m(self) -> int:
+        return self.doc_tids.shape[0]
+
+    @property
+    def d_pad(self) -> int:
+        return self.doc_tids.shape[1]
+
+    @property
+    def t_pad(self) -> int:
+        return self.doc_tids.shape[2]
+
+    @property
+    def live(self) -> int:
+        return int(self.cluster_ndocs.sum())
+
+    @property
+    def free_slots(self) -> np.ndarray:
+        return self.d_pad - self.cluster_ndocs
+
+    # -- write path -------------------------------------------------------
+    def _choose_cluster(self, dense_rep: np.ndarray | None) -> int:
+        room = np.nonzero(self.cluster_ndocs < self.d_pad)[0]
+        if room.size == 0:
+            raise IndexFullError(
+                f"all {self.m} clusters at capacity d_pad={self.d_pad}")
+        if self.centroids is not None and dense_rep is not None:
+            d2 = ((self.centroids[room]
+                   - np.asarray(dense_rep, np.float32)[None, :]) ** 2).sum(-1)
+            return int(room[np.argmin(d2)])
+        return int(room[np.argmin(self.cluster_ndocs[room])])
+
+    def insert(self, tids: np.ndarray, tw: np.ndarray,
+               doc_id: int | None = None,
+               dense_rep: np.ndarray | None = None) -> int:
+        """Insert one sparse document; returns its global id.
+
+        Placement: nearest centroid with room when centroids are known,
+        else least-loaded cluster. Segment: uniform random, preserving the
+        Prop-4 random-segmentation model. seg_max is max-updated, so
+        post-insert bounds are exact (no staleness added).
+        """
+        tids = np.asarray(tids, np.int64).ravel()
+        tw = np.asarray(tw, np.float32).ravel()
+        keep = (tw > 0) & (tids >= 0) & (tids < self.vocab)
+        tids, tw = tids[keep], tw[keep]
+        if tids.size == 0:
+            raise ValueError("insert needs at least one positive-weight term")
+        if tids.size > self.t_pad:           # keep the heaviest t_pad terms
+            top = np.argsort(-tw)[: self.t_pad]
+            tids, tw = tids[top], tw[top]
+
+        c = self._choose_cluster(dense_rep)
+        slot = int(np.nonzero(~self.doc_mask[c])[0][0])
+        j = int(self._rng.integers(self.n_seg))
+
+        qf = np.round(tw / self.scale)
+        clipped = bool((qf > 255).any())
+        q = np.clip(qf, 0, 255).astype(np.uint8)
+
+        if doc_id is None:
+            doc_id = self._next_doc_id
+        elif doc_id in self._loc:
+            raise ValueError(f"doc_id {doc_id} already live")
+        self._next_doc_id = max(self._next_doc_id, int(doc_id) + 1)
+        if clipped:
+            self.n_clipped += 1
+            self._clipped[int(doc_id)] = (tids.copy(), tw.copy())
+
+        n = tids.size
+        self.doc_tids[c, slot, :] = self.vocab
+        self.doc_tids[c, slot, :n] = tids.astype(self.doc_tids.dtype)
+        self.doc_tw[c, slot, :] = 0
+        self.doc_tw[c, slot, :n] = q
+        self.doc_mask[c, slot] = True
+        self.doc_ids[c, slot] = doc_id
+        self.doc_seg[c, slot] = j
+        np.maximum.at(self.seg_max[c, j], tids, q)   # monotone => exact
+        self.cluster_ndocs[c] += 1
+        self._loc[int(doc_id)] = (c, slot)
+        self.n_inserts += 1
+        return int(doc_id)
+
+    def delete(self, doc_id: int) -> bool:
+        """Tombstone a document. seg_max is deliberately left stale: it
+        still upper-bounds every live doc, which is all pruning needs."""
+        loc = self._loc.pop(int(doc_id), None)
+        if loc is None:
+            return False
+        self._clipped.pop(int(doc_id), None)
+        c, slot = loc
+        self.doc_mask[c, slot] = False
+        self.doc_ids[c, slot] = -1
+        self.doc_tids[c, slot, :] = self.vocab
+        self.doc_tw[c, slot, :] = 0
+        self.doc_seg[c, slot] = 0
+        self.cluster_ndocs[c] -= 1
+        self.n_deletes += 1
+        return True
+
+    # -- staleness / compaction ------------------------------------------
+    def slack(self) -> float:
+        """Staleness metric in [0, inf): stale-bound contributors (deleted
+        docs whose maxima linger + clipped inserts) per live doc."""
+        return (self.n_deletes + self.n_clipped) / max(1, self.live)
+
+    def needs_compaction(self) -> bool:
+        return self.slack() > self.compact_threshold
+
+    def maybe_compact(self) -> bool:
+        if self.needs_compaction():
+            self.compact()
+            return True
+        return False
+
+    def compact(self, rebalance: bool = True,
+                requantize: bool | None = None) -> None:
+        """Re-pack live docs through the shared offline build path:
+        rebuilds seg_max tight, re-randomizes segments, optionally
+        rebalances overfull clusters, and (when clips happened or
+        ``requantize=True``) re-derives the quantization scale from the
+        retained *unclipped* float weights — the stored uint8 values
+        alone max out at exactly ``255 * scale`` and could never widen
+        the range."""
+        live_c, live_s = np.nonzero(self.doc_mask)
+        n_live = live_c.size
+        safe_tids = self.doc_tids[live_c, live_s]          # (n_live, t_pad)
+        tw_u8 = self.doc_tw[live_c, live_s]
+        ids = self.doc_ids[live_c, live_s].astype(np.int64)
+        assign = live_c.astype(np.int64)
+
+        if requantize is None:
+            requantize = bool(self._clipped)
+        if requantize and n_live:
+            floats = tw_u8.astype(np.float32) * self.scale
+            true_max = float(floats.max()) if floats.size else 0.0
+            for _, cw in self._clipped.values():
+                true_max = max(true_max, float(cw.max()))
+            new_scale = max(true_max, 1e-6) / 255.0
+            tw_u8 = np.clip(np.round(floats / new_scale), 0, 255
+                            ).astype(np.uint8)
+            # clipped docs re-enter at full resolution from their true
+            # float weights instead of the saturated uint8 copies
+            row_of = {int(i): r for r, i in enumerate(ids)}
+            for did, (ct, cw) in self._clipped.items():
+                r = row_of.get(did)
+                if r is None:
+                    continue
+                row_t = np.full(self.t_pad, self.vocab, safe_tids.dtype)
+                row_w = np.zeros(self.t_pad, np.uint8)
+                row_t[: ct.size] = ct.astype(safe_tids.dtype)
+                row_w[: ct.size] = np.clip(np.round(cw / new_scale), 0, 255)
+                safe_tids[r] = row_t
+                tw_u8[r] = row_w
+            self.scale = new_scale
+            self._clipped.clear()
+
+        if rebalance:
+            assign = capacity_rebalance(assign, self.m, self.d_pad)
+
+        packed = pack_clusters(
+            safe_tids, tw_u8, assign, self.m, self.n_seg, self.d_pad,
+            self.vocab, doc_ids=ids, seg_method=self.seg_method,
+            rng=self._rng)
+        self.doc_tids = packed["doc_tids"]
+        self.doc_tw = packed["doc_tw"]
+        self.doc_mask = packed["doc_mask"]
+        self.doc_ids = packed["doc_ids"]
+        self.doc_seg = packed["doc_seg"]
+        self.seg_max = packed["seg_max"]
+        self.cluster_ndocs = packed["cluster_ndocs"]
+
+        cl, sl = np.nonzero(self.doc_mask)
+        self._loc = {int(d): (int(c), int(s))
+                     for d, c, s in zip(self.doc_ids[cl, sl], cl, sl)}
+        self.n_deletes = 0
+        self.n_clipped = len(self._clipped)   # 0 unless requantize skipped
+        self.n_compactions += 1
+
+    def live_ids(self) -> np.ndarray:
+        """Global ids of all live (non-tombstoned) documents."""
+        return np.fromiter(self._loc.keys(), np.int64, len(self._loc))
+
+    # -- read-side handoff ------------------------------------------------
+    def snapshot(self) -> ClusterIndex:
+        """Immutable device copy of the current state. jnp.asarray copies
+        host memory, so later mutation never leaks into a published
+        snapshot."""
+        return ClusterIndex(
+            doc_tids=jnp.asarray(self.doc_tids),
+            doc_tw=jnp.asarray(self.doc_tw),
+            doc_mask=jnp.asarray(self.doc_mask),
+            doc_ids=jnp.asarray(self.doc_ids),
+            doc_seg=jnp.asarray(self.doc_seg),
+            seg_max=jnp.asarray(self.seg_max),
+            scale=jnp.float32(self.scale),
+            cluster_ndocs=jnp.asarray(self.cluster_ndocs),
+            vocab=self.vocab,
+            n_seg=self.n_seg,
+        )
+
+    def to_sparse_docs(self) -> tuple[SparseDocs, np.ndarray, np.ndarray]:
+        """Live docs as (SparseDocs, assignment, global ids) — the
+        rebuild-from-scratch equivalent the churn tests compare against.
+        Weights are dequantized with the pinned scale."""
+        live_c, live_s = np.nonzero(self.doc_mask)
+        tids = self.doc_tids[live_c, live_s].astype(np.int32)
+        tw = self.doc_tw[live_c, live_s].astype(np.float32) * self.scale
+        mask = tids < self.vocab
+        tids = np.where(mask, tids, -1)
+        docs = SparseDocs(tids=jnp.asarray(tids), tw=jnp.asarray(tw),
+                          mask=jnp.asarray(mask), vocab=self.vocab)
+        return docs, live_c.astype(np.int64), \
+            self.doc_ids[live_c, live_s].astype(np.int64)

@@ -1,0 +1,159 @@
+"""Versioned persistence of ClusterIndex shards.
+
+Layout (one directory per saved index)::
+
+    <dir>/manifest.json     format version, epoch, geometry, scale, shards
+    <dir>/shard_0000.npz    cluster rows [0, r1)
+    <dir>/shard_0001.npz    cluster rows [r1, r2) ...
+
+Shards split the cluster (m) axis so a multi-host serving tier can load
+only the clusters it owns; a single-host load concatenates them. Fresh
+saves are atomic (tmp dir + ``os.replace``); overwriting an existing
+checkpoint swaps the old one aside first, so a crash at any point leaves
+either the old or the new data intact on disk — ``load_index`` falls back
+to the swapped-aside copy if the crash hit the brief window between the
+two renames. Same protocol family as training/checkpoint.py.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import shutil
+import time
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.types import ClusterIndex
+
+FORMAT_VERSION = 1
+
+# cluster-axis-sharded array fields, in manifest order
+_FIELDS = ("doc_tids", "doc_tw", "doc_mask", "doc_ids", "doc_seg",
+           "seg_max", "cluster_ndocs")
+
+
+def _shard_rows(m: int, n_shards: int) -> list[int]:
+    """Boundaries [0, ..., m] splitting the cluster axis near-evenly."""
+    return [round(s * m / n_shards) for s in range(n_shards + 1)]
+
+
+def save_index(directory: str, index: ClusterIndex, *, epoch: int = 0,
+               n_shards: int = 1, extra: dict | None = None) -> str:
+    """Atomically write ``index`` under ``directory``; returns the path."""
+    if not 1 <= n_shards <= index.m:
+        raise ValueError(f"n_shards must be in [1, m={index.m}]")
+    host = {f: np.asarray(getattr(index, f)) for f in _FIELDS}
+    rows = _shard_rows(index.m, n_shards)
+
+    parent = os.path.dirname(os.path.abspath(directory)) or "."
+    os.makedirs(parent, exist_ok=True)
+    tmp = os.path.join(parent,
+                       f".tmp-{os.path.basename(directory)}-{os.getpid()}")
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    for s in range(n_shards):
+        lo, hi = rows[s], rows[s + 1]
+        np.savez(os.path.join(tmp, f"shard_{s:04d}.npz"),
+                 **{f: a[lo:hi] for f, a in host.items()})
+    manifest = {
+        "format_version": FORMAT_VERSION,
+        "epoch": int(epoch),
+        "time": time.time(),
+        "vocab": index.vocab,
+        "n_seg": index.n_seg,
+        "m": index.m,
+        "d_pad": index.d_pad,
+        "t_pad": index.t_pad,
+        "scale": float(index.scale),
+        "n_shards": n_shards,
+        "shard_rows": rows,
+        "extra": extra or {},
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    base = os.path.basename(directory)
+    if os.path.exists(directory):
+        # never destroy the previous checkpoint before the new one is in
+        # place: swap the old aside, promote, then reap — a crash leaves
+        # either the old or the new checkpoint recoverable on disk
+        old = os.path.join(parent, f".old-{base}-{os.getpid()}")
+        if os.path.exists(old):
+            shutil.rmtree(old)
+        os.replace(directory, old)
+        os.replace(tmp, directory)
+    else:
+        os.replace(tmp, directory)
+    # reap swapped-aside copies from this save AND any earlier crashed
+    # save (their pids differ) — the promoted checkpoint supersedes them
+    for stale in glob.glob(os.path.join(parent, f".old-{base}-*")):
+        shutil.rmtree(stale, ignore_errors=True)
+    return directory
+
+
+def _recover_path(directory: str) -> str:
+    """If ``directory`` vanished in the rename window of an interrupted
+    overwrite, fall back to the swapped-aside previous checkpoint."""
+    if os.path.exists(os.path.join(directory, "manifest.json")):
+        return directory
+    parent = os.path.dirname(os.path.abspath(directory)) or "."
+    base = os.path.basename(directory)
+    survivors = sorted(glob.glob(os.path.join(parent, f".old-{base}-*")),
+                       key=os.path.getmtime)
+    if survivors:
+        return survivors[-1]
+    return directory                     # let the open() raise normally
+
+
+def read_manifest(directory: str) -> dict:
+    directory = _recover_path(directory)
+    with open(os.path.join(directory, "manifest.json")) as f:
+        manifest = json.load(f)
+    version = manifest.get("format_version")
+    if version != FORMAT_VERSION:
+        raise ValueError(
+            f"index at {directory!r} has format version {version}; this "
+            f"build reads version {FORMAT_VERSION}")
+    return manifest
+
+
+def load_index(directory: str,
+               shards: list[int] | None = None
+               ) -> tuple[ClusterIndex, dict]:
+    """Load (a subset of the shards of) a saved index.
+
+    ``shards`` selects which cluster shards to load (default: all — the
+    single-host cold start). Returns (index, manifest); with a shard
+    subset the index's ``m`` is the subset's row count and ``doc_ids``
+    stay global.
+    """
+    directory = _recover_path(directory)
+    manifest = read_manifest(directory)
+    pick = list(range(manifest["n_shards"])) if shards is None else shards
+    parts: dict[str, list[np.ndarray]] = {f: [] for f in _FIELDS}
+    for s in pick:
+        path = os.path.join(directory, f"shard_{s:04d}.npz")
+        with np.load(path) as z:
+            for f in _FIELDS:
+                parts[f].append(z[f])
+    arrays = {f: np.concatenate(parts[f], axis=0) for f in _FIELDS}
+
+    if shards is None and arrays["doc_tids"].shape[0] != manifest["m"]:
+        raise ValueError("shard rows do not reassemble the manifest's m")
+
+    index = ClusterIndex(
+        doc_tids=jnp.asarray(arrays["doc_tids"]),
+        doc_tw=jnp.asarray(arrays["doc_tw"]),
+        doc_mask=jnp.asarray(arrays["doc_mask"]),
+        doc_ids=jnp.asarray(arrays["doc_ids"]),
+        doc_seg=jnp.asarray(arrays["doc_seg"]),
+        seg_max=jnp.asarray(arrays["seg_max"]),
+        scale=jnp.float32(manifest["scale"]),
+        cluster_ndocs=jnp.asarray(arrays["cluster_ndocs"]),
+        vocab=manifest["vocab"],
+        n_seg=manifest["n_seg"],
+    )
+    return index, manifest

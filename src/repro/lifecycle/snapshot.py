@@ -1,0 +1,136 @@
+"""Epoch-based snapshot publishing: immutable reads over a mutating index.
+
+The serving invariant: a query only ever runs against one
+:class:`IndexSnapshot`, pinned for the whole request. The writer batches
+mutations into a :class:`MutableIndex` and publishes a fresh device copy
+as a new epoch; the swap is a single reference assignment under a lock, so
+readers either see the old epoch or the new one — never a half-written
+index. In-flight queries keep their pinned handle alive (plain Python
+refcounting), which is exactly double-buffering: the previous epoch's
+arrays survive until the last reader drops them.
+
+Snapshots are jit-stable by construction: geometry (m, d_pad, t_pad,
+n_seg, vocab) is static metadata on ClusterIndex, so republishing an index
+of the same shape re-uses the engine's compiled executable; only a
+compaction that changes geometry would retrace (ours never does — capacity
+is fixed at build time).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+import weakref
+
+import numpy as np
+
+from repro.core.types import ClusterIndex
+from repro.lifecycle.mutable import MutableIndex
+
+
+@dataclasses.dataclass(frozen=True)
+class IndexSnapshot:
+    """An immutable, epoch-stamped index handle."""
+
+    index: ClusterIndex
+    epoch: int
+    n_docs: int
+    published_s: float
+
+    @staticmethod
+    def of(index: ClusterIndex, epoch: int) -> "IndexSnapshot":
+        return IndexSnapshot(index=index, epoch=epoch,
+                             n_docs=int(np.asarray(index.doc_mask).sum()),
+                             published_s=time.time())
+
+
+class SnapshotPublisher:
+    """Atomic epoch swap between one writer and many readers."""
+
+    def __init__(self, index: ClusterIndex | None = None):
+        self._lock = threading.Lock()
+        self._current: IndexSnapshot | None = None
+        # weakref only: the publisher must not pin the N-1 epoch's device
+        # arrays itself — old epochs live exactly as long as their last
+        # in-flight reader, which is the whole double-buffering contract
+        self._previous: weakref.ref | None = None
+        if index is not None:
+            self.publish(index)
+
+    def publish(self, index: ClusterIndex) -> IndexSnapshot:
+        with self._lock:
+            epoch = self._current.epoch + 1 if self._current else 0
+            snap = IndexSnapshot.of(index, epoch)
+            if self._current is not None:
+                self._previous = weakref.ref(self._current)
+            self._current = snap
+            return snap
+
+    @property
+    def current(self) -> IndexSnapshot:
+        with self._lock:
+            if self._current is None:
+                raise RuntimeError("nothing published yet")
+            return self._current
+
+    @property
+    def previous(self) -> IndexSnapshot | None:
+        """The N-1 epoch, if some reader still holds it alive (None once
+        the last reference drops — the publisher never pins it)."""
+        with self._lock:
+            return self._previous() if self._previous is not None else None
+
+    @property
+    def epoch(self) -> int:
+        return self.current.epoch
+
+
+class IndexWriter:
+    """Single-writer mutation batching + epoch publishing + auto-compaction.
+
+    Usage::
+
+        writer = IndexWriter(index, centroids=centers)
+        engine = RetrievalEngine(writer.publisher, cfg)   # snapshot-aware
+        writer.insert(tids, tw); writer.delete(doc_id); ...
+        writer.commit()        # compacts if stale, publishes next epoch
+    """
+
+    def __init__(self, index: ClusterIndex,
+                 centroids: np.ndarray | None = None,
+                 compact_threshold: float = 0.25,
+                 publisher: SnapshotPublisher | None = None,
+                 seg_method: str = "random_uniform",
+                 seed: int = 0):
+        self.mutable = MutableIndex(
+            index, centroids=centroids, compact_threshold=compact_threshold,
+            seg_method=seg_method, seed=seed)
+        self.publisher = publisher if publisher is not None \
+            else SnapshotPublisher(index)
+        self._pending = 0
+
+    @property
+    def pending(self) -> int:
+        """Mutations applied since the last commit (invisible to readers
+        until published)."""
+        return self._pending
+
+    def insert(self, tids, tw, doc_id: int | None = None,
+               dense_rep=None) -> int:
+        out = self.mutable.insert(tids, tw, doc_id=doc_id,
+                                  dense_rep=dense_rep)
+        self._pending += 1
+        return out
+
+    def delete(self, doc_id: int) -> bool:
+        ok = self.mutable.delete(doc_id)
+        self._pending += int(ok)
+        return ok
+
+    def commit(self) -> IndexSnapshot:
+        """Compact when slack demands it, then publish the next epoch."""
+        self.mutable.maybe_compact()
+        snap = self.publisher.publish(self.mutable.snapshot())
+        self._pending = 0
+        return snap

@@ -18,6 +18,7 @@ feedback controller.
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
 
@@ -29,13 +30,24 @@ from jax.sharding import PartitionSpec as P
 from repro.core.search import SearchConfig, retrieve, _search_one_query
 from repro.core.bounds import cluster_bounds
 from repro.core.types import ClusterIndex, QueryBatch, TopK
+from repro.lifecycle.snapshot import IndexSnapshot, SnapshotPublisher
+from repro.utils import shard_map
 
 
 @dataclasses.dataclass
 class ServeStats:
+    """Rolling serve-loop accounting. ``latencies_ms`` is a bounded window
+    (percentiles over recent traffic); under sustained load an unbounded
+    list would grow forever."""
+
+    window: int = 4096
     n_queries: int = 0
     total_time_s: float = 0.0
-    latencies_ms: list = dataclasses.field(default_factory=list)
+    latencies_ms: collections.deque = None
+
+    def __post_init__(self):
+        if self.latencies_ms is None:
+            self.latencies_ms = collections.deque(maxlen=self.window)
 
     @property
     def mean_ms(self) -> float:
@@ -45,27 +57,12 @@ class ServeStats:
         return float(np.percentile(self.latencies_ms, q)) \
             if self.latencies_ms else 0.0
 
-
-class RetrievalEngine:
-    """Batched ASC serving with latency accounting."""
-
-    def __init__(self, index: ClusterIndex, cfg: SearchConfig):
-        self.index = index
-        self.cfg = cfg
-        self.stats = ServeStats()
-        self._fn = jax.jit(lambda idx, q: retrieve(idx, q, cfg))
-
-    def warmup(self, queries: QueryBatch) -> None:
-        jax.block_until_ready(self._fn(self.index, queries))
-
-    def search(self, queries: QueryBatch) -> TopK:
-        t0 = time.perf_counter()
-        out = jax.block_until_ready(self._fn(self.index, queries))
-        dt = time.perf_counter() - t0
-        self.stats.n_queries += queries.n_queries
-        self.stats.total_time_s += dt
-        self.stats.latencies_ms.append(dt * 1e3 / max(queries.n_queries, 1))
-        return out
+    def record(self, n_queries: int, elapsed_s: float) -> float:
+        self.n_queries += n_queries
+        self.total_time_s += elapsed_s
+        per_query_ms = elapsed_s * 1e3 / max(n_queries, 1)
+        self.latencies_ms.append(per_query_ms)
+        return per_query_ms
 
 
 class AdaptiveBudget:
@@ -84,6 +81,75 @@ class AdaptiveBudget:
         if clusters_scored > 0:
             c = elapsed_ms / clusters_scored
             self.cost_ms = self.ema * self.cost_ms + (1 - self.ema) * c
+
+
+class RetrievalEngine:
+    """Batched ASC serving with latency accounting.
+
+    ``source`` may be a plain :class:`ClusterIndex` (static serving), an
+    :class:`IndexSnapshot`, or a :class:`SnapshotPublisher` (live index
+    under mutation): each search pins the publisher's current epoch for
+    the whole request, so a concurrent epoch swap never changes the result
+    of an in-flight query. The budget is passed to the jitted search as a
+    *traced* scalar, so the ``adaptive`` latency feedback loop retargets
+    the cluster budget every batch without recompiling.
+    """
+
+    def __init__(self, source: ClusterIndex | IndexSnapshot
+                 | SnapshotPublisher, cfg: SearchConfig,
+                 adaptive: AdaptiveBudget | None = None,
+                 stats_window: int = 4096):
+        if isinstance(source, ClusterIndex):
+            source = IndexSnapshot.of(source, epoch=0)
+        self._source = source
+        self.cfg = cfg
+        self.adaptive = adaptive
+        self.stats = ServeStats(window=stats_window)
+        self.last_epoch: int | None = None
+        self._fn = jax.jit(
+            lambda idx, q, budget: retrieve(idx, q, cfg, budget=budget))
+
+    def _resolve(self) -> IndexSnapshot:
+        if isinstance(self._source, SnapshotPublisher):
+            return self._source.current
+        return self._source
+
+    @property
+    def index(self) -> ClusterIndex:
+        """The index the next search will run against."""
+        return self._resolve().index
+
+    def _budget(self, snap: IndexSnapshot) -> jnp.ndarray:
+        m = snap.index.m
+        if self.adaptive is not None:
+            b = min(self.adaptive.budget(), m)
+            # an explicitly configured budget stays a hard cap — the
+            # controller may only tighten it, never exceed it
+            if self.cfg.cluster_budget is not None:
+                b = min(b, self.cfg.cluster_budget)
+        elif self.cfg.cluster_budget is not None:
+            b = self.cfg.cluster_budget
+        else:
+            b = m + 1                      # unbudgeted
+        return jnp.int32(b)
+
+    def warmup(self, queries: QueryBatch) -> None:
+        snap = self._resolve()
+        jax.block_until_ready(
+            self._fn(snap.index, queries, self._budget(snap)))
+
+    def search(self, queries: QueryBatch) -> TopK:
+        snap = self._resolve()             # pin one epoch for this request
+        t0 = time.perf_counter()
+        out = jax.block_until_ready(
+            self._fn(snap.index, queries, self._budget(snap)))
+        dt = time.perf_counter() - t0
+        per_query_ms = self.stats.record(queries.n_queries, dt)
+        self.last_epoch = snap.epoch
+        if self.adaptive is not None:
+            self.adaptive.observe(float(out.n_scored_clusters.mean()),
+                                  per_query_ms)
+        return out
 
 
 # ---------------------------------------------------------------------------
@@ -142,6 +208,6 @@ def distributed_retrieve(index: ClusterIndex, queries: QueryBatch,
     out_specs = TopK(doc_ids=P(qaxis, None), scores=P(qaxis, None),
                      n_scored_docs=P(qaxis), n_scored_clusters=P(qaxis),
                      n_scored_segments=P(qaxis))
-    fn = jax.shard_map(local, mesh=mesh, in_specs=(ispecs, qspec),
-                       out_specs=out_specs, check_vma=False)
+    fn = shard_map(local, mesh=mesh, in_specs=(ispecs, qspec),
+                   out_specs=out_specs, check_vma=False)
     return fn(index, queries)

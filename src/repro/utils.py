@@ -34,3 +34,22 @@ def tree_size_bytes(tree) -> int:
     return sum(x.size * x.dtype.itemsize
                for x in jax.tree_util.tree_leaves(tree)
                if hasattr(x, "dtype"))
+
+
+def shard_map(f, mesh, in_specs, out_specs, check_vma: bool = True):
+    """Version-portable shard_map: ``jax.shard_map`` (new API) when
+    available, else ``jax.experimental.shard_map`` with the old
+    ``check_rep`` spelling of ``check_vma``."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check_vma)
+
+
+def pallas_tpu_compiler_params():
+    """Version-portable Pallas TPU CompilerParams class (jax renamed
+    TPUCompilerParams -> CompilerParams across releases)."""
+    from jax.experimental.pallas import tpu as pltpu
+    return getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams

@@ -1,0 +1,98 @@
+"""Property-test shim: real ``hypothesis`` when installed, otherwise a
+deterministic mini fallback so the tier-1 suite runs in environments
+without the optional ``[test-prop]`` extra (see pyproject.toml).
+
+The fallback draws a fixed, seeded sample of examples per test instead of
+shrinking counterexamples — strictly weaker than hypothesis, but it keeps
+the property assertions exercised rather than skipping them wholesale.
+Only the strategy surface this repo uses is implemented
+(``sampled_from`` / ``floats`` / ``integers`` / ``lists``).
+"""
+
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import inspect
+
+    import numpy as np
+
+    _DEFAULT_EXAMPLES = 20
+
+    class _Strategy:
+        def __init__(self, draw_fn):
+            self._draw_fn = draw_fn
+
+        def draw(self, rng: np.random.Generator):
+            return self._draw_fn(rng)
+
+    class _Strategies:
+        @staticmethod
+        def sampled_from(options):
+            options = list(options)
+            return _Strategy(
+                lambda rng: options[int(rng.integers(len(options)))])
+
+        @staticmethod
+        def floats(min_value, max_value):
+            lo, hi = float(min_value), float(max_value)
+            return _Strategy(lambda rng: lo + (hi - lo) * float(rng.random()))
+
+        @staticmethod
+        def integers(min_value, max_value):
+            lo, hi = int(min_value), int(max_value)
+            return _Strategy(lambda rng: int(rng.integers(lo, hi + 1)))
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            def draw(rng):
+                n = int(rng.integers(min_size, max_size + 1))
+                return [elements.draw(rng) for _ in range(n)]
+
+            return _Strategy(draw)
+
+    st = _Strategies()
+
+    def settings(max_examples: int = _DEFAULT_EXAMPLES, deadline=None, **_):
+        """Applied outside ``given``: stamps the example count on the
+        wrapper ``given`` produced."""
+
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(*pos_strategies, **kw_strategies):
+        def deco(fn):
+            sig = inspect.signature(fn)
+            names = list(sig.parameters)
+            strategies = dict(kw_strategies)
+            if pos_strategies:
+                # hypothesis maps positional strategies onto the test's
+                # rightmost parameters
+                tail = names[len(names) - len(pos_strategies):]
+                strategies.update(zip(tail, pos_strategies))
+            remaining = [p for n, p in sig.parameters.items()
+                         if n not in strategies]
+
+            @functools.wraps(fn)
+            def wrapper(*args, **fixture_kwargs):
+                n = getattr(wrapper, "_max_examples", _DEFAULT_EXAMPLES)
+                rng = np.random.default_rng(0)
+                for _ in range(n):
+                    drawn = {k: s.draw(rng) for k, s in strategies.items()}
+                    fn(*args, **fixture_kwargs, **drawn)
+
+            # hide strategy-supplied params so pytest doesn't treat them
+            # as fixtures
+            wrapper.__signature__ = sig.replace(parameters=remaining)
+            return wrapper
+
+        return deco

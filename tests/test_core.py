@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _prop import given, settings, st
 
 from repro.core.bounds import (cluster_bounds, segment_bounds_gather,
                                segment_bounds_gemm)
@@ -140,6 +140,53 @@ def test_capacity_rebalance():
 def test_capacity_rebalance_impossible():
     with pytest.raises(ValueError):
         capacity_rebalance(np.zeros(10, np.int64), m=2, d_pad=4)
+
+
+def test_capacity_rebalance_keeps_empty_clusters_usable():
+    """Overflow must spill into completely empty clusters."""
+    assign = np.array([0] * 8)                    # clusters 1, 2 empty
+    out = capacity_rebalance(assign, m=3, d_pad=3)
+    counts = np.bincount(out, minlength=3)
+    assert (counts <= 3).all() and counts.sum() == 8
+    assert counts[1] > 0 and counts[2] > 0
+
+
+def test_capacity_rebalance_no_overflow_is_identity():
+    assign = np.array([2, 0, 1, 1, 0, 2])
+    out = capacity_rebalance(assign, m=3, d_pad=2)
+    np.testing.assert_array_equal(out, assign)
+    assert out.dtype == np.int32
+
+
+def test_capacity_rebalance_order_hint_preference():
+    """Spilled docs must follow their per-doc preference order, not the
+    least-loaded default."""
+    assign = np.array([0, 0, 0, 1])               # cluster 0 overflows by 1
+    # every doc prefers cluster 2, then 1, then 0
+    hint = np.tile(np.array([2, 1, 0]), (4, 1))
+    out = capacity_rebalance(assign, m=3, d_pad=2, order_hint=hint)
+    counts = np.bincount(out, minlength=3)
+    assert (counts <= 2).all()
+    assert counts[2] == 1                          # spill honored the hint
+    # without the hint, least-loaded wins: cluster 2 (empty) also gets it
+    out2 = capacity_rebalance(assign, m=3, d_pad=2)
+    assert np.bincount(out2, minlength=3)[2] == 1
+
+
+def test_capacity_rebalance_order_hint_skips_full_preferences():
+    assign = np.array([0, 0, 0, 1, 1])            # 0 overflows; 1 is full
+    hint = np.tile(np.array([1, 2, 0]), (5, 1))   # first choice is full
+    out = capacity_rebalance(assign, m=3, d_pad=2, order_hint=hint)
+    counts = np.bincount(out, minlength=3)
+    assert (counts <= 2).all() and counts[2] == 1
+
+
+def test_capacity_rebalance_exact_capacity_corpus():
+    """n_docs == m * d_pad: rebalance must pack every cluster full."""
+    assign = np.array([0] * 6 + [1] * 0 + [2] * 0)
+    out = capacity_rebalance(assign, m=3, d_pad=2)
+    counts = np.bincount(out, minlength=3)
+    np.testing.assert_array_equal(counts, [2, 2, 2])
 
 
 def test_build_index_dpad_override(corpus):

@@ -151,9 +151,10 @@ def body(g):
     mean, ef = compressed_mean(grads, None, axis="pod")
     return mean["w"], ef["w"]
 
-fn = jax.shard_map(body, mesh=mesh,
-                   in_specs=P("pod", None), out_specs=P(None),
-                   check_vma=False)
+from repro.utils import shard_map
+fn = shard_map(body, mesh=mesh,
+               in_specs=P("pod", None), out_specs=P(None),
+               check_vma=False)
 with mesh:
     mean, ef = fn(g_global)
 expected = np.asarray(g_global.mean(0))

@@ -11,7 +11,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _prop import given, settings, st
 
 from repro.kernels.score_docs import ops as sd_ops
 from repro.kernels.score_docs import ref as sd_ref

@@ -1,0 +1,375 @@
+"""Lifecycle subsystem tests: rank-safety under churn, snapshot epochs,
+compaction, and versioned persistence (docs/lifecycle.md).
+
+The load-bearing invariants:
+  * insert max-folds seg_max  => bounds stay *exact*;
+  * delete tombstones only    => seg_max stays a valid *upper* bound;
+  * therefore mu = eta = 1 retrieval on a churned index equals the
+    brute-force oracle — both on the churned snapshot itself and on an
+    equivalent index rebuilt from scratch with the same pinned scale;
+  * published snapshots are immutable: an epoch swap mid-stream never
+    changes an in-flight query's result.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.index import build_index
+from repro.core.search import SearchConfig, asc_retrieve, brute_force_topk
+from repro.data.synthetic import CorpusSpec, make_corpus, make_queries
+from repro.lifecycle import (FORMAT_VERSION, IndexFullError, IndexWriter,
+                             MutableIndex, SnapshotPublisher, load_index,
+                             read_manifest, save_index)
+from repro.serving.engine import RetrievalEngine
+
+SPEC = CorpusSpec(n_docs=800, vocab=256, n_topics=8, doc_terms=24, t_pad=32,
+                  query_terms=8, q_pad=12, seed=0)
+M, NSEG, D_PAD = 12, 4, 120
+
+
+@pytest.fixture(scope="module")
+def small_world():
+    docs, doc_topic = make_corpus(SPEC)
+    q, _ = make_queries(SPEC, 8, doc_topic, seed=3)
+    base = build_index(docs, doc_topic % M, m=M, n_seg=NSEG, d_pad=D_PAD,
+                       seed=0)
+    return docs, q, base
+
+
+def _recomputed_seg_max(mi: MutableIndex) -> np.ndarray:
+    out = np.zeros_like(mi.seg_max)
+    for c in range(mi.m):
+        for s in range(mi.d_pad):
+            if not mi.doc_mask[c, s]:
+                continue
+            j = mi.doc_seg[c, s]
+            t = mi.doc_tids[c, s].astype(np.int64)
+            keep = t < mi.vocab
+            np.maximum.at(out[c, j], t[keep], mi.doc_tw[c, s][keep])
+    return out
+
+
+def _churn(mi: MutableIndex, rng, n_del: int, n_ins: int) -> None:
+    for d in rng.choice(mi.live_ids(), n_del, replace=False):
+        assert mi.delete(int(d))
+    for _ in range(n_ins):
+        nnz = int(rng.integers(4, 20))
+        t = rng.choice(SPEC.vocab, nnz, replace=False)
+        w = rng.lognormal(0.0, 0.5, nnz).astype(np.float32)
+        mi.insert(t, w)
+
+
+# ---------------------------------------------------------------------------
+# seg_max invariants under mutation
+# ---------------------------------------------------------------------------
+
+def test_insert_keeps_seg_max_exact(small_world):
+    _, _, base = small_world
+    mi = MutableIndex(base, seed=1)
+    rng = np.random.default_rng(0)
+    for _ in range(40):
+        nnz = int(rng.integers(4, 20))
+        t = rng.choice(SPEC.vocab, nnz, replace=False)
+        mi.insert(t, rng.lognormal(0.0, 0.5, nnz).astype(np.float32))
+    np.testing.assert_array_equal(mi.seg_max, _recomputed_seg_max(mi))
+
+
+def test_delete_leaves_valid_upper_bound(small_world):
+    _, _, base = small_world
+    mi = MutableIndex(base, seed=1)
+    rng = np.random.default_rng(1)
+    for d in rng.choice(mi.live_ids(), 120, replace=False):
+        mi.delete(int(d))
+    tight = _recomputed_seg_max(mi)
+    assert (mi.seg_max >= tight).all()          # still an upper bound
+    assert (mi.seg_max > tight).any()           # and genuinely stale
+    assert mi.n_deletes == 120
+
+
+def test_delete_then_insert_reuses_slot():
+    """A tombstoned slot is reusable: with a single full cluster, the next
+    insert must land exactly in the freed (cluster, slot)."""
+    docs, _ = make_corpus(CorpusSpec(n_docs=30, vocab=64, n_topics=2,
+                                     doc_terms=8, t_pad=12, seed=2))
+    base = build_index(docs, np.zeros(30, np.int64), m=1, n_seg=2,
+                       d_pad=30, seed=0)
+    mi = MutableIndex(base, seed=0)
+    victim = int(mi.live_ids()[7])
+    loc = mi._loc[victim]
+    mi.delete(victim)
+    assert not mi.delete(victim)                 # idempotent tombstone
+    new_id = mi.insert([1, 2], [0.5, 0.25])
+    assert new_id != victim
+    assert mi._loc[new_id] == loc                # the freed slot, reused
+    assert mi.live == 30
+
+
+def test_insert_raises_when_full():
+    docs, _ = make_corpus(CorpusSpec(n_docs=32, vocab=64, n_topics=2,
+                                     doc_terms=8, t_pad=12, seed=1))
+    base = build_index(docs, np.zeros(32, np.int64) % 2, m=2, n_seg=2,
+                       d_pad=16, seed=0)
+    mi = MutableIndex(base)
+    with pytest.raises(IndexFullError):
+        mi.insert([1], [1.0])
+
+
+def test_insert_prefers_nearest_centroid(small_world):
+    _, _, base = small_world
+    centroids = np.zeros((M, 4), np.float32)
+    centroids[5] = 10.0
+    mi = MutableIndex(base, centroids=centroids, seed=1)
+    before = int(mi.cluster_ndocs[5])
+    mi.insert([3, 4], [0.5, 0.5], dense_rep=np.full((4,), 10.0, np.float32))
+    assert int(mi.cluster_ndocs[5]) == before + 1
+
+
+# ---------------------------------------------------------------------------
+# rank-safety under churn (the acceptance-criterion test)
+# ---------------------------------------------------------------------------
+
+def test_rank_safety_under_churn(small_world):
+    """After a randomized insert/delete sequence, safe-mode ASC on the
+    mutated index == brute force on the mutated index == brute force on
+    the equivalent index rebuilt from scratch (same pinned scale)."""
+    _, q, base = small_world
+    mi = MutableIndex(base, seed=2)
+    rng = np.random.default_rng(42)
+    for _ in range(4):                            # interleaved batches
+        _churn(mi, rng, n_del=30, n_ins=20)
+
+    snap = mi.snapshot()
+    k = 10
+    safe = asc_retrieve(snap, q, k=k, mu=1.0, eta=1.0)
+    oracle = brute_force_topk(snap, q, k)
+    np.testing.assert_allclose(
+        np.sort(np.asarray(safe.scores), 1),
+        np.sort(np.asarray(oracle.scores), 1), rtol=1e-5, atol=1e-5)
+
+    live_docs, assign, ids = mi.to_sparse_docs()
+    rebuilt = build_index(live_docs, assign, m=mi.m, n_seg=mi.n_seg,
+                          d_pad=mi.d_pad, scale=mi.scale, doc_ids=ids,
+                          seed=99)
+    reb_oracle = brute_force_topk(rebuilt, q, k)
+    reb_scores = np.sort(np.asarray(reb_oracle.scores), 1)
+    np.testing.assert_allclose(np.sort(np.asarray(safe.scores), 1),
+                               reb_scores, rtol=1e-5, atol=1e-5)
+    # doc-id agreement, tolerating ties at the k-th score
+    for qi in range(q.n_queries):
+        a = set(np.asarray(safe.doc_ids)[qi].tolist())
+        b = set(np.asarray(reb_oracle.doc_ids)[qi].tolist())
+        if a != b:
+            kth = reb_scores[qi, 0]  # ascending sort => [0] is k-th best
+            sdiff = a.symmetric_difference(b)
+            # every disagreeing doc must sit exactly at the tie threshold
+            snap_scores = dict(zip(np.asarray(oracle.doc_ids)[qi].tolist(),
+                                   np.asarray(oracle.scores)[qi].tolist()))
+            reb_scores_q = dict(
+                zip(np.asarray(reb_oracle.doc_ids)[qi].tolist(),
+                    np.asarray(reb_oracle.scores)[qi].tolist()))
+            for d in sdiff:
+                s = snap_scores.get(d, reb_scores_q.get(d))
+                assert s == pytest.approx(kth, abs=1e-5), (qi, d, s, kth)
+
+
+def test_churned_bounds_prune_no_tighter_than_rebuilt(small_world):
+    """Staleness loosens bounds: the churned index must score at least as
+    many clusters as its compacted self (same docs, tight bounds)."""
+    _, q, base = small_world
+    mi = MutableIndex(base, seed=2)
+    _churn(mi, np.random.default_rng(5), n_del=200, n_ins=30)
+    stale = asc_retrieve(mi.snapshot(), q, k=10, mu=1.0, eta=1.0)
+    mi.compact()
+    tight = asc_retrieve(mi.snapshot(), q, k=10, mu=1.0, eta=1.0)
+    assert float(stale.n_scored_segments.mean()) >= \
+        float(tight.n_scored_segments.mean()) - 1e-6
+
+
+# ---------------------------------------------------------------------------
+# compaction
+# ---------------------------------------------------------------------------
+
+def test_compaction_triggered_by_slack(small_world):
+    _, _, base = small_world
+    mi = MutableIndex(base, compact_threshold=0.1, seed=3)
+    rng = np.random.default_rng(9)
+    assert not mi.maybe_compact()
+    for d in rng.choice(mi.live_ids(), 100, replace=False):
+        mi.delete(int(d))
+    ids_expected = set(mi.live_ids().tolist())
+    assert mi.needs_compaction()
+    assert mi.maybe_compact()
+    assert mi.slack() == 0.0
+    assert mi.n_compactions == 1
+    # live set preserved, maxima tight again
+    assert set(mi.live_ids().tolist()) == ids_expected
+    np.testing.assert_array_equal(mi.seg_max, _recomputed_seg_max(mi))
+    # doc_mask / cluster_ndocs consistent after re-pack
+    np.testing.assert_array_equal(mi.doc_mask.sum(1), mi.cluster_ndocs)
+
+
+def test_compaction_requantizes_after_clip(small_world):
+    """Requantization must *widen* the scale from the retained unclipped
+    float weights (the saturated uint8 copies alone could never expand
+    the range) and restore the clipped doc's resolution."""
+    _, _, base = small_world
+    mi = MutableIndex(base, seed=4)
+    old_scale = mi.scale
+    big = 3.0 * 255.0 * old_scale         # 3x above the pinned scale range
+    did = mi.insert([7], [big])
+    assert mi.n_clipped == 1
+    mi.compact()                          # auto-requantize (clips happened)
+    assert mi.scale == pytest.approx(big / 255.0, rel=1e-6)
+    assert mi.n_clipped == 0
+    np.testing.assert_array_equal(mi.seg_max, _recomputed_seg_max(mi))
+    # the clipped doc now scores at its true weight, not the saturated one
+    c, s = mi._loc[did]
+    stored = float(mi.doc_tw[c, s].max()) * mi.scale
+    assert stored == pytest.approx(big, rel=1e-2)
+    assert stored > 2.0 * 255.0 * old_scale
+
+
+# ---------------------------------------------------------------------------
+# epoch snapshots
+# ---------------------------------------------------------------------------
+
+def test_snapshot_swap_never_changes_inflight_results(small_world):
+    """Acceptance criterion: pin an epoch, mutate + publish a new one, and
+    the pinned epoch's results are bit-identical before and after."""
+    _, q, base = small_world
+    writer = IndexWriter(base, seed=5)
+    eng = RetrievalEngine(writer.publisher,
+                          SearchConfig(k=10, mu=1.0, eta=1.0))
+    pinned = writer.publisher.current           # the in-flight handle
+    before = asc_retrieve(pinned.index, q, k=10, mu=1.0, eta=1.0)
+
+    victim = int(np.asarray(before.doc_ids)[0, 0])
+    writer.delete(victim)
+    for i in range(20):
+        writer.insert([i % SPEC.vocab, (i * 7) % SPEC.vocab], [0.9, 0.4])
+    swapped = writer.commit()
+    assert swapped.epoch == pinned.epoch + 1
+
+    after = asc_retrieve(pinned.index, q, k=10, mu=1.0, eta=1.0)
+    np.testing.assert_array_equal(np.asarray(before.doc_ids),
+                                  np.asarray(after.doc_ids))
+    np.testing.assert_array_equal(np.asarray(before.scores),
+                                  np.asarray(after.scores))
+
+    # the engine, by contrast, picks up the new epoch — and the deleted
+    # doc is gone from its results
+    out = eng.search(q)
+    assert eng.last_epoch == swapped.epoch
+    assert victim not in set(np.asarray(out.doc_ids)[0].tolist())
+
+
+def test_publisher_epochs_and_previous(small_world):
+    _, _, base = small_world
+    pub = SnapshotPublisher(base)
+    assert pub.epoch == 0 and pub.previous is None
+    held = pub.current                    # an in-flight reader's handle
+    s1 = pub.publish(base)
+    assert s1.epoch == 1
+    assert pub.previous is held           # alive while the reader holds it
+    del held
+    # the publisher itself must not pin old epochs' device arrays
+    assert pub.previous is None
+    with pytest.raises(RuntimeError):
+        SnapshotPublisher().current
+
+
+def test_writer_pending_counts(small_world):
+    _, _, base = small_world
+    w = IndexWriter(base, seed=6)
+    w.insert([1], [0.5])
+    assert not w.delete(10 ** 9)                 # unknown id: no-op
+    assert w.pending == 1
+    w.commit()
+    assert w.pending == 0
+
+
+# ---------------------------------------------------------------------------
+# persistence
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_shards", [1, 3])
+def test_save_load_roundtrip(small_world, tmp_path, n_shards):
+    _, _, base = small_world
+    path = save_index(str(tmp_path / "ix"), base, epoch=7,
+                      n_shards=n_shards, extra={"note": "t"})
+    loaded, manifest = load_index(path)
+    assert manifest["epoch"] == 7
+    assert manifest["format_version"] == FORMAT_VERSION
+    assert manifest["n_shards"] == n_shards
+    assert manifest["extra"] == {"note": "t"}
+    assert loaded.vocab == base.vocab and loaded.n_seg == base.n_seg
+    for f in ("doc_tids", "doc_tw", "doc_mask", "doc_ids", "doc_seg",
+              "seg_max", "cluster_ndocs"):
+        np.testing.assert_array_equal(np.asarray(getattr(loaded, f)),
+                                      np.asarray(getattr(base, f)))
+    assert float(loaded.scale) == pytest.approx(float(base.scale))
+
+
+def test_load_shard_subset(small_world, tmp_path):
+    _, _, base = small_world
+    path = save_index(str(tmp_path / "ix"), base, n_shards=4)
+    manifest = read_manifest(path)
+    part, _ = load_index(path, shards=[0])
+    rows = manifest["shard_rows"]
+    assert part.m == rows[1] - rows[0]
+    np.testing.assert_array_equal(
+        np.asarray(part.seg_max), np.asarray(base.seg_max)[: part.m])
+
+
+def test_load_rejects_unknown_version(small_world, tmp_path):
+    import json
+    _, _, base = small_world
+    path = save_index(str(tmp_path / "ix"), base)
+    mpath = os.path.join(path, "manifest.json")
+    with open(mpath) as f:
+        manifest = json.load(f)
+    manifest["format_version"] = FORMAT_VERSION + 1
+    with open(mpath, "w") as f:
+        json.dump(manifest, f)
+    with pytest.raises(ValueError, match="format version"):
+        load_index(path)
+
+
+def test_save_is_atomic_overwrite(small_world, tmp_path):
+    _, _, base = small_world
+    path = str(tmp_path / "ix")
+    save_index(path, base, epoch=1)
+    save_index(path, base, epoch=2)              # overwrite in place
+    _, manifest = load_index(path)
+    assert manifest["epoch"] == 2
+    leftovers = [p for p in os.listdir(tmp_path)
+                 if p.startswith(".tmp-") or p.startswith(".old-")]
+    assert not leftovers
+
+
+def test_load_recovers_from_interrupted_overwrite(small_world, tmp_path):
+    """Crash between the two overwrite renames: the checkpoint path is
+    gone but the swapped-aside copy must still cold-start."""
+    _, _, base = small_world
+    path = str(tmp_path / "ix")
+    save_index(path, base, epoch=1)
+    os.replace(path, str(tmp_path / ".old-ix-999"))   # mid-overwrite state
+    loaded, manifest = load_index(path)
+    assert manifest["epoch"] == 1
+    np.testing.assert_array_equal(np.asarray(loaded.doc_ids),
+                                  np.asarray(base.doc_ids))
+
+
+def test_save_load_search_equivalence(small_world, tmp_path):
+    _, q, base = small_world
+    path = save_index(str(tmp_path / "ix"), base)
+    loaded, _ = load_index(path)
+    a = asc_retrieve(base, q, k=10, mu=1.0, eta=1.0)
+    b = asc_retrieve(loaded, q, k=10, mu=1.0, eta=1.0)
+    np.testing.assert_array_equal(np.asarray(a.doc_ids),
+                                  np.asarray(b.doc_ids))

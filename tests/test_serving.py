@@ -125,3 +125,48 @@ def test_static_pruning_compatibility(corpus, queries):
     overlap = np.mean([len(set(a[i]) & set(b[i])) / 10
                        for i in range(a.shape[0])])
     assert overlap > 0.5
+
+
+def test_serve_stats_window_is_bounded():
+    """Sustained traffic must not grow latency memory without bound."""
+    from repro.serving.engine import ServeStats
+    s = ServeStats(window=16)
+    for i in range(1000):
+        s.record(n_queries=1, elapsed_s=0.001 * (i + 1))
+    assert len(s.latencies_ms) == 16
+    assert s.n_queries == 1000
+    # window holds only the most recent observations
+    assert s.p(0) >= 0.001 * 985 * 1e3 - 1e-6
+    assert s.p(99) >= s.p(50)
+
+
+def test_engine_adaptive_budget_wired(index, queries):
+    """The AdaptiveBudget feedback loop must actually cap the engine's
+    scored clusters (regression: it used to be never connected)."""
+    from repro.serving.engine import AdaptiveBudget
+    q, _ = queries
+    # absurdly tight target -> controller floor of 8 clusters
+    ab = AdaptiveBudget(target_ms=1e-6, init_cost_ms=1.0)
+    eng = RetrievalEngine(index, SearchConfig(k=10, mu=1.0, eta=1.0,
+                                              method="anytime"),
+                          adaptive=ab)
+    out = eng.search(q)
+    assert float(out.n_scored_clusters.max()) <= 8 + 1e-6
+    # and the controller observed the batch
+    assert ab.cost_ms != 1.0
+
+
+def test_engine_adaptive_budget_retargets_without_retrace(index, queries):
+    """Budget is a traced scalar: changing it between batches must reuse
+    the compiled executable."""
+    from repro.serving.engine import AdaptiveBudget
+    q, _ = queries
+    ab = AdaptiveBudget(target_ms=5.0, init_cost_ms=0.1)
+    eng = RetrievalEngine(index, SearchConfig(k=10, mu=1.0, eta=1.0,
+                                              method="anytime"),
+                          adaptive=ab)
+    eng.warmup(q)
+    n0 = eng._fn._cache_size()
+    for _ in range(3):
+        eng.search(q)          # budget moves every batch via observe()
+    assert eng._fn._cache_size() == n0
