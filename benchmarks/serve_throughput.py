@@ -1,0 +1,120 @@
+"""Serving throughput: batched tile-shared visitation vs per-query path.
+
+Measures queries/sec and batch-latency p50/p95 for the two retrieval
+engines (core/search.py) across serving batch sizes {1, 8, 64} on the
+synthetic MS MARCO-shaped index (Zipfian topical corpus, WordPiece-like
+padded geometry). The per-query engine is the preserved original path —
+``vmap`` of a per-query grouped while-loop that re-gathers every admitted
+cluster tile once *per query*; the batched engine fetches each tile once
+per *batch* (docs/perf.md has the bytes-moved accounting).
+
+Claim checked (ISSUE 2 acceptance): >= 3x queries/sec over the per-query
+path at batch size 64. Smoke mode (``REPRO_BENCH_SMOKE=1``, the CI
+setting) shrinks the index, turns the Pallas kernels on in interpret
+mode, and only sanity-checks that the numbers exist — it exists to keep
+the JSON emission path and the kernel plumbing from rotting, not to
+measure a container's scheduler noise.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import (DEFAULT_SPEC, built_index, corpus_bundle,
+                               print_table)
+from repro.core.index import build_index
+from repro.core.search import SearchConfig, retrieve
+from repro.data.synthetic import CorpusSpec, make_corpus, make_queries
+
+BATCH_SIZES = (1, 8, 64)
+SPEEDUP_CLAIM = 3.0          # at batch 64, full mode
+
+
+def _smoke() -> bool:
+    return os.environ.get("REPRO_BENCH_SMOKE", "0") != "0"
+
+
+def _bench_pair(index, queries, cfgs: dict, reps: int) -> dict:
+    """Time several engines with *interleaved* reps (one rep of each per
+    round), so container load spikes hit every engine equally and the
+    speedup ratio stays a paired comparison."""
+    fns, outs, lat = {}, {}, {}
+    for name, cfg in cfgs.items():
+        fns[name] = jax.jit(lambda i, q, c=cfg: retrieve(i, q, c))
+        outs[name] = jax.block_until_ready(fns[name](index, queries))
+        lat[name] = []
+    for _ in range(reps):
+        for name in cfgs:
+            t0 = time.perf_counter()
+            jax.block_until_ready(fns[name](index, queries))
+            lat[name].append(time.perf_counter() - t0)
+    results = {}
+    for name in cfgs:
+        lat_ms = np.asarray(lat[name]) * 1e3
+        p50 = float(np.percentile(lat_ms, 50))
+        results[name] = {
+            "batch_ms_p50": round(p50, 3),
+            "batch_ms_p95": round(float(np.percentile(lat_ms, 95)), 3),
+            "qps": round(queries.n_queries / (p50 / 1e3), 1),
+            "scored_clusters": round(
+                float(outs[name].n_scored_clusters.mean()), 1),
+        }
+    return results
+
+
+def run() -> dict:
+    smoke = _smoke()
+    if smoke:
+        spec = CorpusSpec(n_docs=300, vocab=192, n_topics=6, doc_terms=16,
+                          t_pad=24, query_terms=6, q_pad=8, seed=0)
+        docs, doc_topic = make_corpus(spec)
+        index = build_index(docs, doc_topic % 8, m=8, n_seg=2, seed=0)
+        reps = 3
+    else:
+        spec = DEFAULT_SPEC
+        _, doc_topic, *_ = corpus_bundle(spec)   # cached, shared w/ index
+        index = built_index(m=48, n_seg=4)
+        reps = 15
+
+    rows = []
+    result = {"smoke": smoke, "speedup_claim": SPEEDUP_CLAIM, "points": []}
+    speedup_at = {}
+    for nq in BATCH_SIZES:
+        queries, _ = make_queries(spec, nq, doc_topic, seed=7)
+        point = {"batch": nq}
+        cfgs = {
+            engine: SearchConfig(k=10, mu=0.9, eta=1.0, bounds_impl="gemm",
+                                 group_size=4, engine=engine,
+                                 use_kernel=smoke)
+            for engine in ("per_query", "batched")
+        }
+        for engine, r in _bench_pair(index, queries, cfgs, reps).items():
+            point[engine] = r
+            rows.append({"batch": nq, "engine": engine, **r})
+        point["speedup"] = round(
+            point["batched"]["qps"] / point["per_query"]["qps"], 2)
+        speedup_at[nq] = point["speedup"]
+        result["points"].append(point)
+
+    print_table("serve throughput (old per-query vs batched engine)", rows)
+    print(f"\nspeedup (qps batched / qps per-query): "
+          + ", ".join(f"batch {b}: {s}x" for b, s in speedup_at.items()))
+
+    if smoke:
+        # smoke checks plumbing, not a loaded container's timer noise
+        assert speedup_at[64] > 0.0
+    else:
+        assert speedup_at[64] >= SPEEDUP_CLAIM, (
+            f"batched engine speedup {speedup_at[64]}x at batch 64 "
+            f"below the {SPEEDUP_CLAIM}x claim")
+        # batching must help monotonically-ish: big batches amortize best
+        assert speedup_at[64] >= speedup_at[1]
+    return result
+
+
+if __name__ == "__main__":
+    run()

@@ -7,8 +7,10 @@ Given a query Q and cluster index with segmented maximum term weights:
     AvgSBound(C_i) = (1/n) sum_j B_{i,j}    (Formula 4)
     BoundSum(C_i)  = sum_{t in Q} max_{d in C_i} w_{t,d}   (Formula 2)
 
-``BoundSum`` equals ``B`` computed on the segment-collapsed table
-(max over segments), so one primitive serves every method.
+``BoundSum`` equals ``B`` computed on the segment-collapsed table — which
+the index *stores* (``seg_max_collapsed``, maintained at build/compaction
+time and max-folded by online inserts), so no retrieve call ever rebuilds
+``seg_max.max(axis=1)``.
 
 Two implementations of the same contraction:
   * ``segment_bounds_gather`` — gather ``q_pad`` columns from the table and
@@ -18,7 +20,9 @@ Two implementations of the same contraction:
     run ``(m*n_seg, V) @ (V, n_q)`` as one quantized GEMM; the Pallas kernel
     in ``kernels/segment_bound`` implements exactly this contraction on the
     MXU (int8 feed, fused dequant) and is the serving hot path for query
-    batches.
+    batches. ``cluster_bounds`` stacks the collapsed BoundSum row under the
+    segment table so segment bounds *and* BoundSum come out of one fused
+    GEMM instead of two separate contractions.
 """
 
 from __future__ import annotations
@@ -29,52 +33,81 @@ import jax.numpy as jnp
 from repro.core.types import ClusterIndex, QueryBatch
 
 
+def _gather_bounds(table: jax.Array, queries: QueryBatch,
+                   scale: jax.Array) -> jax.Array:
+    """(n_q, m, n) bounds from a (m, n, V) uint8 max-weight table."""
+    V = table.shape[-1]
+    qt = jnp.where(queries.mask, queries.tids, V)                # (n_q, qp)
+    qw = jnp.where(queries.mask, queries.tw, 0.0)
+    # pad the vocab axis with a zero slot so PAD_TERM gathers are no-ops
+    padded = jnp.pad(table, ((0, 0), (0, 0), (0, 1)))            # (m,n,V+1)
+    cols = padded[:, :, qt]                                      # (m,n,nq,qp)
+    b = jnp.einsum("mnqt,qt->qmn", cols.astype(jnp.float32), qw)
+    return b * scale
+
+
 def segment_bounds_gather(index: ClusterIndex,
                           queries: QueryBatch) -> jax.Array:
     """(n_q, m, n_seg) float32 segment bounds B[q, i, j]."""
-    qt = jnp.where(queries.mask, queries.tids, index.vocab)      # (n_q, qp)
-    qw = jnp.where(queries.mask, queries.tw, 0.0)
-    # pad the vocab axis with a zero slot so PAD_TERM gathers are no-ops
-    table = jnp.pad(index.seg_max, ((0, 0), (0, 0), (0, 1)))     # (m,n,V+1)
-    cols = table[:, :, qt]                                       # (m,n,n_q,qp)
-    b = jnp.einsum("mnqt,qt->qmn", cols.astype(jnp.float32), qw)
-    return b * index.scale
+    return _gather_bounds(index.seg_max, queries, index.scale)
 
 
 def segment_bounds_gemm(index: ClusterIndex, queries: QueryBatch,
-                        use_kernel: bool = False) -> jax.Array:
-    """Same contraction as one dense GEMM over the vocab axis."""
-    qmap = queries.dense_map()[:, : index.vocab]                 # (n_q, V)
+                        use_kernel: bool = False,
+                        qmaps: jax.Array | None = None) -> jax.Array:
+    """Same contraction as one dense GEMM over the vocab axis.
+
+    ``qmaps`` optionally passes pre-materialized dense query maps
+    (``queries.dense_map()`` output) so callers that already built them
+    for scoring don't scatter the batch twice."""
+    if qmaps is None:
+        qmaps = queries.dense_map()
+    qmap = qmaps[:, : index.vocab]                               # (n_q, V)
     m, n_seg, V = index.seg_max.shape
     table = index.seg_max.reshape(m * n_seg, V)
+    b = _gemm_bounds(table, qmap, index.scale, use_kernel)
+    return b.reshape(queries.n_queries, m, n_seg)
+
+
+def _gemm_bounds(table: jax.Array, qmap: jax.Array, scale: jax.Array,
+                 use_kernel: bool) -> jax.Array:
     if use_kernel:
         from repro.kernels.segment_bound import ops as sb_ops
-        b = sb_ops.segment_bound_gemm(table, qmap, index.scale)
-    else:
-        b = jnp.einsum("sv,qv->qs", table.astype(jnp.float32), qmap)
-        b = b * index.scale
-    return b.reshape(queries.n_queries, m, n_seg)
+        return sb_ops.segment_bound_gemm(table, qmap, scale)
+    return jnp.einsum("sv,qv->qs", table.astype(jnp.float32), qmap) * scale
 
 
 def cluster_bounds(index: ClusterIndex, queries: QueryBatch,
                    impl: str = "gather",
-                   use_kernel: bool = False) -> dict[str, jax.Array]:
-    """All bound statistics needed by any method, each (n_q, m)."""
+                   use_kernel: bool = False,
+                   qmaps: jax.Array | None = None) -> dict[str, jax.Array]:
+    """All bound statistics needed by any method, each (n_q, m).
+
+    BoundSum comes from the precomputed ``seg_max_collapsed`` row; under
+    ``impl="gemm"`` it is stacked below the segment table so one fused
+    GEMM produces every statistic for the whole batch. The stack is a
+    per-call uint8 copy of the table — cheap next to the f32 contraction
+    at this scale, but at very large ``m * n_seg * V`` the copy traffic
+    overtakes the saved dispatch; ROADMAP lists storing the stacked
+    layout on the index as the follow-on."""
+    m, n_seg, V = index.seg_max.shape
     if impl == "gather":
         b = segment_bounds_gather(index, queries)
+        bound_sum = _gather_bounds(index.seg_max_collapsed[:, None, :],
+                                   queries, index.scale)[..., 0]
     elif impl == "gemm":
-        b = segment_bounds_gemm(index, queries, use_kernel=use_kernel)
+        if qmaps is None:
+            qmaps = queries.dense_map()
+        qmap = qmaps[:, :V]
+        fused_table = jnp.concatenate(
+            [index.seg_max.reshape(m * n_seg, V), index.seg_max_collapsed],
+            axis=0)                                      # (m*(n_seg+1), V)
+        fused = _gemm_bounds(fused_table, qmap, index.scale, use_kernel)
+        b = fused[:, : m * n_seg].reshape(queries.n_queries, m, n_seg)
+        bound_sum = fused[:, m * n_seg:]                 # (n_q, m)
     else:
         raise ValueError(f"unknown bounds impl {impl!r}")
     max_s = b.max(axis=-1)
     avg_s = b.mean(axis=-1)
-    # BoundSum: same contraction on the segment-collapsed table.
-    collapsed = index.replace(
-        seg_max=index.seg_max.max(axis=1, keepdims=True), n_seg=1)
-    if impl == "gather":
-        bound_sum = segment_bounds_gather(collapsed, queries)[..., 0]
-    else:
-        bound_sum = segment_bounds_gemm(collapsed, queries,
-                                        use_kernel=use_kernel)[..., 0]
     return {"segment": b, "max_s": max_s, "avg_s": avg_s,
             "bound_sum": bound_sum}

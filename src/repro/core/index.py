@@ -124,6 +124,7 @@ def pack_clusters(
 
     return dict(doc_tids=doc_tids, doc_tw=doc_tw, doc_mask=doc_mask,
                 doc_ids=out_ids, doc_seg=doc_seg, seg_max=seg_max,
+                seg_max_collapsed=seg_max.max(axis=1),
                 cluster_ndocs=cluster_ndocs)
 
 
@@ -182,6 +183,7 @@ def build_index(
         doc_ids=jnp.asarray(packed["doc_ids"]),
         doc_seg=jnp.asarray(packed["doc_seg"]),
         seg_max=jnp.asarray(packed["seg_max"]),
+        seg_max_collapsed=jnp.asarray(packed["seg_max_collapsed"]),
         scale=jnp.float32(scale),
         cluster_ndocs=jnp.asarray(packed["cluster_ndocs"]),
         vocab=V,

@@ -1,20 +1,34 @@
 """Top-k retrieval: ASC, Anytime Ranking, Anytime*, and the rank-safe oracle.
 
-One batched-visitation engine expresses all methods (DESIGN.md §2):
+Two engines express every method (DESIGN.md §2):
 
-  1. bounds for all clusters are computed up front (one quantized GEMM /
-     gather for the whole query batch — the Pallas hot path);
-  2. clusters are sorted by the method's ordering key (MaxSBound for ASC,
-     BoundSum for Anytime/Anytime*);
-  3. a ``lax.while_loop`` walks the sorted clusters in groups of
-     ``group_size``; per group the method's (mu, eta) pruning test masks
-     clusters, segment-level pruning masks segments, survivors are scored
-     densely (gather from the VMEM query map), and the running top-k /
-     threshold theta is updated;
-  4. the loop exits as soon as the next group's ordering key can no longer
-     beat ``theta / exit_div`` — at that point *every* remaining cluster is
-     provably pruned (keys are sorted non-increasing), which is the batched
-     analogue of the paper's sequential early termination.
+``engine="batched"`` (default, the serving hot path) — one batch-frontier
+loop for the whole query batch:
+
+  1. bounds for all clusters are computed up front — segment bounds *and*
+     the collapsed BoundSum row come out of one fused GEMM / gather over
+     the precomputed ``seg_max_collapsed`` table (core/bounds.py);
+  2. clusters are walked in a *shared* visitation order (fair interleave:
+     a cluster's priority is the best rank any query in the batch assigns
+     it), so each cluster's (d_pad, t_pad) forward tile crosses the HBM
+     boundary **once per batch** instead of once per query;
+  3. per group, every query applies its own (mu, eta) admission test and
+     segment-level pruning; survivors are scored against all pinned query
+     maps by the fused kernel (kernels/score_cluster_batch), which applies
+     the admission mask *inside* and skips fully-pruned tiles;
+  4. each query's top-k/theta is updated by an incremental
+     threshold-filtered merge (group candidates above theta -> top-k of the
+     group -> 2k-merge with the running heap), not a concatenate + top_k
+     over k + G*d_pad candidates;
+  5. a query leaves the frontier when the suffix-maximum of its ordering
+     key over the remaining visitation positions can no longer beat
+     ``theta / exit_div``; the loop exits when every query is done.
+
+``engine="per_query"`` — the original ``vmap`` of a per-query grouped
+``lax.while_loop`` over that query's own bound-sorted order. Kept as the
+reference oracle: benchmarks/serve_throughput.py measures the batched
+engine against it, and tests/test_rank_safety.py asserts result-set
+equivalence at mu = eta = 1.
 
 Pruning rules (theta = current top-k threshold):
   ASC       : cluster pruned iff MaxS <= theta/mu  AND  AvgS <= theta/eta;
@@ -23,13 +37,18 @@ Pruning rules (theta = current top-k threshold):
               expressed here as the n_seg=1 segment rule).
   Anytime   : Anytime* with mu = 1 (rank-safe), optional cluster budget —
               the TPU analogue of the paper's time budget is a bound on the
-              number of clusters visited (visitation order is identical, so
-              the early-termination semantics match).
+              number of clusters visited. Under the batched engine a
+              budgeted query additionally only admits clusters inside its
+              *own* top-``budget`` bound ranks, so the budget is spent on
+              that query's best clusters even though the walk order is
+              shared (docs/perf.md §rank-safety).
 
 theta only ever grows (only true scores enter the heap), so the paper's
-Propositions 1-4 apply unchanged; batched visitation updates theta once per
-group, i.e. prunes *no more* than the sequential algorithm — approximation
-guarantees are preserved (tests/test_rank_safety.py checks them).
+Propositions 1-4 apply unchanged under *any* visitation order; the shared
+batch order updates each query's theta no more often than the sequential
+algorithm, i.e. prunes *no more* — approximation guarantees are preserved
+(tests/test_rank_safety.py checks them, including batched-vs-per-query
+equivalence).
 """
 
 from __future__ import annotations
@@ -42,6 +61,7 @@ import jax.numpy as jnp
 
 from repro.core.bounds import cluster_bounds
 from repro.core.types import ClusterIndex, QueryBatch, TopK
+from repro.kernels.score_cluster_batch.ref import score_cluster_batch_ref
 
 NEG = jnp.float32(jnp.finfo(jnp.float32).min)
 
@@ -57,6 +77,7 @@ class SearchConfig:
     bounds_impl: str = "gather"        # gather | gemm
     use_kernel: bool = False           # pallas kernels where available
     doc_prune: bool = True             # segment-level document pruning
+    engine: str = "batched"            # batched | per_query (reference)
 
     def __post_init__(self):
         if not (0.0 < self.mu <= self.eta <= 1.0):
@@ -64,6 +85,8 @@ class SearchConfig:
                 f"need 0 < mu <= eta <= 1, got mu={self.mu} eta={self.eta}")
         if self.method not in ("asc", "anytime", "anytime_star"):
             raise ValueError(f"unknown method {self.method!r}")
+        if self.engine not in ("batched", "per_query"):
+            raise ValueError(f"unknown engine {self.engine!r}")
 
 
 def score_docs_ref(doc_tids: jax.Array, doc_tw: jax.Array, qmap: jax.Array,
@@ -116,11 +139,19 @@ def brute_force_topk(index: ClusterIndex, queries: QueryBatch,
     )
 
 
+def _resolve_budget(cfg: SearchConfig, m: int,
+                    budget: jax.Array | None) -> jax.Array:
+    if budget is None:
+        return (jnp.int32(cfg.cluster_budget)
+                if cfg.cluster_budget is not None else jnp.int32(m + 1))
+    return jnp.asarray(budget, jnp.int32)
+
+
 def _search_one_query(index: ClusterIndex, qmap: jax.Array,
                       seg_b: jax.Array, max_s: jax.Array, avg_s: jax.Array,
                       order_key: jax.Array, cfg: SearchConfig,
                       budget: jax.Array | None = None) -> tuple:
-    """The grouped-visitation loop for a single query.
+    """The grouped-visitation loop for a single query (reference engine).
 
     seg_b (m, n_seg), max_s/avg_s/order_key (m,). Returns (ids, scores,
     counters). For anytime methods callers pass the collapsed bounds
@@ -144,11 +175,7 @@ def _search_one_query(index: ClusterIndex, qmap: jax.Array,
     # actually *scored* consume budget — clusters skipped by the (mu, eta)
     # test are free, so tighter pruning stretches the same budget deeper
     # into the visitation order (Table 7's ASC+budget > Anytime+budget).
-    if budget is None:
-        budget = (jnp.int32(cfg.cluster_budget)
-                  if cfg.cluster_budget is not None else jnp.int32(m + 1))
-    else:
-        budget = jnp.asarray(budget, jnp.int32)
+    budget = _resolve_budget(cfg, m, budget)
 
     mu = jnp.float32(cfg.mu)
     eta = jnp.float32(cfg.eta)
@@ -221,6 +248,190 @@ def _search_one_query(index: ClusterIndex, qmap: jax.Array,
     return top_ids, top_scores, n_docs, n_clusters, n_segments
 
 
+def _score_cluster_batch(index: ClusterIndex, cids: jax.Array,
+                         qmaps: jax.Array, seg_admit: jax.Array,
+                         cfg: SearchConfig) -> jax.Array:
+    """(n_q, G, d_pad) admission-masked scores; the cluster tiles are
+    gathered from HBM once for the whole batch."""
+    tids = index.doc_tids[cids]                             # (G, dp, tp)
+    tw = index.doc_tw[cids]
+    dseg = index.doc_seg[cids]
+    dmask = index.doc_mask[cids]
+    if cfg.use_kernel:
+        from repro.kernels.score_cluster_batch import ops as scb_ops
+        return scb_ops.score_cluster_batch(tids, tw, dseg, dmask,
+                                           qmaps, seg_admit, index.scale)
+    return score_cluster_batch_ref(tids, tw, dseg, dmask,
+                                   qmaps, seg_admit, index.scale)
+
+
+def _search_batch(index: ClusterIndex, qmaps: jax.Array, seg_b: jax.Array,
+                  max_s: jax.Array, avg_s: jax.Array, order_key: jax.Array,
+                  cfg: SearchConfig,
+                  budget: jax.Array | None = None) -> tuple:
+    """Batch-frontier visitation: every query walks the same cluster order.
+
+    qmaps (n_q, V+1); seg_b (n_q, m, n_seg); max_s/avg_s/order_key
+    (n_q, m). Returns per-query (ids, scores, counters) like the vmapped
+    reference engine — each cluster tile is fetched once per *batch*.
+    """
+    m, G, k = index.m, cfg.group_size, cfg.k
+    dp = index.d_pad
+    n_q = order_key.shape[0]
+    n_groups = -(-m // G)
+    m_padded = n_groups * G
+
+    budget = _resolve_budget(cfg, m, budget)
+    mu = jnp.float32(cfg.mu)
+    eta = jnp.float32(cfg.eta)
+    exit_div = eta if cfg.method == "asc" else mu
+
+    # rank[q, c]: position of cluster c in query q's own bound order.
+    # Budgeted queries admit only clusters inside their own rank horizon
+    # `budget + n_pruned_q`, so the shared walk spends each query's budget
+    # on *that query's* best clusters, and clusters the (mu, eta) test
+    # prunes inside the horizon extend it — the sequential semantics where
+    # skipped clusters are free (exact for G=1 in own order; docs/perf.md).
+    rank = jnp.argsort(jnp.argsort(-order_key, axis=1), axis=1)  # (n_q, m)
+
+    # shared visitation order — fair interleave: a cluster's priority is
+    # the best rank any query gives it, so everyone's top picks land in
+    # the first groups and thetas rise fast for the whole batch. Ties
+    # broken by the batch-max key (normalized below 1 so it never
+    # reorders across priorities).
+    prio = rank.min(axis=0).astype(jnp.float32)                  # (m,)
+    tie = order_key.max(axis=0)
+    tie = tie / (jnp.abs(tie).max() + 1.0)
+    shared = jnp.argsort(prio - tie)                             # (m,)
+    shared_p = jnp.pad(shared, (0, m_padded - m))
+
+    # per-query ordering key along the shared walk + its suffix maximum:
+    # once suffix[q, pos] <= theta_q / exit_div, *every* cluster query q
+    # has not yet visited is provably pruned — the per-query analogue of
+    # the sorted-order early exit.
+    key_shared = jnp.pad(order_key[:, shared],
+                         ((0, 0), (0, m_padded - m)),
+                         constant_values=NEG)                    # (n_q, mp)
+    suffix = jnp.flip(
+        jax.lax.cummax(jnp.flip(key_shared, axis=1), axis=1), axis=1)
+
+    kc = min(k, G * dp)
+
+    def cond(state):
+        g, done, *_ = state
+        return jnp.logical_and(g < n_groups,
+                               jnp.logical_not(jnp.all(done)))
+
+    def body(state):
+        (g, done, top_scores, top_ids,
+         n_docs, n_clusters, n_segments, n_pruned) = state
+        theta = top_scores[:, k - 1]                          # (n_q,)
+        pos = g * G
+        cids = jax.lax.dynamic_slice(shared_p, (pos,), (G,))  # (G,)
+        glive = (jnp.arange(G) + pos) < m                     # (G,)
+
+        if cfg.method == "asc":
+            pruned = ((max_s[:, cids] <= theta[:, None] / mu)
+                      & (avg_s[:, cids] <= theta[:, None] / eta))
+        else:
+            pruned = order_key[:, cids] <= theta[:, None] / mu
+        live_q = glive[None, :] & ~done[:, None]              # (n_q, G)
+        gate = rank[:, cids] < (budget + n_pruned)[:, None]
+        admit = live_q & ~pruned & gate
+        admit &= (n_clusters[:, None]
+                  + jnp.cumsum(admit.astype(jnp.int32), axis=1)) <= budget
+        # pruned clusters inside the horizon are budget-free: widen it
+        n_pruned += (live_q & pruned & gate).sum(axis=1).astype(jnp.int32)
+
+        b = seg_b[:, cids, :]                                 # (n_q,G,ns)
+        if cfg.doc_prune:
+            div = eta if cfg.method == "asc" else mu
+            seg_admit = b > theta[:, None, None] / div
+        else:
+            seg_admit = jnp.ones_like(b, dtype=bool)
+        seg_admit = seg_admit & admit[:, :, None]
+
+        # one tile fetch for the whole batch; the admission mask is applied
+        # inside the scorer (the Pallas kernel skips fully-pruned tiles
+        # via pl.when on a scalar-prefetched any-admit flag). Non-admitted
+        # and tombstoned docs come out exactly NEG, which is the single
+        # source of truth for the work counter and the candidate filter.
+        scores = _score_cluster_batch(index, cids, qmaps, seg_admit, cfg)
+        doc_admit = scores > NEG                              # (n_q,G,dp)
+
+        # incremental threshold-filtered merge: group candidates must beat
+        # the query's theta; top-k of the group then a 2k merge — never a
+        # top_k over k + G*d_pad. Masked docs are NEG and theta >= NEG,
+        # so the theta filter subsumes the admission mask.
+        cand = jnp.where(scores > theta[:, None, None],
+                         scores, NEG).reshape(n_q, G * dp)
+        g_top, g_pos = jax.lax.top_k(cand, kc)
+        ids_flat = index.doc_ids[cids].reshape(-1)            # (G*dp,)
+        g_ids = jnp.where(g_top > NEG, ids_flat[g_pos], -1)
+        if kc < k:
+            g_top = jnp.pad(g_top, ((0, 0), (0, k - kc)),
+                            constant_values=NEG)
+            g_ids = jnp.pad(g_ids, ((0, 0), (0, k - kc)),
+                            constant_values=-1)
+        merged_s = jnp.concatenate([top_scores, g_top], axis=1)
+        merged_i = jnp.concatenate([top_ids, g_ids], axis=1)
+        top_scores, sel = jax.lax.top_k(merged_s, k)          # 2k -> k
+        top_ids = jnp.take_along_axis(merged_i, sel, axis=1)
+
+        n_docs += doc_admit.sum(axis=(1, 2)).astype(jnp.int32)
+        n_clusters += admit.sum(axis=1).astype(jnp.int32)
+        n_segments += seg_admit.sum(axis=(1, 2)).astype(jnp.int32)
+
+        theta_new = top_scores[:, k - 1]
+        nxt = jnp.minimum((g + 1) * G, m_padded - 1)
+        remaining = jax.lax.dynamic_slice_in_dim(
+            suffix, nxt, 1, axis=1)[:, 0]                     # (n_q,)
+        done = (done
+                | (remaining <= theta_new / exit_div)
+                | (n_clusters >= budget))
+        return (g + 1, done, top_scores, top_ids,
+                n_docs, n_clusters, n_segments, n_pruned)
+
+    init = (jnp.int32(0), jnp.zeros((n_q,), bool),
+            jnp.full((n_q, k), NEG), jnp.full((n_q, k), -1, jnp.int32),
+            jnp.zeros((n_q,), jnp.int32), jnp.zeros((n_q,), jnp.int32),
+            jnp.zeros((n_q,), jnp.int32), jnp.zeros((n_q,), jnp.int32))
+    (_, _, top_scores, top_ids, n_docs, n_clusters, n_segments, _) = (
+        jax.lax.while_loop(cond, body, init))
+    top_ids = jnp.where(top_scores > NEG, top_ids, -1)
+    return top_ids, top_scores, n_docs, n_clusters, n_segments
+
+
+def _method_stats(stats: dict, cfg: SearchConfig) -> tuple:
+    """(seg_b, max_s, avg_s, order_key) for the configured method."""
+    if cfg.method == "asc":
+        return (stats["segment"], stats["max_s"], stats["avg_s"],
+                stats["max_s"])
+    bs = stats["bound_sum"]
+    return bs[..., None], bs, bs, bs
+
+
+def _retrieve_arrays(index: ClusterIndex, queries: QueryBatch,
+                     cfg: SearchConfig,
+                     budget: jax.Array | None = None) -> tuple:
+    """(ids, scores, n_docs, n_clusters, n_segments), each leading n_q.
+
+    Shared by :func:`retrieve` and the distributed shard-local search.
+    The dense query maps are materialized exactly once and threaded
+    through bound estimation *and* scoring."""
+    qmaps = queries.dense_map()                               # (n_q, V+1)
+    stats = cluster_bounds(index, queries, impl=cfg.bounds_impl,
+                           use_kernel=cfg.use_kernel, qmaps=qmaps)
+    seg_b, max_s, avg_s, order_key = _method_stats(stats, cfg)
+    if cfg.engine == "per_query":
+        fn = jax.vmap(
+            lambda qmap, b, mx, av, key: _search_one_query(
+                index, qmap, b, mx, av, key, cfg, budget=budget))
+        return fn(qmaps, seg_b, max_s, avg_s, order_key)
+    return _search_batch(index, qmaps, seg_b, max_s, avg_s, order_key,
+                         cfg, budget=budget)
+
+
 @partial(jax.jit, static_argnames=("cfg",))
 def retrieve(index: ClusterIndex, queries: QueryBatch,
              cfg: SearchConfig, budget: jax.Array | None = None) -> TopK:
@@ -228,24 +439,8 @@ def retrieve(index: ClusterIndex, queries: QueryBatch,
 
     ``budget`` (optional, traced) overrides ``cfg.cluster_budget`` without
     retracing — the serving engine's adaptive-latency knob."""
-    stats = cluster_bounds(index, queries, impl=cfg.bounds_impl,
-                           use_kernel=cfg.use_kernel)
-    qmaps = queries.dense_map()                               # (n_q, V+1)
-
-    if cfg.method == "asc":
-        seg_b = stats["segment"]
-        max_s, avg_s = stats["max_s"], stats["avg_s"]
-        order_key = stats["max_s"]
-    else:
-        seg_b = stats["bound_sum"][..., None]                 # (n_q, m, 1)
-        max_s = avg_s = stats["bound_sum"]
-        order_key = stats["bound_sum"]
-
-    fn = jax.vmap(
-        lambda qmap, b, mx, av, key: _search_one_query(
-            index, qmap, b, mx, av, key, cfg, budget=budget))
-    ids, scores, n_docs, n_clusters, n_segments = fn(
-        qmaps, seg_b, max_s, avg_s, order_key)
+    ids, scores, n_docs, n_clusters, n_segments = _retrieve_arrays(
+        index, queries, cfg, budget=budget)
     return TopK(doc_ids=ids, scores=scores, n_scored_docs=n_docs,
                 n_scored_clusters=n_clusters, n_scored_segments=n_segments)
 

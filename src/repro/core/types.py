@@ -122,6 +122,7 @@ class QueryBatch:
         "doc_ids",
         "doc_seg",
         "seg_max",
+        "seg_max_collapsed",
         "scale",
         "cluster_ndocs",
     ),
@@ -141,6 +142,10 @@ class ClusterIndex:
     doc_ids:  (m, d_pad) int32          global document ids (-1 padding).
     doc_seg:  (m, d_pad) int32          segment id of each doc in [0, n_seg).
     seg_max:  (m, n_seg, V) uint8       segmented maximum term weights.
+    seg_max_collapsed: (m, V) uint8     max over segments of ``seg_max`` —
+              the BoundSum row, precomputed at build/compaction time and
+              max-folded by online inserts so ``cluster_bounds`` never
+              rebuilds it per retrieve call.
     scale:    () float32                w_fp = w_u8 * scale.
     cluster_ndocs: (m,) int32           live docs per cluster.
     """
@@ -151,6 +156,7 @@ class ClusterIndex:
     doc_ids: jax.Array
     doc_seg: jax.Array
     seg_max: jax.Array
+    seg_max_collapsed: jax.Array
     scale: jax.Array
     cluster_ndocs: jax.Array
     vocab: int
@@ -187,7 +193,8 @@ class ClusterIndex:
         return sum(
             x.size * x.dtype.itemsize
             for x in (self.doc_tids, self.doc_tw, self.doc_mask,
-                      self.doc_ids, self.doc_seg, self.seg_max)
+                      self.doc_ids, self.doc_seg, self.seg_max,
+                      self.seg_max_collapsed)
         )
 
 

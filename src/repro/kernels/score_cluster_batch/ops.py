@@ -1,0 +1,28 @@
+"""Jit'd public wrapper for the score_cluster_batch kernel.
+
+Interpret mode is auto-detected per call (compiled on TPU, interpreted
+elsewhere; ``REPRO_PALLAS_INTERPRET`` overrides) — see
+``repro.utils.pallas_interpret_default``.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.score_cluster_batch.score_cluster_batch import (
+    score_cluster_batch_kernel)
+from repro.kernels.score_cluster_batch.ref import score_cluster_batch_ref
+
+
+def score_cluster_batch(doc_tids: jax.Array, doc_tw: jax.Array,
+                        doc_seg: jax.Array, doc_mask: jax.Array,
+                        qmaps: jax.Array, seg_admit: jax.Array,
+                        scale: jax.Array, **kw) -> jax.Array:
+    """doc_tids/doc_tw: (G, dp, tp); doc_seg/doc_mask: (G, dp);
+    qmaps: (n_q, V + 1); seg_admit: (n_q, G, n_seg) bool mask.
+    Returns (n_q, G, dp) scores with non-admitted docs at NEG."""
+    return score_cluster_batch_kernel(doc_tids, doc_tw, doc_seg, doc_mask,
+                                      qmaps, seg_admit, scale, **kw)
+
+
+__all__ = ["score_cluster_batch", "score_cluster_batch_ref"]

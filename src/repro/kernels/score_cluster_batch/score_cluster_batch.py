@@ -1,0 +1,105 @@
+"""Pallas TPU kernel: query-batched fused cluster-tile scoring.
+
+The serving hot path visits clusters in a visitation order *shared by the
+whole query batch* (core/search.py). This kernel is the scoring half of
+that design: one grid step loads a single cluster's forward tile
+``(d_pad, t_pad)`` into VMEM **once** and scores it against *every* pinned
+dense query map, emitting ``(n_q, G, d_pad)`` RankScores — instead of the
+per-query path that re-gathers the same tile from HBM once per query
+(n_q x the HBM traffic for the index side of the contraction; see
+docs/perf.md for the bytes-moved accounting).
+
+The per-(query, cluster, segment) admission mask is applied *inside* the
+kernel: masked docs come out as ``NEG`` (so the caller's top-k merge drops
+them with no extra masking pass), and a cluster tile that no query admits
+skips the gather + dot entirely via ``pl.when`` on a scalar-prefetched
+any-admit flag — the paper's segment pruning (§3.2) finally skips work on
+the scoring side, not just in bound estimation.
+
+Grid is over the ``G`` clusters of one visitation group; the query-map
+block ``(n_q, V + 1)`` stays resident across all steps.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.utils import pallas_interpret_default, pallas_tpu_compiler_params
+
+_CompilerParams = pallas_tpu_compiler_params()
+
+# python float (not a traced jnp scalar): pallas kernels cannot capture
+# array constants
+NEG = float(jnp.finfo(jnp.float32).min)
+
+
+def _kernel(scale_ref, any_admit_ref, tids_ref, tw_ref, seg_ref, mask_ref,
+            qmaps_ref, admit_ref, out_ref):
+    g = pl.program_id(0)
+
+    @pl.when(any_admit_ref[g] > 0)
+    def _score():
+        tids = tids_ref[...][0].astype(jnp.int32)       # (dp, tp)
+        tw = tw_ref[...][0].astype(jnp.float32)         # (dp, tp)
+        qmaps = qmaps_ref[...]                          # (n_q, V + 1)
+        qv = jnp.take(qmaps, tids.reshape(-1), axis=1,
+                      indices_are_sorted=False, unique_indices=False)
+        qv = qv.reshape((qmaps.shape[0],) + tids.shape)  # (n_q, dp, tp)
+        scores = jnp.sum(qv * tw[None], axis=-1) * scale_ref[0]
+
+        admit = admit_ref[...][:, 0, :]                 # (n_q, n_seg) u8
+        dseg = seg_ref[...][0] % admit.shape[1]         # (dp,)
+        live = mask_ref[...][0]                         # (dp,) u8
+        doc_admit = (jnp.take(admit, dseg, axis=1) > 0) & (live > 0)[None]
+        out_ref[...] = jnp.where(doc_admit, scores, NEG)[:, None, :]
+
+    @pl.when(any_admit_ref[g] == 0)
+    def _skip():                        # fully-pruned tile: no gather at all
+        out_ref[...] = jnp.full_like(out_ref, NEG)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def score_cluster_batch_kernel(
+    doc_tids: jax.Array,        # (G, dp, tp) integer in [0, V] (V = zero slot)
+    doc_tw: jax.Array,          # (G, dp, tp) uint8
+    doc_seg: jax.Array,         # (G, dp) int32 segment ids
+    doc_mask: jax.Array,        # (G, dp) uint8 per-doc liveness (0/1)
+    qmaps: jax.Array,           # (n_q, V + 1) float32, qmaps[:, V] == 0
+    seg_admit: jax.Array,       # (n_q, G, n_seg) uint8 admission (0/1)
+    scale: jax.Array,           # () float32
+    *,
+    interpret: bool | None = None,
+) -> jax.Array:                 # (n_q, G, dp) float32, NEG where not admitted
+    if interpret is None:       # backend auto-detect + env override
+        interpret = pallas_interpret_default()
+    G, dp, tp = doc_tids.shape
+    n_q, n_seg = seg_admit.shape[0], seg_admit.shape[2]
+    # scalar any-admit flags gate each tile's work (pl.when)
+    any_admit = jnp.any(seg_admit > 0, axis=(0, 2)).astype(jnp.int32)  # (G,)
+
+    out = pl.pallas_call(
+        _kernel,
+        grid=(G,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),               # scale
+            pl.BlockSpec(memory_space=pltpu.SMEM),               # any_admit
+            pl.BlockSpec((1, dp, tp), lambda i: (i, 0, 0)),      # tids
+            pl.BlockSpec((1, dp, tp), lambda i: (i, 0, 0)),      # tw
+            pl.BlockSpec((1, dp), lambda i: (i, 0)),             # doc_seg
+            pl.BlockSpec((1, dp), lambda i: (i, 0)),             # doc_mask
+            pl.BlockSpec((n_q, qmaps.shape[1]), lambda i: (0, 0)),
+            pl.BlockSpec((n_q, 1, n_seg), lambda i: (0, i, 0)),  # admission
+        ],
+        out_specs=pl.BlockSpec((n_q, 1, dp), lambda i: (0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_q, G, dp), jnp.float32),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(scale.reshape(1), any_admit, doc_tids, doc_tw, doc_seg,
+      doc_mask.astype(jnp.uint8), qmaps, seg_admit.astype(jnp.uint8))
+    return out

@@ -1,22 +1,22 @@
 """Jit'd public wrapper for the score_docs kernel: accepts the search
-layer's (..., d_pad, t_pad) cluster blocks and flattens them for the grid."""
+layer's (..., d_pad, t_pad) cluster blocks and flattens them for the grid.
+
+Interpret mode is auto-detected per call (compiled on TPU, interpreted
+elsewhere; ``REPRO_PALLAS_INTERPRET`` overrides) — see
+``repro.utils.pallas_interpret_default``.
+"""
 
 from __future__ import annotations
-
-import os
 
 import jax
 
 from repro.kernels.score_docs.score_docs import score_docs_kernel
 from repro.kernels.score_docs.ref import score_docs_ref
 
-INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
-
 
 def score_docs(doc_tids: jax.Array, doc_tw: jax.Array, qmap: jax.Array,
                scale: jax.Array, **kw) -> jax.Array:
     """doc_tids/doc_tw: (..., t_pad); qmap: (V+1,). Returns (...,) scores."""
-    kw.setdefault("interpret", INTERPRET)
     lead = doc_tids.shape[:-1]
     t = doc_tids.shape[-1]
     flat_tids = doc_tids.reshape(-1, t)

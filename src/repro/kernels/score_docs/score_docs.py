@@ -21,7 +21,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.utils import pallas_tpu_compiler_params
+from repro.utils import pallas_interpret_default, pallas_tpu_compiler_params
 
 _CompilerParams = pallas_tpu_compiler_params()
 
@@ -44,8 +44,10 @@ def score_docs_kernel(
     scale: jax.Array,           # () float32
     *,
     block_d: int = 256,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:                 # (D,) float32
+    if interpret is None:       # backend auto-detect + env override
+        interpret = pallas_interpret_default()
     D, T = doc_tids.shape
     d_pad = -D % block_d
     if d_pad:

@@ -1,13 +1,11 @@
 """Jit'd public wrapper for the segment-bound kernel.
 
-``interpret=True`` everywhere in this container (CPU): the kernel body runs
-in Python for correctness validation; on TPU set
-``REPRO_PALLAS_INTERPRET=0`` (or pass interpret=False) to lower to Mosaic.
+Interpret mode is auto-detected per call (compiled on TPU, interpreted
+elsewhere; ``REPRO_PALLAS_INTERPRET`` overrides) — see
+``repro.utils.pallas_interpret_default``.
 """
 
 from __future__ import annotations
-
-import os
 
 import jax
 
@@ -15,12 +13,9 @@ from repro.kernels.segment_bound.segment_bound import (
     segment_bound_gemm as _kernel_call)
 from repro.kernels.segment_bound.ref import segment_bound_gemm_ref
 
-INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
-
 
 def segment_bound_gemm(table: jax.Array, qmap: jax.Array,
                        scale: jax.Array, **kw) -> jax.Array:
-    kw.setdefault("interpret", INTERPRET)
     return _kernel_call(table, qmap, scale, **kw)
 
 

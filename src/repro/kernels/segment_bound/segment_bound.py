@@ -24,7 +24,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.utils import pallas_tpu_compiler_params
+from repro.utils import pallas_interpret_default, pallas_tpu_compiler_params
 
 _CompilerParams = pallas_tpu_compiler_params()
 
@@ -59,8 +59,10 @@ def segment_bound_gemm(
     block_s: int = 128,
     block_q: int = 128,
     block_v: int = 512,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:                  # (Q, S) float32
+    if interpret is None:        # backend auto-detect + env override
+        interpret = pallas_interpret_default()
     S, V = table.shape
     Q = qmap.shape[0]
     s_pad = -S % block_s

@@ -63,6 +63,7 @@ class MutableIndex:
         self.doc_ids = np.asarray(index.doc_ids).copy()
         self.doc_seg = np.asarray(index.doc_seg).copy()
         self.seg_max = np.asarray(index.seg_max).copy()
+        self.seg_max_collapsed = np.asarray(index.seg_max_collapsed).copy()
         self.cluster_ndocs = np.asarray(index.cluster_ndocs).copy()
         self.scale = float(index.scale)
         self.vocab = index.vocab
@@ -173,6 +174,7 @@ class MutableIndex:
         self.doc_ids[c, slot] = doc_id
         self.doc_seg[c, slot] = j
         np.maximum.at(self.seg_max[c, j], tids, q)   # monotone => exact
+        np.maximum.at(self.seg_max_collapsed[c], tids, q)
         self.cluster_ndocs[c] += 1
         self._loc[int(doc_id)] = (c, slot)
         self.n_inserts += 1
@@ -265,6 +267,7 @@ class MutableIndex:
         self.doc_ids = packed["doc_ids"]
         self.doc_seg = packed["doc_seg"]
         self.seg_max = packed["seg_max"]
+        self.seg_max_collapsed = packed["seg_max_collapsed"]
         self.cluster_ndocs = packed["cluster_ndocs"]
 
         cl, sl = np.nonzero(self.doc_mask)
@@ -290,6 +293,7 @@ class MutableIndex:
             doc_ids=jnp.asarray(self.doc_ids),
             doc_seg=jnp.asarray(self.doc_seg),
             seg_max=jnp.asarray(self.seg_max),
+            seg_max_collapsed=jnp.asarray(self.seg_max_collapsed),
             scale=jnp.float32(self.scale),
             cluster_ndocs=jnp.asarray(self.cluster_ndocs),
             vocab=self.vocab,

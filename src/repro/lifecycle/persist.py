@@ -32,7 +32,12 @@ FORMAT_VERSION = 1
 
 # cluster-axis-sharded array fields, in manifest order
 _FIELDS = ("doc_tids", "doc_tw", "doc_mask", "doc_ids", "doc_seg",
-           "seg_max", "cluster_ndocs")
+           "seg_max", "seg_max_collapsed", "cluster_ndocs")
+# fields that may be absent in checkpoints written before they existed;
+# each maps to a recompute-from-what-is-there fallback applied at load
+_DERIVABLE = {
+    "seg_max_collapsed": lambda arrays: arrays["seg_max"].max(axis=1),
+}
 
 
 def _shard_rows(m: int, n_shards: int) -> list[int]:
@@ -138,8 +143,13 @@ def load_index(directory: str,
         path = os.path.join(directory, f"shard_{s:04d}.npz")
         with np.load(path) as z:
             for f in _FIELDS:
+                if f not in z.files and f in _DERIVABLE:
+                    continue
                 parts[f].append(z[f])
-    arrays = {f: np.concatenate(parts[f], axis=0) for f in _FIELDS}
+    arrays = {f: np.concatenate(p, axis=0) for f, p in parts.items() if p}
+    for f, derive in _DERIVABLE.items():
+        if f not in arrays:
+            arrays[f] = derive(arrays)
 
     if shards is None and arrays["doc_tids"].shape[0] != manifest["m"]:
         raise ValueError("shard rows do not reassemble the manifest's m")
@@ -151,6 +161,7 @@ def load_index(directory: str,
         doc_ids=jnp.asarray(arrays["doc_ids"]),
         doc_seg=jnp.asarray(arrays["doc_seg"]),
         seg_max=jnp.asarray(arrays["seg_max"]),
+        seg_max_collapsed=jnp.asarray(arrays["seg_max_collapsed"]),
         scale=jnp.float32(manifest["scale"]),
         cluster_ndocs=jnp.asarray(arrays["cluster_ndocs"]),
         vocab=manifest["vocab"],

@@ -27,8 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from repro.core.search import SearchConfig, retrieve, _search_one_query
-from repro.core.bounds import cluster_bounds
+from repro.core.search import SearchConfig, retrieve, _retrieve_arrays
 from repro.core.types import ClusterIndex, QueryBatch, TopK
 from repro.lifecycle.snapshot import IndexSnapshot, SnapshotPublisher
 from repro.utils import shard_map
@@ -164,7 +163,7 @@ def index_shard_specs(index: ClusterIndex,
     return ClusterIndex(
         doc_tids=P(c, None, None), doc_tw=P(c, None, None),
         doc_mask=P(c, None), doc_ids=P(c, None), doc_seg=P(c, None),
-        seg_max=P(c, None, None), scale=P(),
+        seg_max=P(c, None, None), seg_max_collapsed=P(c, None), scale=P(),
         cluster_ndocs=P(c), vocab=index.vocab, n_seg=index.n_seg)
 
 
@@ -180,19 +179,10 @@ def distributed_retrieve(index: ClusterIndex, queries: QueryBatch,
                        mask=P(qaxis, None), vocab=queries.vocab)
 
     def local(index_local: ClusterIndex, q_local: QueryBatch) -> TopK:
-        stats = cluster_bounds(index_local, q_local, impl=cfg.bounds_impl,
-                               use_kernel=cfg.use_kernel)
-        qmaps = q_local.dense_map()
-        if cfg.method == "asc":
-            seg_b, max_s = stats["segment"], stats["max_s"]
-            avg_s, key = stats["avg_s"], stats["max_s"]
-        else:
-            seg_b = stats["bound_sum"][..., None]
-            max_s = avg_s = key = stats["bound_sum"]
-        ids, scores, nd, nc, ns = jax.vmap(
-            lambda qm, b, mx, av, k_: _search_one_query(
-                index_local, qm, b, mx, av, k_, cfg))(
-            qmaps, seg_b, max_s, avg_s, key)
+        # full two-level search on the local clusters with the configured
+        # engine (batched by default: local tiles fetched once per batch)
+        ids, scores, nd, nc, ns = _retrieve_arrays(index_local, q_local,
+                                                   cfg)
         # merge the per-shard top-k across the cluster axes
         for ax in caxes:
             all_scores = jax.lax.all_gather(scores, ax, axis=1, tiled=True)

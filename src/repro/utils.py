@@ -2,6 +2,8 @@
 
 from __future__ import annotations
 
+import os
+
 import jax
 import jax.numpy as jnp
 
@@ -46,6 +48,20 @@ def shard_map(f, mesh, in_specs, out_specs, check_vma: bool = True):
     from jax.experimental.shard_map import shard_map as _sm
     return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
                check_rep=check_vma)
+
+
+def pallas_interpret_default() -> bool:
+    """Whether Pallas kernels should run in interpret mode here.
+
+    ``REPRO_PALLAS_INTERPRET`` wins when set ("0" => compiled, anything
+    else => interpret); otherwise auto-detect: compile on TPU, interpret
+    everywhere else (the kernels are written for Mosaic — off-TPU the
+    Python interpreter is the only backend that runs them).
+    """
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env != "0"
+    return jax.default_backend() != "tpu"
 
 
 def pallas_tpu_compiler_params():

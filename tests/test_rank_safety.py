@@ -83,6 +83,32 @@ def test_safe_mode_matches_oracle(index, queries, k):
         np.sort(np.asarray(oracle.scores), axis=1), rtol=1e-5, atol=1e-5)
 
 
+@pytest.mark.parametrize("mu,eta", [(1.0, 1.0), (0.6, 1.0), (0.6, 0.6)])
+def test_batched_engine_vs_per_query_reference(index, queries, mu, eta):
+    """The batch-frontier engine against the preserved per-query oracle
+    under identical (mu, eta): identical result sets when rank-safe, and
+    never a worse Prop-3 guarantee when approximate (theta is updated no
+    more often than sequentially, so pruning is never more aggressive
+    than the proposition assumes)."""
+    q, _ = queries
+    k = 10
+    batched = asc_retrieve(index, q, k=k, mu=mu, eta=eta)
+    ref = retrieve(index, q, SearchConfig(k=k, mu=mu, eta=eta,
+                                          engine="per_query"))
+    if mu == eta == 1.0:
+        np.testing.assert_allclose(
+            np.sort(np.asarray(batched.scores), axis=1),
+            np.sort(np.asarray(ref.scores), axis=1), rtol=1e-5, atol=1e-5)
+    else:
+        oracle = _topk_scores(index, q, k)
+        o = np.sort(np.asarray(oracle.scores), 1)[:, ::-1]
+        neg = float(np.finfo(np.float32).min)
+        for out in (batched, ref):
+            a = np.sort(np.asarray(out.scores), 1)[:, ::-1]
+            a = np.where(a > neg / 2, a, 0.0)     # unfilled slots -> 0
+            assert np.all(a.mean(1) >= mu * o.mean(1) - 1e-4)
+
+
 @pytest.mark.parametrize("method,kw", [
     ("anytime", dict(mu=1.0)),
     ("asc_gemm", dict(mu=1.0, eta=1.0, bounds_impl="gemm")),
