@@ -8,9 +8,12 @@ Given a query Q and cluster index with segmented maximum term weights:
     BoundSum(C_i)  = sum_{t in Q} max_{d in C_i} w_{t,d}   (Formula 2)
 
 ``BoundSum`` equals ``B`` computed on the segment-collapsed table — which
-the index *stores* (``seg_max_collapsed``, maintained at build/compaction
-time and max-folded by online inserts), so no retrieve call ever rebuilds
-``seg_max.max(axis=1)``.
+the index *stores* as the last row of the stacked bound table
+(``seg_max_stacked``, shape ``(m, n_seg + 1, V)``, maintained at
+build/compaction time and max-folded by online inserts), so no retrieve
+call ever rebuilds ``seg_max.max(axis=1)`` *or* copies the table to stack
+the collapsed row under it: the fused GEMM operand is a zero-copy
+``reshape(m * (n_seg + 1), V)`` of the stored layout.
 
 Two implementations of the same contraction:
   * ``segment_bounds_gather`` — gather ``q_pad`` columns from the table and
@@ -83,13 +86,13 @@ def cluster_bounds(index: ClusterIndex, queries: QueryBatch,
                    qmaps: jax.Array | None = None) -> dict[str, jax.Array]:
     """All bound statistics needed by any method, each (n_q, m).
 
-    BoundSum comes from the precomputed ``seg_max_collapsed`` row; under
-    ``impl="gemm"`` it is stacked below the segment table so one fused
-    GEMM produces every statistic for the whole batch. The stack is a
-    per-call uint8 copy of the table — cheap next to the f32 contraction
-    at this scale, but at very large ``m * n_seg * V`` the copy traffic
-    overtakes the saved dispatch; ROADMAP lists storing the stacked
-    layout on the index as the follow-on."""
+    BoundSum comes from the collapsed row of the *stored* stacked table:
+    under ``impl="gemm"`` the whole ``(m, n_seg + 1, V)`` table is fed to
+    one fused GEMM as a zero-copy reshape, so segment bounds and BoundSum
+    for the entire batch come out of a single contraction with no per-call
+    uint8 stacking copy (that copy existed before the stacked layout was
+    stored on the index; at WordPiece-scale ``m * n_seg * V`` its traffic
+    overtook the saved dispatch)."""
     m, n_seg, V = index.seg_max.shape
     if impl == "gather":
         b = segment_bounds_gather(index, queries)
@@ -99,12 +102,11 @@ def cluster_bounds(index: ClusterIndex, queries: QueryBatch,
         if qmaps is None:
             qmaps = queries.dense_map()
         qmap = qmaps[:, :V]
-        fused_table = jnp.concatenate(
-            [index.seg_max.reshape(m * n_seg, V), index.seg_max_collapsed],
-            axis=0)                                      # (m*(n_seg+1), V)
+        fused_table = index.seg_max_stacked.reshape(m * (n_seg + 1), V)
         fused = _gemm_bounds(fused_table, qmap, index.scale, use_kernel)
-        b = fused[:, : m * n_seg].reshape(queries.n_queries, m, n_seg)
-        bound_sum = fused[:, m * n_seg:]                 # (n_q, m)
+        fused = fused.reshape(queries.n_queries, m, n_seg + 1)
+        b = fused[..., :n_seg]                           # (n_q, m, n_seg)
+        bound_sum = fused[..., n_seg]                    # (n_q, m)
     else:
         raise ValueError(f"unknown bounds impl {impl!r}")
     max_s = b.max(axis=-1)

@@ -122,9 +122,13 @@ def pack_clusters(
             keep = t < V
             np.maximum.at(seg_max[c, j], t[keep], w[keep])
 
+    # stored stacked layout: segment rows + the collapsed BoundSum row,
+    # so the fused bounds GEMM never materializes a per-call copy
+    seg_max_stacked = np.concatenate(
+        [seg_max, seg_max.max(axis=1, keepdims=True)], axis=1)
     return dict(doc_tids=doc_tids, doc_tw=doc_tw, doc_mask=doc_mask,
-                doc_ids=out_ids, doc_seg=doc_seg, seg_max=seg_max,
-                seg_max_collapsed=seg_max.max(axis=1),
+                doc_ids=out_ids, doc_seg=doc_seg,
+                seg_max_stacked=seg_max_stacked,
                 cluster_ndocs=cluster_ndocs)
 
 
@@ -182,8 +186,7 @@ def build_index(
         doc_mask=jnp.asarray(packed["doc_mask"]),
         doc_ids=jnp.asarray(packed["doc_ids"]),
         doc_seg=jnp.asarray(packed["doc_seg"]),
-        seg_max=jnp.asarray(packed["seg_max"]),
-        seg_max_collapsed=jnp.asarray(packed["seg_max_collapsed"]),
+        seg_max_stacked=jnp.asarray(packed["seg_max_stacked"]),
         scale=jnp.float32(scale),
         cluster_ndocs=jnp.asarray(packed["cluster_ndocs"]),
         vocab=V,

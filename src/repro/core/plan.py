@@ -1,0 +1,152 @@
+"""Frontier-compaction planner: admission -> dense per-wave work queues.
+
+One *wave* is one group of ``G`` clusters of the shared batch visitation
+order (core/search.py). The planner turns the per-(query, cluster)
+admission decisions of a wave into the compact execution plan the
+Pallas executor (kernels/score_cluster_batch) scalar-prefetches:
+
+  * ``tile_cids`` — the wave's *admitted* cluster tiles (global cluster
+    ids), compacted to the front; a tile no query admits never enters the
+    executor grid at all, instead of being ``pl.when``-skipped after its
+    DMA was already issued;
+  * ``qblock`` — per admitted tile, the query *blocks* (``block_q``
+    consecutive queries of the batch) containing at least one admitting
+    query, again compacted to the front. The executor's grid is blocked
+    over queries, so only these blocks' dense query maps are gathered
+    into VMEM — batch 256+ no longer pins the whole ``(n_q, V+1)`` map
+    block resident;
+  * queue tails are *clamped* (padded by repeating the last live entry),
+    so skipped grid steps re-map to the block already resident in VMEM
+    and trigger no new HBM traffic.
+
+The (mu, eta)/segment admission tests and the budget rank-horizon live
+here too: planning is pure bound arithmetic on ``O(n_q * G * n_seg)``
+scalars, executing is the ``O(pairs * d_pad * t_pad)`` scoring — the
+plan/execute split is exactly the paper's promise that pruning should
+*skip* work, applied to the batch engine's compute, not just its HBM
+traffic.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import _register
+
+
+@partial(
+    _register,
+    data_fields=("cids", "live", "admit", "seg_admit", "tile_cids",
+                 "tile_pos", "n_tiles", "qblock", "n_qblock",
+                 "n_blocks"),
+    meta_fields=("block_q",),
+)
+@dataclasses.dataclass(frozen=True)
+class WavePlan:
+    """Compact execution plan for one visitation wave of ``G`` clusters.
+
+    cids:      (G,) int32   global cluster ids of the wave, walk order.
+    live:      (G,) bool    wave positions that are real clusters.
+    admit:     (n_q, G) bool      per-(query, tile) admission.
+    seg_admit: (n_q, G, n_seg) bool  per-segment document admission.
+    tile_cids: (G,) int32   admitted tiles' global cluster ids, compacted
+                            to the front, tail clamped to the last live
+                            entry (never out of [0, m)).
+    tile_pos:  (G,) int32   each compacted tile's position within the
+                            wave (indexes admit/seg_admit/outputs).
+    n_tiles:   () int32     number of admitted tiles (<= G).
+    qblock:    (G, n_qb) int32  per compacted tile: indices of query
+                            blocks with >= 1 admitting query, compacted,
+                            tail clamped.
+    n_qblock:  (G,) int32   live query-block count per compacted tile.
+    n_blocks:  () int32     total executor grid blocks with real work
+                            (= sum of n_qblock over admitted tiles).
+    block_q:   static       queries per block (grid blocking factor).
+    """
+
+    cids: jax.Array
+    live: jax.Array
+    admit: jax.Array
+    seg_admit: jax.Array
+    tile_cids: jax.Array
+    tile_pos: jax.Array
+    n_tiles: jax.Array
+    qblock: jax.Array
+    n_qblock: jax.Array
+    n_blocks: jax.Array
+    block_q: int
+
+    @property
+    def n_qb(self) -> int:
+        return self.qblock.shape[1]
+
+
+def _compact_front(keep: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Indices of True entries of ``keep`` moved to the front (stable),
+    tail clamped to the last True position; plus the True count.
+
+    keep: (..., n) bool. Returns (idx (..., n) int32, count (...,) int32).
+    With no True entry the clamp degenerates to index 0 — callers gate on
+    count, so the value never matters, only its validity as an index.
+    """
+    n = keep.shape[-1]
+    # stable: admitted entries keep their relative order
+    order = jnp.argsort(jnp.logical_not(keep), axis=-1, stable=True)
+    count = keep.sum(axis=-1).astype(jnp.int32)
+    slot = jnp.arange(n, dtype=jnp.int32)
+    clamp = jnp.minimum(slot, jnp.maximum(count[..., None] - 1, 0))
+    idx = jnp.take_along_axis(order, clamp, axis=-1).astype(jnp.int32)
+    return idx, count
+
+
+def plan_wave(cids: jax.Array, live: jax.Array, admit: jax.Array,
+              seg_admit: jax.Array, block_q: int) -> WavePlan:
+    """Compact a wave's admission masks into dense work queues.
+
+    cids (G,) int32; live (G,) bool; admit (n_q, G) bool;
+    seg_admit (n_q, G, n_seg) bool. ``block_q`` must divide the padded
+    batch the executor will run (callers pad; n_q here may be unpadded —
+    the trailing partial block simply admits fewer queries).
+    """
+    n_q, G = admit.shape
+    n_qb = -(-n_q // block_q)
+    pad = n_qb * block_q - n_q
+    admit_p = jnp.pad(admit, ((0, pad), (0, 0))) if pad else admit
+
+    tile_keep = admit.any(axis=0) & live                     # (G,)
+    tile_pos, n_tiles = _compact_front(tile_keep)
+    tile_cids = cids[tile_pos]
+
+    # per wave-position: which query blocks contain an admitting query
+    blk_any = admit_p.reshape(n_qb, block_q, G).any(axis=1)  # (n_qb, G)
+    blk_any = blk_any[:, tile_pos].T                         # (G, n_qb)
+    qblock, n_qblock = _compact_front(blk_any)
+    # tiles beyond n_tiles contribute no work regardless of their clamped
+    # queue contents
+    t = jnp.arange(G, dtype=jnp.int32)
+    n_qblock = jnp.where(t < n_tiles, n_qblock, 0)
+    return WavePlan(
+        cids=cids, live=live, admit=admit, seg_admit=seg_admit,
+        tile_cids=tile_cids, tile_pos=tile_pos, n_tiles=n_tiles,
+        qblock=qblock, n_qblock=n_qblock,
+        n_blocks=n_qblock.sum().astype(jnp.int32), block_q=block_q)
+
+
+def doc_admission(plan: WavePlan, doc_seg: jax.Array,
+                  doc_mask: jax.Array) -> jax.Array:
+    """(n_q, G, d_pad) bool: which (query, doc) scores are admitted.
+
+    doc_seg/doc_mask are the wave's (G, d_pad) gathered metadata. This is
+    the single source of truth for masking executor output to NEG —
+    including blocks the compacted grid never visited (whose kernel
+    output is unwritten garbage by design)."""
+    n_seg = plan.seg_admit.shape[-1]
+    seg_of_doc = (doc_seg % n_seg)[None]                    # (1, G, dp)
+    admitted = jnp.take_along_axis(
+        plan.seg_admit, jnp.broadcast_to(
+            seg_of_doc, (plan.admit.shape[0],) + doc_seg.shape), axis=2)
+    return admitted & plan.admit[:, :, None] & doc_mask[None]

@@ -2,25 +2,31 @@
 
 Two engines express every method (DESIGN.md §2):
 
-``engine="batched"`` (default, the serving hot path) — one batch-frontier
-loop for the whole query batch:
+``engine="batched"`` (default, the serving hot path) — a plan/execute
+batch-frontier loop for the whole query batch:
 
   1. bounds for all clusters are computed up front — segment bounds *and*
      the collapsed BoundSum row come out of one fused GEMM / gather over
-     the precomputed ``seg_max_collapsed`` table (core/bounds.py);
+     the *stored stacked* bound table (``seg_max_stacked``; core/bounds.py
+     reshapes it for free instead of stacking a per-call copy);
   2. clusters are walked in a *shared* visitation order (fair interleave:
      a cluster's priority is the best rank any query in the batch assigns
      it), so each cluster's (d_pad, t_pad) forward tile crosses the HBM
      boundary **once per batch** instead of once per query;
-  3. per group, every query applies its own (mu, eta) admission test and
-     segment-level pruning; survivors are scored against all pinned query
-     maps by the fused kernel (kernels/score_cluster_batch), which applies
-     the admission mask *inside* and skips fully-pruned tiles;
-  4. each query's top-k/theta is updated by an incremental
+  3. per wave of ``group_size`` clusters, the *planner* (core/plan.py)
+     applies every query's own (mu, eta) admission test, segment-level
+     pruning and the budget rank-horizon, then compacts the surviving
+     (query, cluster) pairs into dense work queues;
+  4. the *executor* (kernels/score_cluster_batch) scalar-prefetches the
+     queues: admitted tiles are DMA'd straight out of the full index
+     arrays, only query blocks with an admitting query are gathered, and
+     a tile no query admits never enters the grid — pruning skips
+     compute, not just HBM traffic;
+  5. each query's top-k/theta is updated by an incremental
      threshold-filtered merge (group candidates above theta -> top-k of the
      group -> 2k-merge with the running heap), not a concatenate + top_k
      over k + G*d_pad candidates;
-  5. a query leaves the frontier when the suffix-maximum of its ordering
+  6. a query leaves the frontier when the suffix-maximum of its ordering
      key over the remaining visitation positions can no longer beat
      ``theta / exit_div``; the loop exits when every query is done.
 
@@ -60,8 +66,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.bounds import cluster_bounds
+from repro.core.plan import WavePlan, plan_wave
 from repro.core.types import ClusterIndex, QueryBatch, TopK
-from repro.kernels.score_cluster_batch.ref import score_cluster_batch_ref
+from repro.kernels.score_cluster_batch.ref import score_admitted_ref
 
 NEG = jnp.float32(jnp.finfo(jnp.float32).min)
 
@@ -78,6 +85,8 @@ class SearchConfig:
     use_kernel: bool = False           # pallas kernels where available
     doc_prune: bool = True             # segment-level document pruning
     engine: str = "batched"            # batched | per_query (reference)
+    block_q: int = 64                  # executor grid blocking over queries
+    block_v: int | None = None         # executor vocab chunking (None: full)
 
     def __post_init__(self):
         if not (0.0 < self.mu <= self.eta <= 1.0):
@@ -87,6 +96,8 @@ class SearchConfig:
             raise ValueError(f"unknown method {self.method!r}")
         if self.engine not in ("batched", "per_query"):
             raise ValueError(f"unknown engine {self.engine!r}")
+        if self.block_q < 1:
+            raise ValueError(f"block_q must be >= 1, got {self.block_q}")
 
 
 def score_docs_ref(doc_tids: jax.Array, doc_tw: jax.Array, qmap: jax.Array,
@@ -131,11 +142,13 @@ def brute_force_topk(index: ClusterIndex, queries: QueryBatch,
     scores, ids = jax.vmap(one)(qmaps)
     n_docs = index.doc_mask.sum().astype(jnp.int32)
     nq = queries.n_queries
+    m_full = jnp.full((nq,), index.m, jnp.int32)
     return TopK(
         doc_ids=ids, scores=scores,
         n_scored_docs=jnp.full((nq,), n_docs),
-        n_scored_clusters=jnp.full((nq,), index.m, jnp.int32),
+        n_scored_clusters=m_full,
         n_scored_segments=jnp.full((nq,), index.m * index.n_seg, jnp.int32),
+        n_scored_tiles=m_full, n_walked_tiles=m_full,
     )
 
 
@@ -242,44 +255,104 @@ def _search_one_query(index: ClusterIndex, qmap: jax.Array,
     init = (jnp.int32(0), jnp.array(False),
             jnp.full((k,), NEG), jnp.full((k,), -1, jnp.int32),
             jnp.int32(0), jnp.int32(0), jnp.int32(0))
-    (_, _, top_scores, top_ids, n_docs, n_clusters, n_segments) = (
+    (g_end, _, top_scores, top_ids, n_docs, n_clusters, n_segments) = (
         jax.lax.while_loop(cond, body, init))
     top_ids = jnp.where(top_scores > NEG, top_ids, -1)
-    return top_ids, top_scores, n_docs, n_clusters, n_segments
+    # tile counters in per-query terms (see TopK docstring): every
+    # admitted cluster is a scored tile, every visited cluster position
+    # a walked one (clamped: the last group's padding is not a cluster)
+    return (top_ids, top_scores, n_docs, n_clusters, n_segments,
+            n_clusters, jnp.minimum(g_end * G, jnp.int32(m)))
 
 
-def _score_cluster_batch(index: ClusterIndex, cids: jax.Array,
-                         qmaps: jax.Array, seg_admit: jax.Array,
-                         cfg: SearchConfig) -> jax.Array:
-    """(n_q, G, d_pad) admission-masked scores; the cluster tiles are
-    gathered from HBM once for the whole batch."""
-    tids = index.doc_tids[cids]                             # (G, dp, tp)
-    tw = index.doc_tw[cids]
-    dseg = index.doc_seg[cids]
-    dmask = index.doc_mask[cids]
+def _plan_admission(cfg: SearchConfig, *, cids, glive, done, theta,
+                    max_s_w, avg_s_w, key_w, seg_b_w, rank_w,
+                    n_clusters, n_pruned,
+                    budget) -> tuple[WavePlan, jax.Array]:
+    """Planner half of one wave: (mu, eta)/segment admission + budget
+    rank-horizon, compacted into the wave's work queues.
+
+    The ``_w`` arrays are already sliced to the wave: max_s_w/avg_s_w/
+    key_w/rank_w (n_q, G), seg_b_w (n_q, G, n_seg). Returns
+    (plan, n_newly_pruned)."""
+    mu = jnp.float32(cfg.mu)
+    eta = jnp.float32(cfg.eta)
+
+    if cfg.method == "asc":
+        pruned = ((max_s_w <= theta[:, None] / mu)
+                  & (avg_s_w <= theta[:, None] / eta))
+    else:
+        pruned = key_w <= theta[:, None] / mu
+    live_q = glive[None, :] & ~done[:, None]              # (n_q, G)
+    gate = rank_w < (budget + n_pruned)[:, None]
+    admit = live_q & ~pruned & gate
+    admit &= (n_clusters[:, None]
+              + jnp.cumsum(admit.astype(jnp.int32), axis=1)) <= budget
+    # pruned clusters inside the horizon are budget-free: widen it
+    newly_pruned = (live_q & pruned & gate).sum(axis=1).astype(jnp.int32)
+
+    if cfg.doc_prune:
+        div = eta if cfg.method == "asc" else mu
+        seg_admit = seg_b_w > theta[:, None, None] / div
+    else:
+        seg_admit = jnp.ones_like(seg_b_w, dtype=bool)
+    seg_admit = seg_admit & admit[:, :, None]
+    plan = plan_wave(cids, glive, admit, seg_admit, cfg.block_q)
+    return plan, newly_pruned
+
+
+def _execute_wave(index: ClusterIndex, plan: WavePlan, qmaps: jax.Array,
+                  cfg: SearchConfig) -> jax.Array:
+    """Executor half of one wave: (n_q, G, d_pad) admission-masked scores.
+
+    Kernel path: the Pallas executor scalar-prefetches the plan's queues
+    and DMAs admitted tiles straight out of the full index arrays — no
+    XLA gather, no fetch for tiles/query-blocks outside the queues.
+    jnp path: the dense oracle, wrapped in a cond so a wave with an empty
+    queue skips its gather + einsum entirely."""
+    dseg = index.doc_seg[plan.cids]                         # (G, dp)
+    dmask = index.doc_mask[plan.cids]
     if cfg.use_kernel:
         from repro.kernels.score_cluster_batch import ops as scb_ops
-        return scb_ops.score_cluster_batch(tids, tw, dseg, dmask,
-                                           qmaps, seg_admit, index.scale)
-    return score_cluster_batch_ref(tids, tw, dseg, dmask,
-                                   qmaps, seg_admit, index.scale)
+        return scb_ops.score_admitted(
+            index.doc_tids, index.doc_tw, dseg, dmask, qmaps, plan,
+            index.scale, block_v=cfg.block_v)
+
+    def dense(_):
+        tids = index.doc_tids[plan.cids]                    # (G, dp, tp)
+        tw = index.doc_tw[plan.cids]
+        return score_admitted_ref(tids, tw, dseg, dmask, qmaps, plan,
+                                  index.scale)
+
+    def empty(_):
+        shape = (qmaps.shape[0], plan.cids.shape[0], index.d_pad)
+        return jnp.full(shape, NEG)
+
+    return jax.lax.cond(plan.n_blocks > 0, dense, empty, operand=None)
 
 
 def _search_batch(index: ClusterIndex, qmaps: jax.Array, seg_b: jax.Array,
                   max_s: jax.Array, avg_s: jax.Array, order_key: jax.Array,
                   cfg: SearchConfig,
-                  budget: jax.Array | None = None) -> tuple:
-    """Batch-frontier visitation: every query walks the same cluster order.
+                  budget: jax.Array | None = None,
+                  record_plans: bool = False) -> tuple:
+    """Batch-frontier visitation: every query walks the same cluster order,
+    each wave planned (admission -> compact work queues) then executed.
 
     qmaps (n_q, V+1); seg_b (n_q, m, n_seg); max_s/avg_s/order_key
     (n_q, m). Returns per-query (ids, scores, counters) like the vmapped
-    reference engine — each cluster tile is fetched once per *batch*.
+    reference engine — each cluster tile is fetched once per *batch*,
+    and only for waves/queries that admit it. With ``record_plans`` the
+    per-wave :class:`WavePlan` pytrees (stacked over waves, plus an
+    ``executed`` mask) ride along in the result — the benchmark's
+    executor-replay hook.
     """
     m, G, k = index.m, cfg.group_size, cfg.k
     dp = index.d_pad
     n_q = order_key.shape[0]
     n_groups = -(-m // G)
     m_padded = n_groups * G
+    n_qb = -(-n_q // cfg.block_q)
 
     budget = _resolve_budget(cfg, m, budget)
     mu = jnp.float32(cfg.mu)
@@ -317,46 +390,56 @@ def _search_batch(index: ClusterIndex, qmaps: jax.Array, seg_b: jax.Array,
 
     kc = min(k, G * dp)
 
+    def _wave_plan(state_slices) -> tuple[WavePlan, jax.Array]:
+        """One wave's planning from the generic per-wave slices."""
+        (cids, glive, done, theta, n_clusters, n_pruned) = state_slices
+        return _plan_admission(
+            cfg, cids=cids, glive=glive, done=done, theta=theta,
+            max_s_w=max_s[:, cids], avg_s_w=avg_s[:, cids],
+            key_w=order_key[:, cids], seg_b_w=seg_b[:, cids, :],
+            rank_w=rank[:, cids], n_clusters=n_clusters,
+            n_pruned=n_pruned, budget=budget)
+
+    first_wave = (shared_p[:G], jnp.zeros((G,), bool),
+                  jnp.zeros((n_q,), bool), jnp.full((n_q,), NEG),
+                  jnp.zeros((n_q,), jnp.int32), jnp.zeros((n_q,),
+                                                          jnp.int32))
+    if record_plans:
+        # stacked per-wave WavePlan buffers (bench executor-replay hook),
+        # shaped from the planner's abstract signature — no dummy compute
+        plan_shapes = jax.eval_shape(_wave_plan, first_wave)[0]
+        zero_plan = jax.tree_util.tree_map(
+            lambda s: jnp.zeros((n_groups,) + s.shape, s.dtype),
+            plan_shapes)
+        rec_init = (zero_plan, jnp.zeros((n_groups,), bool))
+    else:
+        rec_init = None
+
     def cond(state):
-        g, done, *_ = state
+        g, done = state[0], state[1]
         return jnp.logical_and(g < n_groups,
                                jnp.logical_not(jnp.all(done)))
 
     def body(state):
         (g, done, top_scores, top_ids,
-         n_docs, n_clusters, n_segments, n_pruned) = state
+         n_docs, n_clusters, n_segments, n_pruned,
+         n_tiles_exec, n_tiles_walk, rec) = state
         theta = top_scores[:, k - 1]                          # (n_q,)
         pos = g * G
         cids = jax.lax.dynamic_slice(shared_p, (pos,), (G,))  # (G,)
         glive = (jnp.arange(G) + pos) < m                     # (G,)
 
-        if cfg.method == "asc":
-            pruned = ((max_s[:, cids] <= theta[:, None] / mu)
-                      & (avg_s[:, cids] <= theta[:, None] / eta))
-        else:
-            pruned = order_key[:, cids] <= theta[:, None] / mu
-        live_q = glive[None, :] & ~done[:, None]              # (n_q, G)
-        gate = rank[:, cids] < (budget + n_pruned)[:, None]
-        admit = live_q & ~pruned & gate
-        admit &= (n_clusters[:, None]
-                  + jnp.cumsum(admit.astype(jnp.int32), axis=1)) <= budget
-        # pruned clusters inside the horizon are budget-free: widen it
-        n_pruned += (live_q & pruned & gate).sum(axis=1).astype(jnp.int32)
+        # ---- plan: admission + budget horizon -> compact work queues ----
+        plan, newly_pruned = _wave_plan(
+            (cids, glive, done, theta, n_clusters, n_pruned))
+        n_pruned += newly_pruned
+        admit, seg_admit = plan.admit, plan.seg_admit
 
-        b = seg_b[:, cids, :]                                 # (n_q,G,ns)
-        if cfg.doc_prune:
-            div = eta if cfg.method == "asc" else mu
-            seg_admit = b > theta[:, None, None] / div
-        else:
-            seg_admit = jnp.ones_like(b, dtype=bool)
-        seg_admit = seg_admit & admit[:, :, None]
-
-        # one tile fetch for the whole batch; the admission mask is applied
-        # inside the scorer (the Pallas kernel skips fully-pruned tiles
-        # via pl.when on a scalar-prefetched any-admit flag). Non-admitted
-        # and tombstoned docs come out exactly NEG, which is the single
-        # source of truth for the work counter and the candidate filter.
-        scores = _score_cluster_batch(index, cids, qmaps, seg_admit, cfg)
+        # ---- execute: score the compacted queues ----
+        # Non-admitted and tombstoned docs come out exactly NEG, which is
+        # the single source of truth for the work counter and the
+        # candidate filter.
+        scores = _execute_wave(index, plan, qmaps, cfg)
         doc_admit = scores > NEG                              # (n_q,G,dp)
 
         # incremental threshold-filtered merge: group candidates must beat
@@ -366,7 +449,7 @@ def _search_batch(index: ClusterIndex, qmaps: jax.Array, seg_b: jax.Array,
         cand = jnp.where(scores > theta[:, None, None],
                          scores, NEG).reshape(n_q, G * dp)
         g_top, g_pos = jax.lax.top_k(cand, kc)
-        ids_flat = index.doc_ids[cids].reshape(-1)            # (G*dp,)
+        ids_flat = index.doc_ids[plan.cids].reshape(-1)       # (G*dp,)
         g_ids = jnp.where(g_top > NEG, ids_flat[g_pos], -1)
         if kc < k:
             g_top = jnp.pad(g_top, ((0, 0), (0, k - kc)),
@@ -381,6 +464,13 @@ def _search_batch(index: ClusterIndex, qmaps: jax.Array, seg_b: jax.Array,
         n_docs += doc_admit.sum(axis=(1, 2)).astype(jnp.int32)
         n_clusters += admit.sum(axis=1).astype(jnp.int32)
         n_segments += seg_admit.sum(axis=(1, 2)).astype(jnp.int32)
+        n_tiles_exec += plan.n_blocks
+        n_tiles_walk += jnp.int32(G * n_qb)
+
+        if record_plans:
+            rec = (jax.tree_util.tree_map(
+                       lambda buf, x: buf.at[g].set(x), rec[0], plan),
+                   rec[1].at[g].set(True))
 
         theta_new = top_scores[:, k - 1]
         nxt = jnp.minimum((g + 1) * G, m_padded - 1)
@@ -390,16 +480,24 @@ def _search_batch(index: ClusterIndex, qmaps: jax.Array, seg_b: jax.Array,
                 | (remaining <= theta_new / exit_div)
                 | (n_clusters >= budget))
         return (g + 1, done, top_scores, top_ids,
-                n_docs, n_clusters, n_segments, n_pruned)
+                n_docs, n_clusters, n_segments, n_pruned,
+                n_tiles_exec, n_tiles_walk, rec)
 
     init = (jnp.int32(0), jnp.zeros((n_q,), bool),
             jnp.full((n_q, k), NEG), jnp.full((n_q, k), -1, jnp.int32),
             jnp.zeros((n_q,), jnp.int32), jnp.zeros((n_q,), jnp.int32),
-            jnp.zeros((n_q,), jnp.int32), jnp.zeros((n_q,), jnp.int32))
-    (_, _, top_scores, top_ids, n_docs, n_clusters, n_segments, _) = (
+            jnp.zeros((n_q,), jnp.int32), jnp.zeros((n_q,), jnp.int32),
+            jnp.int32(0), jnp.int32(0), rec_init)
+    (_, _, top_scores, top_ids, n_docs, n_clusters, n_segments, _,
+     n_tiles_exec, n_tiles_walk, rec) = (
         jax.lax.while_loop(cond, body, init))
     top_ids = jnp.where(top_scores > NEG, top_ids, -1)
-    return top_ids, top_scores, n_docs, n_clusters, n_segments
+    # batch-level tile counters, replicated per query (see TopK docstring)
+    tiles_exec = jnp.full((n_q,), n_tiles_exec, jnp.int32)
+    tiles_walk = jnp.full((n_q,), n_tiles_walk, jnp.int32)
+    out = (top_ids, top_scores, n_docs, n_clusters, n_segments,
+           tiles_exec, tiles_walk)
+    return out + (rec,) if record_plans else out
 
 
 def _method_stats(stats: dict, cfg: SearchConfig) -> tuple:
@@ -413,23 +511,37 @@ def _method_stats(stats: dict, cfg: SearchConfig) -> tuple:
 
 def _retrieve_arrays(index: ClusterIndex, queries: QueryBatch,
                      cfg: SearchConfig,
-                     budget: jax.Array | None = None) -> tuple:
-    """(ids, scores, n_docs, n_clusters, n_segments), each leading n_q.
+                     budget: jax.Array | None = None,
+                     record_plans: bool = False) -> tuple:
+    """(ids, scores, n_docs, n_clusters, n_segments, n_tiles_scored,
+    n_tiles_walked), each leading n_q — plus the recorded wave plans as
+    a trailing element when ``record_plans`` (batched engine only).
 
-    Shared by :func:`retrieve` and the distributed shard-local search.
-    The dense query maps are materialized exactly once and threaded
-    through bound estimation *and* scoring."""
+    Shared by :func:`retrieve`, :func:`retrieve_with_plans` and the
+    distributed shard-local search. The dense query maps are
+    materialized exactly once and threaded through bound estimation
+    *and* scoring."""
     qmaps = queries.dense_map()                               # (n_q, V+1)
     stats = cluster_bounds(index, queries, impl=cfg.bounds_impl,
                            use_kernel=cfg.use_kernel, qmaps=qmaps)
     seg_b, max_s, avg_s, order_key = _method_stats(stats, cfg)
     if cfg.engine == "per_query":
+        if record_plans:
+            raise ValueError("plan recording requires engine='batched'")
         fn = jax.vmap(
             lambda qmap, b, mx, av, key: _search_one_query(
                 index, qmap, b, mx, av, key, cfg, budget=budget))
         return fn(qmaps, seg_b, max_s, avg_s, order_key)
     return _search_batch(index, qmaps, seg_b, max_s, avg_s, order_key,
-                         cfg, budget=budget)
+                         cfg, budget=budget, record_plans=record_plans)
+
+
+def _topk_of(arrays: tuple) -> TopK:
+    (ids, scores, n_docs, n_clusters, n_segments,
+     n_tiles, n_walked) = arrays
+    return TopK(doc_ids=ids, scores=scores, n_scored_docs=n_docs,
+                n_scored_clusters=n_clusters, n_scored_segments=n_segments,
+                n_scored_tiles=n_tiles, n_walked_tiles=n_walked)
 
 
 @partial(jax.jit, static_argnames=("cfg",))
@@ -439,10 +551,42 @@ def retrieve(index: ClusterIndex, queries: QueryBatch,
 
     ``budget`` (optional, traced) overrides ``cfg.cluster_budget`` without
     retracing — the serving engine's adaptive-latency knob."""
-    ids, scores, n_docs, n_clusters, n_segments = _retrieve_arrays(
-        index, queries, cfg, budget=budget)
-    return TopK(doc_ids=ids, scores=scores, n_scored_docs=n_docs,
-                n_scored_clusters=n_clusters, n_scored_segments=n_segments)
+    return _topk_of(_retrieve_arrays(index, queries, cfg, budget=budget))
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def retrieve_with_plans(index: ClusterIndex, queries: QueryBatch,
+                        cfg: SearchConfig,
+                        budget: jax.Array | None = None
+                        ) -> tuple[TopK, tuple]:
+    """Batched retrieval that also returns the per-wave work queues:
+    (TopK, (stacked WavePlan, executed (n_groups,) bool)). Benchmark
+    instrumentation — the stacked plans replay through
+    :func:`execute_plans` to time the executor in isolation."""
+    *arrays, rec = _retrieve_arrays(index, queries, cfg, budget=budget,
+                                    record_plans=True)
+    return _topk_of(tuple(arrays)), rec
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def execute_plans(index: ClusterIndex, qmaps: jax.Array, plans,
+                  executed: jax.Array, cfg: SearchConfig) -> jax.Array:
+    """Replay the executor over recorded wave plans (no planning, no
+    merge): returns the (n_q,) sum of admitted scores — a data dependency
+    that forces all the scoring work. ``qmaps`` is the *precomputed*
+    dense query-map block (``queries.dense_map()``): materializing it is
+    planner-side work and must stay out of the replay the benchmark
+    times against the full retrieve to split planner vs executor cost."""
+
+    def step(acc, wave):
+        plan, ran = wave
+        scores = _execute_wave(index, plan, qmaps, cfg)
+        contrib = jnp.where(scores > NEG, scores, 0.0).sum(axis=(1, 2))
+        return acc + jnp.where(ran, contrib, 0.0), None
+
+    acc, _ = jax.lax.scan(step, jnp.zeros((qmaps.shape[0],)),
+                          (plans, executed))
+    return acc
 
 
 def asc_retrieve(index: ClusterIndex, queries: QueryBatch, k: int,

@@ -121,8 +121,7 @@ class QueryBatch:
         "doc_mask",
         "doc_ids",
         "doc_seg",
-        "seg_max",
-        "seg_max_collapsed",
+        "seg_max_stacked",
         "scale",
         "cluster_ndocs",
     ),
@@ -141,13 +140,19 @@ class ClusterIndex:
     doc_mask: (m, d_pad) bool           per-document validity.
     doc_ids:  (m, d_pad) int32          global document ids (-1 padding).
     doc_seg:  (m, d_pad) int32          segment id of each doc in [0, n_seg).
-    seg_max:  (m, n_seg, V) uint8       segmented maximum term weights.
-    seg_max_collapsed: (m, V) uint8     max over segments of ``seg_max`` —
-              the BoundSum row, precomputed at build/compaction time and
-              max-folded by online inserts so ``cluster_bounds`` never
-              rebuilds it per retrieve call.
+    seg_max_stacked: (m, n_seg + 1, V) uint8 — the *stored stacked* bound
+              table: rows [0, n_seg) are the segmented maximum term
+              weights, row n_seg is their max over segments (the BoundSum
+              row). Storing the stacked layout means the fused bounds GEMM
+              reshapes it to (m * (n_seg + 1), V) for free instead of
+              concatenating a per-call uint8 copy, and the whole table
+              still shards on the leading cluster axis. Maintained at
+              build/compaction time and max-folded by online inserts.
     scale:    () float32                w_fp = w_u8 * scale.
     cluster_ndocs: (m,) int32           live docs per cluster.
+
+    ``seg_max`` / ``seg_max_collapsed`` remain available as zero-copy
+    views into the stacked table.
     """
 
     doc_tids: jax.Array
@@ -155,12 +160,21 @@ class ClusterIndex:
     doc_mask: jax.Array
     doc_ids: jax.Array
     doc_seg: jax.Array
-    seg_max: jax.Array
-    seg_max_collapsed: jax.Array
+    seg_max_stacked: jax.Array
     scale: jax.Array
     cluster_ndocs: jax.Array
     vocab: int
     n_seg: int
+
+    @property
+    def seg_max(self) -> jax.Array:
+        """(m, n_seg, V) segment rows of the stacked table."""
+        return self.seg_max_stacked[:, : self.n_seg]
+
+    @property
+    def seg_max_collapsed(self) -> jax.Array:
+        """(m, V) BoundSum row (max over segments) of the stacked table."""
+        return self.seg_max_stacked[:, self.n_seg]
 
     @property
     def m(self) -> int:
@@ -193,15 +207,14 @@ class ClusterIndex:
         return sum(
             x.size * x.dtype.itemsize
             for x in (self.doc_tids, self.doc_tw, self.doc_mask,
-                      self.doc_ids, self.doc_seg, self.seg_max,
-                      self.seg_max_collapsed)
+                      self.doc_ids, self.doc_seg, self.seg_max_stacked)
         )
 
 
 @partial(
     _register,
     data_fields=("doc_ids", "scores", "n_scored_docs", "n_scored_clusters",
-                 "n_scored_segments"),
+                 "n_scored_segments", "n_scored_tiles", "n_walked_tiles"),
     meta_fields=(),
 )
 @dataclasses.dataclass(frozen=True)
@@ -213,6 +226,14 @@ class TopK:
     n_scored_docs / n_scored_clusters / n_scored_segments: (n_q,) int32 —
     how much work the pruning actually admitted; the efficiency metric every
     benchmark reports alongside wall-clock.
+    n_scored_tiles / n_walked_tiles: (n_q,) int32 — executor grid blocks
+    actually scored vs what a score-everything walk would have executed.
+    Semantics are engine-specific: the batched engine counts compacted
+    (cluster tile, query block) pairs over the whole batch, replicated
+    per query (it shards/psums like the other counters); the per-query
+    reference engine counts that query's own admitted/visited cluster
+    tiles. Their ratio is the frontier-compaction ratio *within* one
+    engine — never compare the raw counts across engines.
     """
 
     doc_ids: jax.Array
@@ -220,6 +241,8 @@ class TopK:
     n_scored_docs: jax.Array
     n_scored_clusters: jax.Array
     n_scored_segments: jax.Array
+    n_scored_tiles: jax.Array
+    n_walked_tiles: jax.Array
 
 
 def tree_bytes(tree: Any) -> int:

@@ -1,4 +1,10 @@
-"""Jit'd public wrapper for the score_cluster_batch kernel.
+"""Jit'd public wrapper for the work-queue executor kernel.
+
+``score_admitted`` pads the query batch to the plan's block size, runs
+the scalar-prefetch kernel over the compacted work queues, then applies
+scale and the planner's doc-admission mask so every non-admitted (query,
+doc) pair — including grid blocks the compacted queue never visited —
+comes out exactly ``NEG``.
 
 Interpret mode is auto-detected per call (compiled on TPU, interpreted
 elsewhere; ``REPRO_PALLAS_INTERPRET`` overrides) — see
@@ -8,21 +14,33 @@ elsewhere; ``REPRO_PALLAS_INTERPRET`` overrides) — see
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 
+from repro.core.plan import WavePlan, doc_admission
+from repro.kernels.score_cluster_batch.ref import (NEG, score_admitted_ref)
 from repro.kernels.score_cluster_batch.score_cluster_batch import (
-    score_cluster_batch_kernel)
-from repro.kernels.score_cluster_batch.ref import score_cluster_batch_ref
+    score_queue_kernel)
 
 
-def score_cluster_batch(doc_tids: jax.Array, doc_tw: jax.Array,
-                        doc_seg: jax.Array, doc_mask: jax.Array,
-                        qmaps: jax.Array, seg_admit: jax.Array,
-                        scale: jax.Array, **kw) -> jax.Array:
-    """doc_tids/doc_tw: (G, dp, tp); doc_seg/doc_mask: (G, dp);
-    qmaps: (n_q, V + 1); seg_admit: (n_q, G, n_seg) bool mask.
-    Returns (n_q, G, dp) scores with non-admitted docs at NEG."""
-    return score_cluster_batch_kernel(doc_tids, doc_tw, doc_seg, doc_mask,
-                                      qmaps, seg_admit, scale, **kw)
+def score_admitted(index_doc_tids: jax.Array, index_doc_tw: jax.Array,
+                   doc_seg: jax.Array, doc_mask: jax.Array,
+                   qmaps: jax.Array, plan: WavePlan, scale: jax.Array,
+                   *, block_v: int | None = None, **kw) -> jax.Array:
+    """index_doc_tids/index_doc_tw: the FULL (m, dp, tp) index arrays —
+    the kernel DMAs admitted tiles straight out of them via the plan's
+    queues; doc_seg/doc_mask: (G, dp) wave metadata (host of the
+    admission mask); qmaps: (n_q, V + 1). Returns (n_q, G, dp) scores
+    with non-admitted pairs at NEG."""
+    n_q = qmaps.shape[0]
+    pad = -n_q % plan.block_q
+    qmaps_p = jnp.pad(qmaps, ((0, pad), (0, 0))) if pad else qmaps
+    raw = score_queue_kernel(
+        index_doc_tids, index_doc_tw, qmaps_p, plan.tile_cids,
+        plan.tile_pos, plan.n_tiles, plan.qblock, plan.n_qblock,
+        block_q=plan.block_q, block_v=block_v, **kw)
+    raw = raw[:n_q] * scale
+    return jnp.where(doc_admission(plan, doc_seg, doc_mask), raw,
+                     jnp.float32(NEG))
 
 
-__all__ = ["score_cluster_batch", "score_cluster_batch_ref"]
+__all__ = ["score_admitted", "score_admitted_ref"]

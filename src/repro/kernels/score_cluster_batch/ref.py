@@ -1,8 +1,12 @@
-"""Pure-jnp oracle for the score_cluster_batch kernel.
+"""Pure-jnp oracle for the work-queue executor.
 
-Same contract: score every (query, doc) pair of a group of cluster tiles,
-with tombstoned docs and docs in non-admitted segments masked to ``NEG``
-so the caller's threshold-filtered top-k merge drops them for free.
+Same contract as ``ops.score_admitted``: given one visitation wave's
+gathered tiles and its :class:`~repro.core.plan.WavePlan`, produce
+``(n_q, G, d_pad)`` RankScores with every non-admitted (query, doc) pair
+— tombstones, docs in non-admitted segments, (query, cluster) pairs the
+planner rejected — at exactly ``NEG``. The oracle scores densely and
+masks; the Pallas kernel only ever touches the compacted queues and is
+equivalence-tested against this.
 """
 
 from __future__ import annotations
@@ -10,24 +14,22 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.plan import WavePlan, doc_admission
+
 NEG = jnp.float32(jnp.finfo(jnp.float32).min)
 
 
-def score_cluster_batch_ref(doc_tids: jax.Array, doc_tw: jax.Array,
-                            doc_seg: jax.Array, doc_mask: jax.Array,
-                            qmaps: jax.Array, seg_admit: jax.Array,
-                            scale: jax.Array) -> jax.Array:
-    """doc_tids/doc_tw: (G, dp, tp); doc_seg/doc_mask: (G, dp);
-    qmaps: (n_q, V + 1); seg_admit: (n_q, G, n_seg) bool.
-    Returns (n_q, G, dp) float32 scores, NEG where not admitted."""
+def score_admitted_ref(doc_tids: jax.Array, doc_tw: jax.Array,
+                       doc_seg: jax.Array, doc_mask: jax.Array,
+                       qmaps: jax.Array, plan: WavePlan,
+                       scale: jax.Array) -> jax.Array:
+    """doc_tids/doc_tw: (G, dp, tp) gathered wave tiles; doc_seg/doc_mask:
+    (G, dp); qmaps: (n_q, V + 1). Returns (n_q, G, dp) float32 scores,
+    NEG where not admitted."""
     # gather from the transposed map so each term id pulls one contiguous
     # row of all n_q query weights (~2x faster than the strided
     # (n_q, ...) gather on CPU; XLA folds the transpose into the gather)
     gathered = qmaps.T[doc_tids]                            # (G, dp, tp, n_q)
     scores = jnp.einsum("gdtq,gdt->qgd", gathered,
                         doc_tw.astype(jnp.float32)) * scale
-    n_seg = seg_admit.shape[-1]
-    doc_admit = jnp.take_along_axis(
-        seg_admit, (doc_seg % n_seg)[None], axis=2)         # (n_q, G, dp)
-    doc_admit = doc_admit & doc_mask[None]
-    return jnp.where(doc_admit, scores, NEG)
+    return jnp.where(doc_admission(plan, doc_seg, doc_mask), scores, NEG)

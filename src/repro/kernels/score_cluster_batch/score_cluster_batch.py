@@ -1,23 +1,37 @@
-"""Pallas TPU kernel: query-batched fused cluster-tile scoring.
+"""Pallas TPU kernel: work-queue executor for the plan/execute pipeline.
 
-The serving hot path visits clusters in a visitation order *shared by the
-whole query batch* (core/search.py). This kernel is the scoring half of
-that design: one grid step loads a single cluster's forward tile
-``(d_pad, t_pad)`` into VMEM **once** and scores it against *every* pinned
-dense query map, emitting ``(n_q, G, d_pad)`` RankScores — instead of the
-per-query path that re-gathers the same tile from HBM once per query
-(n_q x the HBM traffic for the index side of the contraction; see
-docs/perf.md for the bytes-moved accounting).
+The planner (core/plan.py) compacts each visitation wave's admitted
+(query, cluster) pairs into dense work queues; this kernel *is* the
+executor. It scalar-prefetches the queues and uses them in its BlockSpec
+index maps, so the grid walks only real work:
 
-The per-(query, cluster, segment) admission mask is applied *inside* the
-kernel: masked docs come out as ``NEG`` (so the caller's top-k merge drops
-them with no extra masking pass), and a cluster tile that no query admits
-skips the gather + dot entirely via ``pl.when`` on a scalar-prefetched
-any-admit flag — the paper's segment pruning (§3.2) finally skips work on
-the scoring side, not just in bound estimation.
+  * grid = (G, n_qb[, n_vb]): compacted tile slots x query blocks
+    (x vocab chunks for WordPiece-scale maps);
+  * the cluster tile for slot ``i`` is DMA'd straight out of the *full*
+    ``(m, d_pad, t_pad)`` index arrays at row ``tile_cids[i]`` — no XLA
+    gather ever materializes the wave's tiles, and a tile admitted by no
+    query is simply absent from the queue (it never enters the grid,
+    rather than being ``pl.when``-skipped after its DMA was issued);
+  * the query-map block for step ``(i, j)`` is rows
+    ``[qblock[i, j] * BQ, (qblock[i, j] + 1) * BQ)`` — only blocks
+    containing an admitting query are fetched, and the resident VMEM
+    footprint is ``BQ * V_chunk`` floats instead of the whole
+    ``(n_q, V + 1)`` map, which is what lets batch 256+ fit VMEM;
+  * steps past the end of a queue are re-mapped (in the index maps, via
+    the prefetched counts) to the block of the *last real step*, so they
+    issue no DMA, compute nothing (``pl.when``), and their write-back is
+    an idempotent rewrite of data the last real step already produced.
 
-Grid is over the ``G`` clusters of one visitation group; the query-map
-block ``(n_q, V + 1)`` stays resident across all steps.
+Output blocks the queue never visits are uninitialized garbage *by
+design*: the op wrapper (ops.py) masks everything non-admitted to NEG
+with the planner's doc-admission mask, which is the single source of
+truth downstream (top-k merge, work counters).
+
+Optional vocab blocking (``block_v``): the dense-map gather cannot be
+blocked by slicing (tids are arbitrary in [0, V]), so each vocab chunk
+contributes ``where(v0 <= tid < v0 + BV, chunk[tid - v0], 0)`` and the
+output block accumulates across the innermost grid dimension. Full-V
+(one chunk) is the default and skips the masking entirely.
 """
 
 from __future__ import annotations
@@ -38,68 +52,137 @@ _CompilerParams = pallas_tpu_compiler_params()
 NEG = float(jnp.finfo(jnp.float32).min)
 
 
-def _kernel(scale_ref, any_admit_ref, tids_ref, tw_ref, seg_ref, mask_ref,
-            qmaps_ref, admit_ref, out_ref):
-    g = pl.program_id(0)
+def _queue_step(i, j, n_tiles_ref, n_qblock_ref):
+    """Clamp a (tile slot, qblock slot) grid step onto the work queue.
 
-    @pl.when(any_admit_ref[g] > 0)
+    Real steps map to themselves; steps past a queue's end map to the
+    last real step (same blocks already resident in VMEM => no DMA, and
+    the write-back rewrites what that step already wrote). Also returns
+    whether the step is real, so the vocab-chunk index can be clamped
+    the same way."""
+    tile_live = i < n_tiles_ref[0]
+    ii = jnp.where(tile_live, i, jnp.maximum(n_tiles_ref[0] - 1, 0))
+    last = jnp.maximum(n_qblock_ref[ii] - 1, 0)
+    # padded *tile* steps must pin the last real step's qblock outright —
+    # min(j, last) would restart at qblock 0 and revisit out blocks
+    # non-consecutively, which compiled write-back turns into stale-VMEM
+    # clobbers of already-written scores (interpret mode re-reads out
+    # blocks per step and cannot see this)
+    jj = jnp.where(tile_live, jnp.minimum(j, last), last)
+    real = tile_live & (j < n_qblock_ref[ii])
+    return ii, jj, real
+
+
+def _kernel(tile_cids_ref, tile_pos_ref, n_tiles_ref, qblock_ref,
+            n_qblock_ref, tids_ref, tw_ref, qmaps_ref, out_ref, *,
+            n_vb: int, block_v: int):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    k = pl.program_id(2)
+
+    @pl.when((i < n_tiles_ref[0]) & (j < n_qblock_ref[i]))
     def _score():
-        tids = tids_ref[...][0].astype(jnp.int32)       # (dp, tp)
-        tw = tw_ref[...][0].astype(jnp.float32)         # (dp, tp)
-        qmaps = qmaps_ref[...]                          # (n_q, V + 1)
-        qv = jnp.take(qmaps, tids.reshape(-1), axis=1,
-                      indices_are_sorted=False, unique_indices=False)
-        qv = qv.reshape((qmaps.shape[0],) + tids.shape)  # (n_q, dp, tp)
-        scores = jnp.sum(qv * tw[None], axis=-1) * scale_ref[0]
+        tids = tids_ref[...][0].astype(jnp.int32)        # (dp, tp)
+        tw = tw_ref[...][0].astype(jnp.float32)          # (dp, tp)
+        qmaps = qmaps_ref[...]                           # (BQ, BV)
+        if n_vb == 1:
+            qv = jnp.take(qmaps, tids.reshape(-1), axis=1,
+                          indices_are_sorted=False, unique_indices=False)
+            qv = qv.reshape((qmaps.shape[0],) + tids.shape)
+        else:
+            v0 = k * block_v
+            local = jnp.clip(tids - v0, 0, block_v - 1)
+            qv = jnp.take(qmaps, local.reshape(-1), axis=1,
+                          indices_are_sorted=False, unique_indices=False)
+            qv = qv.reshape((qmaps.shape[0],) + tids.shape)
+            in_chunk = (tids >= v0) & (tids < v0 + block_v)
+            qv = jnp.where(in_chunk[None], qv, 0.0)
+        partial_scores = jnp.sum(qv * tw[None], axis=-1)  # (BQ, dp)
 
-        admit = admit_ref[...][:, 0, :]                 # (n_q, n_seg) u8
-        dseg = seg_ref[...][0] % admit.shape[1]         # (dp,)
-        live = mask_ref[...][0]                         # (dp,) u8
-        doc_admit = (jnp.take(admit, dseg, axis=1) > 0) & (live > 0)[None]
-        out_ref[...] = jnp.where(doc_admit, scores, NEG)[:, None, :]
+        if n_vb == 1:
+            out_ref[...] = partial_scores[:, None, :]
+        else:
+            @pl.when(k == 0)
+            def _init():
+                out_ref[...] = partial_scores[:, None, :]
 
-    @pl.when(any_admit_ref[g] == 0)
-    def _skip():                        # fully-pruned tile: no gather at all
-        out_ref[...] = jnp.full_like(out_ref, NEG)
+            @pl.when(k > 0)
+            def _accum():
+                out_ref[...] += partial_scores[:, None, :]
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def score_cluster_batch_kernel(
-    doc_tids: jax.Array,        # (G, dp, tp) integer in [0, V] (V = zero slot)
-    doc_tw: jax.Array,          # (G, dp, tp) uint8
-    doc_seg: jax.Array,         # (G, dp) int32 segment ids
-    doc_mask: jax.Array,        # (G, dp) uint8 per-doc liveness (0/1)
-    qmaps: jax.Array,           # (n_q, V + 1) float32, qmaps[:, V] == 0
-    seg_admit: jax.Array,       # (n_q, G, n_seg) uint8 admission (0/1)
-    scale: jax.Array,           # () float32
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_q", "block_v", "interpret"))
+def score_queue_kernel(
+    doc_tids: jax.Array,        # (m, dp, tp) integer in [0, V] (V = zero slot)
+    doc_tw: jax.Array,          # (m, dp, tp) uint8
+    qmaps: jax.Array,           # (n_q_pad, V + 1) float32, qmaps[:, V] == 0
+    tile_cids: jax.Array,       # (G,) int32 compacted global cluster ids
+    tile_pos: jax.Array,        # (G,) int32 wave position per compacted tile
+    n_tiles: jax.Array,         # () int32
+    qblock: jax.Array,          # (G, n_qb) int32 compacted query-block queue
+    n_qblock: jax.Array,        # (G,) int32
     *,
+    block_q: int,
+    block_v: int | None = None,
     interpret: bool | None = None,
-) -> jax.Array:                 # (n_q, G, dp) float32, NEG where not admitted
+) -> jax.Array:
+    """(n_q_pad, G, dp) raw scores laid out by *wave position* (the
+    ``tile_pos`` entry of each queue slot), without scale or admission
+    masking; wave positions the queue never visits hold unwritten
+    garbage — callers must mask with the planner's doc-admission
+    (ops.score_admitted does)."""
     if interpret is None:       # backend auto-detect + env override
         interpret = pallas_interpret_default()
-    G, dp, tp = doc_tids.shape
-    n_q, n_seg = seg_admit.shape[0], seg_admit.shape[2]
-    # scalar any-admit flags gate each tile's work (pl.when)
-    any_admit = jnp.any(seg_admit > 0, axis=(0, 2)).astype(jnp.int32)  # (G,)
+    m, dp, tp = doc_tids.shape
+    n_q_pad, v_cols = qmaps.shape
+    G, n_qb = qblock.shape
+    if n_q_pad % block_q:
+        raise ValueError(f"qmaps rows {n_q_pad} not a multiple of "
+                         f"block_q {block_q}")
+    if block_v is None:
+        block_v = v_cols
+    v_pad = -v_cols % block_v
+    if v_pad:
+        qmaps = jnp.pad(qmaps, ((0, 0), (0, v_pad)))
+    n_vb = qmaps.shape[1] // block_v
 
-    out = pl.pallas_call(
-        _kernel,
-        grid=(G,),
+    def tile_idx(i, j, k, cids, pos, nt, qb, nqb):
+        ii, _, _ = _queue_step(i, j, nt, nqb)
+        return (cids[ii], 0, 0)
+
+    def qmap_idx(i, j, k, cids, pos, nt, qb, nqb):
+        ii, jj, real = _queue_step(i, j, nt, nqb)
+        # padded steps pin the *last* chunk too — the one the previous
+        # real step left resident — so they issue no qmap DMA either
+        kk = jnp.where(real, k, n_vb - 1)
+        return (qb[ii, jj], kk)
+
+    def out_idx(i, j, k, cids, pos, nt, qb, nqb):
+        ii, jj, _ = _queue_step(i, j, nt, nqb)
+        return (qb[ii, jj], pos[ii], 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=5,
+        grid=(G, n_qb, n_vb),
         in_specs=[
-            pl.BlockSpec(memory_space=pltpu.SMEM),               # scale
-            pl.BlockSpec(memory_space=pltpu.SMEM),               # any_admit
-            pl.BlockSpec((1, dp, tp), lambda i: (i, 0, 0)),      # tids
-            pl.BlockSpec((1, dp, tp), lambda i: (i, 0, 0)),      # tw
-            pl.BlockSpec((1, dp), lambda i: (i, 0)),             # doc_seg
-            pl.BlockSpec((1, dp), lambda i: (i, 0)),             # doc_mask
-            pl.BlockSpec((n_q, qmaps.shape[1]), lambda i: (0, 0)),
-            pl.BlockSpec((n_q, 1, n_seg), lambda i: (0, i, 0)),  # admission
+            # one cluster tile straight out of the full index arrays
+            pl.BlockSpec((1, dp, tp), tile_idx),
+            pl.BlockSpec((1, dp, tp), tile_idx),
+            # only query blocks with >= 1 admitting query are fetched
+            pl.BlockSpec((block_q, block_v), qmap_idx),
         ],
-        out_specs=pl.BlockSpec((n_q, 1, dp), lambda i: (0, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((n_q, G, dp), jnp.float32),
+        out_specs=pl.BlockSpec((block_q, 1, dp), out_idx),
+    )
+    out = pl.pallas_call(
+        functools.partial(_kernel, n_vb=n_vb, block_v=block_v),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_q_pad, G, dp), jnp.float32),
         compiler_params=_CompilerParams(
-            dimension_semantics=("arbitrary",)),
+            dimension_semantics=("arbitrary", "arbitrary", "arbitrary")),
         interpret=interpret,
-    )(scale.reshape(1), any_admit, doc_tids, doc_tw, doc_seg,
-      doc_mask.astype(jnp.uint8), qmaps, seg_admit.astype(jnp.uint8))
+    )(tile_cids.astype(jnp.int32), tile_pos.astype(jnp.int32),
+      n_tiles.reshape(1).astype(jnp.int32), qblock.astype(jnp.int32),
+      n_qblock.astype(jnp.int32), doc_tids, doc_tw, qmaps)
     return out

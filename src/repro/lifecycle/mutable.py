@@ -62,8 +62,12 @@ class MutableIndex:
         self.doc_mask = np.asarray(index.doc_mask).copy()
         self.doc_ids = np.asarray(index.doc_ids).copy()
         self.doc_seg = np.asarray(index.doc_seg).copy()
-        self.seg_max = np.asarray(index.seg_max).copy()
-        self.seg_max_collapsed = np.asarray(index.seg_max_collapsed).copy()
+        # one stacked mirror; seg_max / seg_max_collapsed are numpy *views*
+        # into it, so max-folding either keeps the stored stacked layout
+        # (what snapshots publish) coherent for free
+        self.seg_max_stacked = np.asarray(index.seg_max_stacked).copy()
+        self.seg_max = self.seg_max_stacked[:, : index.n_seg]
+        self.seg_max_collapsed = self.seg_max_stacked[:, index.n_seg]
         self.cluster_ndocs = np.asarray(index.cluster_ndocs).copy()
         self.scale = float(index.scale)
         self.vocab = index.vocab
@@ -266,8 +270,9 @@ class MutableIndex:
         self.doc_mask = packed["doc_mask"]
         self.doc_ids = packed["doc_ids"]
         self.doc_seg = packed["doc_seg"]
-        self.seg_max = packed["seg_max"]
-        self.seg_max_collapsed = packed["seg_max_collapsed"]
+        self.seg_max_stacked = packed["seg_max_stacked"]
+        self.seg_max = self.seg_max_stacked[:, : self.n_seg]
+        self.seg_max_collapsed = self.seg_max_stacked[:, self.n_seg]
         self.cluster_ndocs = packed["cluster_ndocs"]
 
         cl, sl = np.nonzero(self.doc_mask)
@@ -292,8 +297,7 @@ class MutableIndex:
             doc_mask=jnp.asarray(self.doc_mask),
             doc_ids=jnp.asarray(self.doc_ids),
             doc_seg=jnp.asarray(self.doc_seg),
-            seg_max=jnp.asarray(self.seg_max),
-            seg_max_collapsed=jnp.asarray(self.seg_max_collapsed),
+            seg_max_stacked=jnp.asarray(self.seg_max_stacked),
             scale=jnp.float32(self.scale),
             cluster_ndocs=jnp.asarray(self.cluster_ndocs),
             vocab=self.vocab,

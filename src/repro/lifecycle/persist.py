@@ -28,16 +28,37 @@ import jax.numpy as jnp
 
 from repro.core.types import ClusterIndex
 
-FORMAT_VERSION = 1
+# version history:
+#   1 — seg_max (m, n_seg, V) per shard, optionally seg_max_collapsed
+#   2 — stored stacked bound table seg_max_stacked (m, n_seg + 1, V);
+#       v1 shards are still readable: the stacked layout (and the
+#       collapsed row, if the shard predates it) is derived at load
+FORMAT_VERSION = 2
+_READABLE_VERSIONS = (1, 2)
 
 # cluster-axis-sharded array fields, in manifest order
 _FIELDS = ("doc_tids", "doc_tw", "doc_mask", "doc_ids", "doc_seg",
-           "seg_max", "seg_max_collapsed", "cluster_ndocs")
+           "seg_max_stacked", "cluster_ndocs")
+
+
+def _derive_stacked(arrays: dict) -> "np.ndarray":
+    """Legacy (v1) shards: build the stacked table from seg_max plus the
+    collapsed row (recomputed when the shard predates it too)."""
+    seg_max = arrays.pop("seg_max")
+    collapsed = arrays.pop("seg_max_collapsed", None)
+    if collapsed is None:
+        collapsed = seg_max.max(axis=1)
+    return np.concatenate([seg_max, collapsed[:, None]], axis=1)
+
+
 # fields that may be absent in checkpoints written before they existed;
 # each maps to a recompute-from-what-is-there fallback applied at load
 _DERIVABLE = {
-    "seg_max_collapsed": lambda arrays: arrays["seg_max"].max(axis=1),
+    "seg_max_stacked": _derive_stacked,
 }
+# legacy spellings accepted from old shards (loaded, then folded into the
+# derivation above instead of becoming index fields)
+_LEGACY_FIELDS = ("seg_max", "seg_max_collapsed")
 
 
 def _shard_rows(m: int, n_shards: int) -> list[int]:
@@ -118,10 +139,10 @@ def read_manifest(directory: str) -> dict:
     with open(os.path.join(directory, "manifest.json")) as f:
         manifest = json.load(f)
     version = manifest.get("format_version")
-    if version != FORMAT_VERSION:
+    if version not in _READABLE_VERSIONS:
         raise ValueError(
             f"index at {directory!r} has format version {version}; this "
-            f"build reads version {FORMAT_VERSION}")
+            f"build reads versions {_READABLE_VERSIONS}")
     return manifest
 
 
@@ -138,13 +159,16 @@ def load_index(directory: str,
     directory = _recover_path(directory)
     manifest = read_manifest(directory)
     pick = list(range(manifest["n_shards"])) if shards is None else shards
-    parts: dict[str, list[np.ndarray]] = {f: [] for f in _FIELDS}
+    parts: dict[str, list[np.ndarray]] = {
+        f: [] for f in _FIELDS + _LEGACY_FIELDS}
     for s in pick:
         path = os.path.join(directory, f"shard_{s:04d}.npz")
         with np.load(path) as z:
-            for f in _FIELDS:
-                if f not in z.files and f in _DERIVABLE:
-                    continue
+            for f in _FIELDS + _LEGACY_FIELDS:
+                if f not in z.files:
+                    if f in _DERIVABLE or f in _LEGACY_FIELDS:
+                        continue
+                    raise KeyError(f"shard {path!r} is missing field {f!r}")
                 parts[f].append(z[f])
     arrays = {f: np.concatenate(p, axis=0) for f, p in parts.items() if p}
     for f, derive in _DERIVABLE.items():
@@ -160,8 +184,7 @@ def load_index(directory: str,
         doc_mask=jnp.asarray(arrays["doc_mask"]),
         doc_ids=jnp.asarray(arrays["doc_ids"]),
         doc_seg=jnp.asarray(arrays["doc_seg"]),
-        seg_max=jnp.asarray(arrays["seg_max"]),
-        seg_max_collapsed=jnp.asarray(arrays["seg_max_collapsed"]),
+        seg_max_stacked=jnp.asarray(arrays["seg_max_stacked"]),
         scale=jnp.float32(manifest["scale"]),
         cluster_ndocs=jnp.asarray(arrays["cluster_ndocs"]),
         vocab=manifest["vocab"],

@@ -46,7 +46,17 @@ class IndexSnapshot:
 
 
 class SnapshotPublisher:
-    """Atomic epoch swap between one writer and many readers."""
+    """Atomic epoch swap between one writer and many readers.
+
+    GC accounting (ROADMAP "snapshot GC metrics"): readers that pin
+    epochs through :meth:`pin`/:meth:`unpin` are counted per epoch, and
+    every published snapshot carries a ``weakref.finalize`` hook that
+    records, when the *superseded* snapshot's last reference drops, how
+    long it outlived its replacement. ``max_epoch_lifetime_s`` is the
+    worst observed overstay — the double-buffering depth in seconds; a
+    growing value means some reader is sitting on an old epoch and the
+    publisher is effectively triple-or-more-buffered.
+    """
 
     def __init__(self, index: ClusterIndex | None = None):
         self._lock = threading.Lock()
@@ -55,6 +65,9 @@ class SnapshotPublisher:
         # arrays itself — old epochs live exactly as long as their last
         # in-flight reader, which is the whole double-buffering contract
         self._previous: weakref.ref | None = None
+        self._readers: dict[int, int] = {}       # epoch -> live pin count
+        self._collected_epochs = 0
+        self._max_lifetime_s = 0.0
         if index is not None:
             self.publish(index)
 
@@ -63,9 +76,55 @@ class SnapshotPublisher:
             epoch = self._current.epoch + 1 if self._current else 0
             snap = IndexSnapshot.of(index, epoch)
             if self._current is not None:
-                self._previous = weakref.ref(self._current)
+                old = self._current
+                self._previous = weakref.ref(old)
+                # the old epoch starts overstaying *now*; the finalizer
+                # fires when its last reference (reader or `previous`
+                # probe) drops, never keeping the snapshot alive itself
+                weakref.finalize(
+                    old, self._note_collected, old.epoch, time.time())
             self._current = snap
             return snap
+
+    def _note_collected(self, epoch: int, superseded_s: float) -> None:
+        lifetime = time.time() - superseded_s
+        with self._lock:
+            self._collected_epochs += 1
+            self._max_lifetime_s = max(self._max_lifetime_s, lifetime)
+            self._readers.pop(epoch, None)
+
+    # -- reader accounting -------------------------------------------------
+    def pin(self) -> IndexSnapshot:
+        """Current snapshot, counted as one live reader of its epoch.
+        Pair with :meth:`unpin` (the serving engine does per search)."""
+        with self._lock:
+            if self._current is None:
+                raise RuntimeError("nothing published yet")
+            snap = self._current
+            self._readers[snap.epoch] = self._readers.get(snap.epoch, 0) + 1
+            return snap
+
+    def unpin(self, snap: IndexSnapshot) -> None:
+        with self._lock:
+            n = self._readers.get(snap.epoch, 0) - 1
+            if n > 0:
+                self._readers[snap.epoch] = n
+            else:
+                self._readers.pop(snap.epoch, None)
+
+    def reader_counts(self) -> dict[int, int]:
+        """Live pinned readers per epoch (only epochs with readers)."""
+        with self._lock:
+            return dict(self._readers)
+
+    def gc_stats(self) -> dict:
+        """GC accounting: epochs collected, worst overstay, live pins."""
+        with self._lock:
+            return {
+                "collected_epochs": self._collected_epochs,
+                "max_epoch_lifetime_s": self._max_lifetime_s,
+                "live_readers": dict(self._readers),
+            }
 
     @property
     def current(self) -> IndexSnapshot:

@@ -37,12 +37,22 @@ from repro.utils import shard_map
 class ServeStats:
     """Rolling serve-loop accounting. ``latencies_ms`` is a bounded window
     (percentiles over recent traffic); under sustained load an unbounded
-    list would grow forever."""
+    list would grow forever.
+
+    Snapshot GC metrics (mirrored from the publisher after every search
+    when serving a live index): ``epoch_reader_counts`` is the live pin
+    count per epoch, ``max_epoch_lifetime_s`` the longest any superseded
+    epoch has been held alive by in-flight readers, and
+    ``collected_epochs`` how many old epochs have been garbage-collected
+    so far."""
 
     window: int = 4096
     n_queries: int = 0
     total_time_s: float = 0.0
     latencies_ms: collections.deque = None
+    epoch_reader_counts: dict = dataclasses.field(default_factory=dict)
+    max_epoch_lifetime_s: float = 0.0
+    collected_epochs: int = 0
 
     def __post_init__(self):
         if self.latencies_ms is None:
@@ -138,13 +148,25 @@ class RetrievalEngine:
             self._fn(snap.index, queries, self._budget(snap)))
 
     def search(self, queries: QueryBatch) -> TopK:
-        snap = self._resolve()             # pin one epoch for this request
-        t0 = time.perf_counter()
-        out = jax.block_until_ready(
-            self._fn(snap.index, queries, self._budget(snap)))
-        dt = time.perf_counter() - t0
+        live = isinstance(self._source, SnapshotPublisher)
+        # pin one epoch for this request (counted as a live reader when
+        # serving a publisher, so GC metrics see in-flight queries)
+        snap = self._source.pin() if live else self._resolve()
+        try:
+            t0 = time.perf_counter()
+            out = jax.block_until_ready(
+                self._fn(snap.index, queries, self._budget(snap)))
+            dt = time.perf_counter() - t0
+        finally:
+            if live:
+                self._source.unpin(snap)
         per_query_ms = self.stats.record(queries.n_queries, dt)
         self.last_epoch = snap.epoch
+        if live:
+            gc = self._source.gc_stats()
+            self.stats.epoch_reader_counts = gc["live_readers"]
+            self.stats.max_epoch_lifetime_s = gc["max_epoch_lifetime_s"]
+            self.stats.collected_epochs = gc["collected_epochs"]
         if self.adaptive is not None:
             self.adaptive.observe(float(out.n_scored_clusters.mean()),
                                   per_query_ms)
@@ -163,7 +185,7 @@ def index_shard_specs(index: ClusterIndex,
     return ClusterIndex(
         doc_tids=P(c, None, None), doc_tw=P(c, None, None),
         doc_mask=P(c, None), doc_ids=P(c, None), doc_seg=P(c, None),
-        seg_max=P(c, None, None), seg_max_collapsed=P(c, None), scale=P(),
+        seg_max_stacked=P(c, None, None), scale=P(),
         cluster_ndocs=P(c), vocab=index.vocab, n_seg=index.n_seg)
 
 
@@ -180,9 +202,11 @@ def distributed_retrieve(index: ClusterIndex, queries: QueryBatch,
 
     def local(index_local: ClusterIndex, q_local: QueryBatch) -> TopK:
         # full two-level search on the local clusters with the configured
-        # engine (batched by default: local tiles fetched once per batch)
-        ids, scores, nd, nc, ns = _retrieve_arrays(index_local, q_local,
-                                                   cfg)
+        # engine (batched by default: shard-local waves are planned into
+        # compacted work queues and executed exactly like the single-host
+        # core — each local tile fetched once per batch, only if admitted)
+        ids, scores, nd, nc, ns, nt, nw = _retrieve_arrays(
+            index_local, q_local, cfg)
         # merge the per-shard top-k across the cluster axes
         for ax in caxes:
             all_scores = jax.lax.all_gather(scores, ax, axis=1, tiled=True)
@@ -192,12 +216,16 @@ def distributed_retrieve(index: ClusterIndex, queries: QueryBatch,
         nd = jax.lax.psum(nd, caxes)
         nc = jax.lax.psum(nc, caxes)
         ns = jax.lax.psum(ns, caxes)
+        nt = jax.lax.psum(nt, caxes)
+        nw = jax.lax.psum(nw, caxes)
         return TopK(doc_ids=ids, scores=scores, n_scored_docs=nd,
-                    n_scored_clusters=nc, n_scored_segments=ns)
+                    n_scored_clusters=nc, n_scored_segments=ns,
+                    n_scored_tiles=nt, n_walked_tiles=nw)
 
     out_specs = TopK(doc_ids=P(qaxis, None), scores=P(qaxis, None),
                      n_scored_docs=P(qaxis), n_scored_clusters=P(qaxis),
-                     n_scored_segments=P(qaxis))
+                     n_scored_segments=P(qaxis), n_scored_tiles=P(qaxis),
+                     n_walked_tiles=P(qaxis))
     fn = shard_map(local, mesh=mesh, in_specs=(ispecs, qspec),
                    out_specs=out_specs, check_vma=False)
     return fn(index, queries)

@@ -1,12 +1,13 @@
-"""Batched tile-shared engine (ISSUE 2): scorer equivalence + rank safety.
+"""Plan/execute batched engine: executor equivalence + rank safety.
 
 Two layers of guarantees:
 
-  * the fused batch scorer (kernels/score_cluster_batch, Pallas + jnp ref)
-    must reproduce ``score_docs_ref`` exactly for every admitted
+  * the work-queue executor (kernels/score_cluster_batch, Pallas + jnp
+    ref) must reproduce ``score_docs_ref`` exactly for every admitted
     (query, doc) pair, and emit NEG for tombstoned docs, docs in
-    non-admitted segments, and fully-pruned tiles (which the kernel skips
-    without gathering);
+    non-admitted segments, (query, cluster) pairs the planner rejected,
+    and tiles absent from the compacted queue (which never enter the
+    kernel grid at all);
   * batched retrieval must return the same top-k result sets as the
     per-query reference engine at mu = eta = 1, and keep the paper's
     mu-approximation invariant (Prop 3) for mu < eta < 1 — the shared
@@ -23,12 +24,23 @@ import pytest
 from _prop import given, settings, st
 
 from repro.core.index import build_index
+from repro.core.plan import plan_wave
 from repro.core.search import (SearchConfig, brute_force_topk, retrieve,
                                score_docs_ref)
 from repro.data.synthetic import CorpusSpec, make_corpus, make_queries
 from repro.kernels.score_cluster_batch import ops as scb_ops
 
 NEG_F = float(jnp.finfo(jnp.float32).min)
+
+
+def _mk_plan(cids, seg_admit, block_q, live=None):
+    """Wave plan from a raw (n_q, G, n_seg) segment-admission mask (a
+    (query, tile) pair is admitted iff any of its segments is)."""
+    cids = jnp.asarray(cids, jnp.int32)
+    admit = jnp.asarray(seg_admit).any(axis=-1)
+    if live is None:
+        live = jnp.ones((cids.shape[0],), bool)
+    return plan_wave(cids, live, admit, jnp.asarray(seg_admit), block_q)
 
 
 def _scorer_expected(index, cids, qmaps, seg_admit):
@@ -38,20 +50,25 @@ def _scorer_expected(index, cids, qmaps, seg_admit):
     per_doc = jax.vmap(
         lambda qm: score_docs_ref(tids, tw, qm, index.scale))(qmaps)
     n_seg = seg_admit.shape[-1]
-    admitted = dmask[None] & jnp.take_along_axis(
-        seg_admit, (dseg % n_seg)[None], axis=2)
+    admitted = (dmask[None]
+                & jnp.asarray(seg_admit).any(-1)[:, :, None]
+                & jnp.take_along_axis(
+                    jnp.asarray(seg_admit), (dseg % n_seg)[None], axis=2))
     return np.asarray(admitted), np.asarray(per_doc)
 
 
-def _check_scorer(index, cids, qmaps, seg_admit):
-    tids, tw = index.doc_tids[cids], index.doc_tw[cids]
+def _check_scorer(index, cids, qmaps, seg_admit, block_q=8, block_v=None):
+    cids = jnp.asarray(cids, jnp.int32)
     dseg, dmask = index.doc_seg[cids], index.doc_mask[cids]
+    tids, tw = index.doc_tids[cids], index.doc_tw[cids]
+    plan = _mk_plan(cids, seg_admit, block_q)
     admitted, expect = _scorer_expected(index, cids, qmaps, seg_admit)
     for impl, out in [
-        ("ref", scb_ops.score_cluster_batch_ref(
-            tids, tw, dseg, dmask, qmaps, seg_admit, index.scale)),
-        ("kernel", scb_ops.score_cluster_batch(
-            tids, tw, dseg, dmask, qmaps, seg_admit, index.scale)),
+        ("ref", scb_ops.score_admitted_ref(
+            tids, tw, dseg, dmask, qmaps, plan, index.scale)),
+        ("kernel", scb_ops.score_admitted(
+            index.doc_tids, index.doc_tw, dseg, dmask, qmaps, plan,
+            index.scale, block_v=block_v)),
     ]:
         out = np.asarray(out)
         np.testing.assert_allclose(
@@ -72,7 +89,8 @@ def test_batch_scorer_matches_score_docs_ref(index, queries):
 
 
 def test_batch_scorer_fully_pruned_tiles(index, queries):
-    """A tile no query admits is skipped in-kernel: all outputs NEG."""
+    """A tile no query admits never enters the compacted queue: all its
+    outputs are NEG and the plan's queue is shorter than the wave."""
     q, _ = queries
     qmaps = q.dense_map()
     cids = jnp.arange(4)
@@ -81,9 +99,12 @@ def test_batch_scorer_fully_pruned_tiles(index, queries):
     seg_admit[:, 3] = False
     seg_admit = jnp.asarray(seg_admit)
     _check_scorer(index, cids, qmaps, seg_admit)
-    out = np.asarray(scb_ops.score_cluster_batch(
-        index.doc_tids[cids], index.doc_tw[cids], index.doc_seg[cids],
-        index.doc_mask[cids], qmaps, seg_admit, index.scale))
+    plan = _mk_plan(cids, seg_admit, block_q=8)
+    assert int(plan.n_tiles) == 2
+    np.testing.assert_array_equal(np.asarray(plan.tile_cids)[:2], [0, 2])
+    out = np.asarray(scb_ops.score_admitted(
+        index.doc_tids, index.doc_tw, index.doc_seg[cids],
+        index.doc_mask[cids], qmaps, plan, index.scale))
     assert (out[:, 1] == NEG_F).all() and (out[:, 3] == NEG_F).all()
 
 
@@ -108,6 +129,56 @@ def test_all_segments_admitted_equals_plain_scoring(index, queries):
     cids = jnp.arange(index.m)
     seg_admit = jnp.ones((q.n_queries, index.m, index.n_seg), bool)
     _check_scorer(index, cids, qmaps, seg_admit)
+
+
+def test_executor_query_blocking_invariant(index, queries):
+    """The executor result is invariant to the query-block size (blocks
+    with no admitting query are skipped, not dropped)."""
+    q, _ = queries
+    qmaps = q.dense_map()
+    cids = jnp.arange(6)
+    rng = np.random.default_rng(7)
+    # sparse admission so several query blocks are empty per tile
+    seg_admit = jnp.asarray(
+        rng.random((q.n_queries, 6, index.n_seg)) < 0.15)
+    outs = {}
+    for bq in (1, 4, q.n_queries, 2 * q.n_queries):
+        plan = _mk_plan(cids, seg_admit, block_q=bq)
+        outs[bq] = np.asarray(scb_ops.score_admitted(
+            index.doc_tids, index.doc_tw, index.doc_seg[cids],
+            index.doc_mask[cids], qmaps, plan, index.scale))
+    base = outs.popitem()[1]
+    for bq, out in outs.items():
+        np.testing.assert_allclose(out, base, rtol=1e-6, atol=1e-6,
+                                   err_msg=f"block_q={bq} diverges")
+
+
+def test_executor_vocab_blocking_invariant(index, queries):
+    """Chunking the dense-map gather over the vocab axis accumulates to
+    the same scores as the single full-V gather."""
+    q, _ = queries
+    qmaps = q.dense_map()
+    cids = jnp.arange(5)
+    rng = np.random.default_rng(11)
+    seg_admit = jnp.asarray(
+        rng.random((q.n_queries, 5, index.n_seg)) < 0.5)
+    _check_scorer(index, cids, qmaps, seg_admit, block_v=128)
+    _check_scorer(index, cids, qmaps, seg_admit, block_v=193)
+
+
+def test_empty_wave_is_all_neg(index, queries):
+    """A wave with no admitted pair at all stays exactly NEG everywhere
+    (the executor grid does no real work; masking covers the garbage)."""
+    q, _ = queries
+    qmaps = q.dense_map()
+    cids = jnp.arange(4)
+    seg_admit = jnp.zeros((q.n_queries, 4, index.n_seg), bool)
+    plan = _mk_plan(cids, seg_admit, block_q=8)
+    assert int(plan.n_tiles) == 0 and int(plan.n_blocks) == 0
+    out = np.asarray(scb_ops.score_admitted(
+        index.doc_tids, index.doc_tw, index.doc_seg[cids],
+        index.doc_mask[cids], qmaps, plan, index.scale))
+    assert (out == NEG_F).all()
 
 
 # ---------------------------------------------------------------------------
@@ -214,3 +285,30 @@ def test_batched_counters_not_more_work_than_reference(index, queries):
     # within 20% of the reference's admitted work
     assert float(b.n_scored_clusters.mean()) <= \
         1.2 * float(p.n_scored_clusters.mean()) + 1.0
+
+
+def test_queue_step_padding_maps_to_last_real_step():
+    """Every padded grid step must re-map to exactly the LAST real step
+    of the queue (not an earlier one): compiled Pallas writes the out
+    VMEM buffer back whenever a block window closes, so a padded step
+    that re-opened an *earlier* out block would clobber its correct
+    scores with stale buffer contents. Interpret mode cannot see this
+    (it re-reads out blocks per step), so the invariant is pinned here
+    at the index-map level."""
+    from repro.kernels.score_cluster_batch.score_cluster_batch import (
+        _queue_step)
+    n_tiles = jnp.asarray([2], jnp.int32)
+    n_qblock = jnp.asarray([3, 1, 0, 0], jnp.int32)   # G=4, 2 live tiles
+    G, n_qb = 4, 4
+    last_real = (1, 0)            # tile slot 1's single live qblock
+    for i in range(G):
+        for j in range(n_qb):
+            ii, jj, real = _queue_step(jnp.int32(i), jnp.int32(j),
+                                       n_tiles, n_qblock)
+            ii, jj, real = int(ii), int(jj), bool(real)
+            if i < 2 and j < int(n_qblock[i]):
+                assert (ii, jj) == (i, j) and real
+            elif i < 2:           # qblock tail of a live tile
+                assert (ii, jj) == (i, int(n_qblock[i]) - 1) and not real
+            else:                 # padded tile slots
+                assert (ii, jj) == last_real and not real

@@ -373,3 +373,137 @@ def test_save_load_search_equivalence(small_world, tmp_path):
     b = asc_retrieve(loaded, q, k=10, mu=1.0, eta=1.0)
     np.testing.assert_array_equal(np.asarray(a.doc_ids),
                                   np.asarray(b.doc_ids))
+
+
+# ---------------------------------------------------------------------------
+# legacy (pre-stacked-table) format migration
+# ---------------------------------------------------------------------------
+
+def _downgrade_to_v1(path: str, keep_collapsed: bool) -> None:
+    """Rewrite a saved checkpoint into the v1 on-disk layout: per-shard
+    ``seg_max`` (+ optionally ``seg_max_collapsed``) instead of the
+    stacked table, and ``format_version: 1`` in the manifest."""
+    import glob
+    import json
+    for shard in glob.glob(os.path.join(path, "shard_*.npz")):
+        with np.load(shard) as z:
+            arrays = {f: z[f] for f in z.files}
+        stacked = arrays.pop("seg_max_stacked")
+        arrays["seg_max"] = stacked[:, :-1]
+        if keep_collapsed:
+            arrays["seg_max_collapsed"] = stacked[:, -1]
+        np.savez(shard, **arrays)
+    mpath = os.path.join(path, "manifest.json")
+    with open(mpath) as f:
+        manifest = json.load(f)
+    manifest["format_version"] = 1
+    with open(mpath, "w") as f:
+        json.dump(manifest, f)
+
+
+@pytest.mark.parametrize("keep_collapsed", [True, False])
+@pytest.mark.parametrize("n_shards", [1, 3])
+def test_legacy_v1_load_derives_stacked(small_world, tmp_path,
+                                        keep_collapsed, n_shards):
+    """A v1 checkpoint (separate seg_max, with or without the collapsed
+    row) loads with the stacked layout derived bit-exactly."""
+    _, _, base = small_world
+    path = save_index(str(tmp_path / "ix"), base, n_shards=n_shards)
+    _downgrade_to_v1(path, keep_collapsed=keep_collapsed)
+    assert read_manifest(path)["format_version"] == 1
+    loaded, manifest = load_index(path)
+    assert manifest["format_version"] == 1
+    np.testing.assert_array_equal(np.asarray(loaded.seg_max_stacked),
+                                  np.asarray(base.seg_max_stacked))
+    np.testing.assert_array_equal(np.asarray(loaded.seg_max),
+                                  np.asarray(base.seg_max))
+    np.testing.assert_array_equal(np.asarray(loaded.seg_max_collapsed),
+                                  np.asarray(base.seg_max_collapsed))
+
+
+def test_legacy_v1_roundtrips_through_v2(small_world, tmp_path):
+    """v1 load -> v2 save -> load is bit-exact on every array field and
+    upgrades the manifest to the current format version."""
+    _, q, base = small_world
+    old = save_index(str(tmp_path / "old"), base, n_shards=2)
+    _downgrade_to_v1(old, keep_collapsed=False)
+    migrated, _ = load_index(old)
+    new = save_index(str(tmp_path / "new"), migrated, epoch=3)
+    reloaded, manifest = load_index(new)
+    assert manifest["format_version"] == FORMAT_VERSION
+    for f in ("doc_tids", "doc_tw", "doc_mask", "doc_ids", "doc_seg",
+              "seg_max_stacked", "cluster_ndocs"):
+        np.testing.assert_array_equal(np.asarray(getattr(reloaded, f)),
+                                      np.asarray(getattr(base, f)))
+    a = asc_retrieve(base, q, k=10, mu=1.0, eta=1.0)
+    b = asc_retrieve(reloaded, q, k=10, mu=1.0, eta=1.0)
+    np.testing.assert_array_equal(np.asarray(a.doc_ids),
+                                  np.asarray(b.doc_ids))
+
+
+def test_v1_shard_missing_required_field_raises(small_world, tmp_path):
+    """Only the derivable fields may be absent from a shard."""
+    _, _, base = small_world
+    path = save_index(str(tmp_path / "ix"), base)
+    shard = os.path.join(path, "shard_0000.npz")
+    with np.load(shard) as z:
+        arrays = {f: z[f] for f in z.files}
+    del arrays["doc_tw"]
+    np.savez(shard, **arrays)
+    with pytest.raises(KeyError, match="doc_tw"):
+        load_index(path)
+
+
+# ---------------------------------------------------------------------------
+# snapshot GC metrics
+# ---------------------------------------------------------------------------
+
+def test_publisher_reader_counts_and_epoch_lifetime(small_world):
+    _, _, base = small_world
+    pub = SnapshotPublisher(base)
+    s0a = pub.pin()
+    s0b = pub.pin()
+    assert pub.reader_counts() == {0: 2}
+    pub.unpin(s0b)
+    assert pub.reader_counts() == {0: 1}
+
+    pub.publish(base)                      # epoch 1; epoch 0 still pinned
+    s1 = pub.pin()
+    assert pub.reader_counts() == {0: 1, 1: 1}
+    stats = pub.gc_stats()
+    assert stats["collected_epochs"] == 0  # reader keeps epoch 0 alive
+
+    pub.unpin(s0a)
+    del s0a, s0b                           # last refs to the epoch-0 snap
+    import gc
+    gc.collect()
+    stats = pub.gc_stats()
+    assert stats["collected_epochs"] == 1
+    assert stats["max_epoch_lifetime_s"] >= 0.0
+    assert stats["live_readers"] == {1: 1}
+    pub.unpin(s1)
+    assert pub.reader_counts() == {}
+
+
+def test_engine_mirrors_gc_stats_into_serve_stats(small_world):
+    import time as _time
+    _, q, base = small_world
+    writer = IndexWriter(base, seed=9)
+    eng = RetrievalEngine(writer.publisher,
+                          SearchConfig(k=5, mu=1.0, eta=1.0))
+    eng.search(q)
+    assert eng.stats.collected_epochs == 0
+    assert eng.stats.epoch_reader_counts == {}   # no in-flight readers now
+
+    held = writer.publisher.current        # a slow reader pins epoch 0
+    writer.insert([1, 2], [0.5, 0.25])
+    writer.commit()                        # epoch 1 published
+    _time.sleep(0.01)
+    eng.search(q)
+    assert eng.stats.collected_epochs == 0 # held epoch not collected yet
+    del held
+    import gc
+    gc.collect()
+    eng.search(q)
+    assert eng.stats.collected_epochs >= 1
+    assert eng.stats.max_epoch_lifetime_s > 0.0
