@@ -20,9 +20,16 @@ Beyond qps, the batched engine reports the frontier-compaction picture:
     admission, queue compaction, top-k merge) vs pure scoring split,
     from replaying the recorded work queues through the executor alone.
 
+  * ``scored_docs`` vs ``walked_docs_dense`` — doc slots the executor
+    actually walks (doc-run queue compaction, ISSUE 4) vs the
+    ``scored_tiles * d_pad`` whole-tile execution would walk;
+    ``doc_compaction`` is their ratio.
+
 Claims checked: >= 3x queries/sec over the per-query path at batch 64
-(ISSUE 2), and scored_tiles strictly below walked_tiles at batch >= 8
-(ISSUE 3: pruning skips executor work, not just HBM traffic). Smoke mode
+(ISSUE 2), scored_tiles strictly below walked_tiles at batch >= 8
+(ISSUE 3: pruning skips executor work, not just HBM traffic), and
+scored_docs strictly below scored_tiles * d_pad at batch >= 8 (ISSUE 4:
+skipping reaches inside visited tiles). Smoke mode
 (``REPRO_BENCH_SMOKE=1``, the CI setting) shrinks the index, turns the
 Pallas kernels on in interpret mode, and only sanity-checks that the
 numbers exist — it keeps the JSON emission path and the kernel plumbing
@@ -47,13 +54,16 @@ from repro.data.synthetic import CorpusSpec, make_corpus, make_queries
 BATCH_SIZES = (1, 8, 64)
 SPEEDUP_CLAIM = 3.0          # at batch 64, full mode
 BLOCK_Q = 16                 # executor query-block size for the bench
+BLOCK_D = 16                 # executor doc sub-tile request (rounded up
+                             # to a divisor of d_pad by the planner)
 
 
 def _smoke() -> bool:
     return os.environ.get("REPRO_BENCH_SMOKE", "0") != "0"
 
 
-def _bench_pair(index, queries, cfgs: dict, reps: int) -> dict:
+def _bench_pair(index, queries, cfgs: dict, reps: int,
+                d_pad: int) -> dict:
     """Time several engines with *interleaved* reps (one rep of each per
     round), so container load spikes hit every engine equally and the
     speedup ratio stays a paired comparison."""
@@ -82,8 +92,17 @@ def _bench_pair(index, queries, cfgs: dict, reps: int) -> dict:
         if name == "batched":
             # tile counters are engine-specific (TopK docstring): only
             # the batched engine's batch-level block counts go to JSON
-            results[name]["scored_tiles"] = int(out.n_scored_tiles[0])
+            scored_tiles = int(out.n_scored_tiles[0])
+            scored_docs = int(out.n_walked_docs[0])
+            dense_docs = scored_tiles * d_pad
+            results[name]["scored_tiles"] = scored_tiles
             results[name]["walked_tiles"] = int(out.n_walked_tiles[0])
+            # doc-run compaction: doc slots the executor walks vs the
+            # whole-tile execution of the same scored blocks
+            results[name]["scored_docs"] = scored_docs
+            results[name]["walked_docs_dense"] = dense_docs
+            results[name]["doc_compaction"] = round(
+                scored_docs / max(dense_docs, 1), 4)
     # paired speedup: the reps are interleaved per round, so a load spike
     # hits both engines of that round — the median of per-round ratios
     # cancels the common mode, where a ratio of independent medians would
@@ -134,7 +153,10 @@ def run() -> dict:
         spec = CorpusSpec(n_docs=300, vocab=192, n_topics=6, doc_terms=16,
                           t_pad=24, query_terms=6, q_pad=8, seed=0)
         docs, doc_topic = make_corpus(spec)
-        index = build_index(docs, doc_topic % 8, m=8, n_seg=2, seed=0)
+        # d_pad past the cluster sizes so the doc-run queues have a dead
+        # tail to skip even on the tiny smoke geometry
+        index = build_index(docs, doc_topic % 8, m=8, n_seg=2, d_pad=64,
+                            seed=0)
         reps = 3
     else:
         spec = DEFAULT_SPEC
@@ -144,7 +166,7 @@ def run() -> dict:
 
     rows = []
     result = {"smoke": smoke, "speedup_claim": SPEEDUP_CLAIM,
-              "block_q": BLOCK_Q, "points": [],
+              "block_q": BLOCK_Q, "block_d": BLOCK_D, "points": [],
               # absolute ms/qps are NOT comparable across runs of this
               # shared container (load swings several-x and hits both
               # engines; that is why reps are interleaved) — the paired
@@ -152,23 +174,27 @@ def run() -> dict:
               "container_note": ("absolute qps varies with container "
                                  "load; compare speedup and tile/pair "
                                  "counters across runs, not raw ms")}
-    speedup_at, tiles_at = {}, {}
+    speedup_at, tiles_at, docs_at = {}, {}, {}
+    batched_only = ("scored_tiles", "walked_tiles", "scored_docs",
+                    "walked_docs_dense", "doc_compaction")
     for nq in BATCH_SIZES:
         queries, _ = make_queries(spec, nq, doc_topic, seed=7)
         point = {"batch": nq}
         cfgs = {
             engine: SearchConfig(k=10, mu=0.9, eta=1.0, bounds_impl="gemm",
                                  group_size=4, engine=engine,
-                                 use_kernel=smoke, block_q=BLOCK_Q)
+                                 use_kernel=smoke, block_q=BLOCK_Q,
+                                 block_d=BLOCK_D)
             for engine in ("per_query", "batched")
         }
         # the printed table carries the engine-comparable columns; tile
         # counters are batched-only and go to the compaction line + JSON
-        for engine, r in _bench_pair(index, queries, cfgs, reps).items():
+        for engine, r in _bench_pair(index, queries, cfgs, reps,
+                                     index.d_pad).items():
             point[engine] = r
             rows.append({"batch": nq, "engine": engine,
                          **{k: v for k, v in r.items()
-                            if k not in ("scored_tiles", "walked_tiles")}})
+                            if k not in batched_only}})
         point["batched"].update(_split_planner_executor(
             index, queries, cfgs["batched"],
             point["batched"]["batch_ms_p50"], reps))
@@ -176,6 +202,8 @@ def run() -> dict:
         speedup_at[nq] = point["speedup"]
         tiles_at[nq] = (point["batched"]["scored_tiles"],
                         point["batched"]["walked_tiles"])
+        docs_at[nq] = (point["batched"]["scored_docs"],
+                       point["batched"]["walked_docs_dense"])
         result["points"].append(point)
 
     print_table("serve throughput (old per-query vs batched engine)", rows)
@@ -184,6 +212,9 @@ def run() -> dict:
     print("frontier compaction (scored/walked executor blocks): "
           + ", ".join(f"batch {b}: {s}/{w}"
                       for b, (s, w) in tiles_at.items()))
+    print("doc-run compaction (walked/dense doc slots): "
+          + ", ".join(f"batch {b}: {s}/{w}"
+                      for b, (s, w) in docs_at.items()))
 
     if smoke:
         # smoke checks plumbing, not a loaded container's timer noise
@@ -204,6 +235,13 @@ def run() -> dict:
         assert scored < walked, (
             f"batch {nq}: scored {scored} executor blocks, dense walk "
             f"would score {walked} — compaction is not biting")
+        # doc-run compaction (ISSUE 4): the executor must also walk
+        # strictly fewer doc slots than whole-tile execution of those
+        # same scored blocks (scored_docs < n_scored_tiles * d_pad)
+        sdocs, dense = docs_at[nq]
+        assert sdocs < dense, (
+            f"batch {nq}: executor walked {sdocs} doc slots of a "
+            f"{dense}-slot dense walk — doc-run compaction not biting")
     return result
 
 

@@ -126,8 +126,12 @@ def pack_clusters(
     # so the fused bounds GEMM never materializes a per-call copy
     seg_max_stacked = np.concatenate(
         [seg_max, seg_max.max(axis=1, keepdims=True)], axis=1)
+    # hoisted modded segment map: planning (doc admission + doc-run
+    # compaction) indexes segment tables with this directly, instead of
+    # re-modding doc_seg once per wave
+    doc_seg_mod = (doc_seg % n_seg).astype(np.int32)
     return dict(doc_tids=doc_tids, doc_tw=doc_tw, doc_mask=doc_mask,
-                doc_ids=out_ids, doc_seg=doc_seg,
+                doc_ids=out_ids, doc_seg=doc_seg, doc_seg_mod=doc_seg_mod,
                 seg_max_stacked=seg_max_stacked,
                 cluster_ndocs=cluster_ndocs)
 
@@ -186,6 +190,7 @@ def build_index(
         doc_mask=jnp.asarray(packed["doc_mask"]),
         doc_ids=jnp.asarray(packed["doc_ids"]),
         doc_seg=jnp.asarray(packed["doc_seg"]),
+        doc_seg_mod=jnp.asarray(packed["doc_seg_mod"]),
         seg_max_stacked=jnp.asarray(packed["seg_max_stacked"]),
         scale=jnp.float32(scale),
         cluster_ndocs=jnp.asarray(packed["cluster_ndocs"]),

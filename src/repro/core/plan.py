@@ -15,6 +15,19 @@ Pallas executor (kernels/score_cluster_batch) scalar-prefetches:
     over queries, so only these blocks' dense query maps are gathered
     into VMEM — batch 256+ no longer pins the whole ``(n_q, V+1)`` map
     block resident;
+  * *doc-run queues* — the second compaction level, under the tile
+    queue: the per-(query, tile) segment-admission masks are folded (via
+    the hoisted ``doc_seg_mod`` map) into a per-tile *union*
+    doc-admission mask over the whole batch, run-length encoded into
+    ``(start, length)`` pairs of admitted doc runs within each tile
+    (``drun_start`` / ``drun_len`` / ``n_drun``), and projected onto the
+    executor's doc-axis blocking as a compacted *doc sub-tile queue*
+    (``dblock`` / ``n_dblock``): sub-tiles of ``block_d`` consecutive
+    doc slots that intersect at least one run. Sub-tiles no run
+    intersects never enter the executor grid — at low segment-admission
+    rates (and for the dead padding tail of underfull clusters) the
+    executor skips intra-tile work too, the TPU analogue of the paper's
+    document skipping inside visited clusters;
   * queue tails are *clamped* (padded by repeating the last live entry),
     so skipped grid steps re-map to the block already resident in VMEM
     and trigger no new HBM traffic.
@@ -42,8 +55,9 @@ from repro.core.types import _register
     _register,
     data_fields=("cids", "live", "admit", "seg_admit", "tile_cids",
                  "tile_pos", "n_tiles", "qblock", "n_qblock",
-                 "n_blocks"),
-    meta_fields=("block_q",),
+                 "n_blocks", "drun_start", "drun_len", "n_drun",
+                 "dblock", "n_dblock", "dmask_union"),
+    meta_fields=("block_q", "block_d"),
 )
 @dataclasses.dataclass(frozen=True)
 class WavePlan:
@@ -65,7 +79,25 @@ class WavePlan:
     n_qblock:  (G,) int32   live query-block count per compacted tile.
     n_blocks:  () int32     total executor grid blocks with real work
                             (= sum of n_qblock over admitted tiles).
+    drun_start:(G, R) int32 per compacted tile: start doc slot of each
+                            admitted doc run (union over the batch),
+                            compacted, tail clamped like the tile queue.
+    drun_len:  (G, R) int32 matching run lengths (0 past n_drun, so a
+                            clamped tail entry never admits anything).
+    n_drun:    (G,) int32   live run count per compacted tile.
+    dblock:    (G, n_db) int32  per compacted tile: indices of doc
+                            sub-tiles (``block_d`` consecutive slots)
+                            intersecting >= 1 run, compacted, clamped.
+    n_dblock:  (G,) int32   live doc sub-tile count per compacted tile.
+    dmask_union: (G, d_pad) bool  per compacted tile: the union
+                            doc-admission mask the runs encode (any
+                            query admits the doc's segment AND the doc
+                            is live) — the executor's in-kernel residual
+                            mask for docs a visited sub-tile carries
+                            outside every run.
     block_q:   static       queries per block (grid blocking factor).
+    block_d:   static       doc slots per sub-tile (doc-axis blocking;
+                            == d_pad disables intra-tile skipping).
     """
 
     cids: jax.Array
@@ -78,11 +110,50 @@ class WavePlan:
     qblock: jax.Array
     n_qblock: jax.Array
     n_blocks: jax.Array
+    drun_start: jax.Array
+    drun_len: jax.Array
+    n_drun: jax.Array
+    dblock: jax.Array
+    n_dblock: jax.Array
+    dmask_union: jax.Array
     block_q: int
+    block_d: int
 
     @property
     def n_qb(self) -> int:
         return self.qblock.shape[1]
+
+    @property
+    def n_db(self) -> int:
+        return self.dblock.shape[1]
+
+    @property
+    def d_pad(self) -> int:
+        return self.dmask_union.shape[1]
+
+    def walked_docs(self) -> jax.Array:
+        """() int32: doc slots the executor walks for this wave — each
+        (admitted tile, live query block) pair scores that tile's
+        ``n_dblock * block_d`` doc slots. Equals
+        ``n_blocks * d_pad`` iff no sub-tile is skipped."""
+        return ((self.n_qblock * self.n_dblock).sum() * self.block_d
+                ).astype(jnp.int32)
+
+
+def resolve_block_d(d_pad: int, block_d: int | None) -> int:
+    """Executor doc-axis blocking factor: the smallest divisor of
+    ``d_pad`` that is >= the requested ``block_d`` (None => d_pad, i.e.
+    whole-tile execution). Rounding *up* to a divisor keeps sub-tiles
+    from degenerating (a prime d_pad falls back to whole tiles rather
+    than 1-doc blocks)."""
+    if block_d is None or block_d >= d_pad:
+        return d_pad
+    if block_d < 1:
+        raise ValueError(f"block_d must be >= 1, got {block_d}")
+    for cand in range(block_d, d_pad + 1):
+        if d_pad % cand == 0:
+            return cand
+    return d_pad
 
 
 def _compact_front(keep: jax.Array) -> tuple[jax.Array, jax.Array]:
@@ -103,21 +174,96 @@ def _compact_front(keep: jax.Array) -> tuple[jax.Array, jax.Array]:
     return idx, count
 
 
+def segment_histogram(doc_seg_mod: jax.Array, doc_mask: jax.Array,
+                      n_seg: int) -> jax.Array:
+    """(..., n_seg) int32 live-doc count per segment for each tile.
+
+    The per-tile fold the doc-run compaction rests on: a segment's
+    admission decision covers exactly ``hist[..., j]`` docs, so the
+    expected walked-doc fraction is ``sum_admitted hist / sum hist``
+    (docs/perf.md has the arithmetic; tests pin hist against the union
+    mask)."""
+    oh = jax.nn.one_hot(doc_seg_mod, n_seg, dtype=jnp.int32)
+    return (oh * doc_mask[..., None].astype(jnp.int32)).sum(axis=-2)
+
+
+def _union_doc_admission(seg_admit_any: jax.Array, doc_seg_mod: jax.Array,
+                         doc_mask: jax.Array) -> jax.Array:
+    """(G, d_pad) bool: docs admitted by >= 1 query of the batch.
+
+    seg_admit_any: (G, n_seg_eff) union segment admission. n_seg_eff == 1
+    is the collapsed (anytime) table — every live doc of an admitted
+    tile is admitted, no segment gather needed."""
+    if seg_admit_any.shape[-1] == 1:
+        return doc_mask & seg_admit_any
+    return doc_mask & jnp.take_along_axis(seg_admit_any, doc_seg_mod,
+                                          axis=-1)
+
+
+def _doc_runs(admit_docs: jax.Array,
+              n_runs: int) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Run-length encode each row's admitted doc slots.
+
+    admit_docs: (G, d_pad) bool. Returns (start (G, n_runs) int32,
+    length (G, n_runs) int32, count (G,) int32); starts compacted to the
+    front with a clamped tail, lengths 0 past the live count (so clamped
+    tail entries admit nothing). ``n_runs`` must be >= d_pad // 2 + 1
+    (the maximum possible run count)."""
+    G, dp = admit_docs.shape
+    prev = jnp.pad(admit_docs[:, :-1], ((0, 0), (1, 0)))
+    is_start = admit_docs & jnp.logical_not(prev)            # (G, dp)
+    starts_all, n_run = _compact_front(is_start)
+    starts = starts_all[:, :n_runs]
+    rid = jnp.clip(jnp.cumsum(is_start.astype(jnp.int32), axis=1) - 1,
+                   0, n_runs - 1)                            # (G, dp)
+    lens = jnp.zeros((G, n_runs), jnp.int32).at[
+        jnp.arange(G, dtype=jnp.int32)[:, None], rid
+    ].add(admit_docs.astype(jnp.int32))
+    return starts, lens, n_run
+
+
+def runs_to_mask(starts: jax.Array, lens: jax.Array, n_drun: jax.Array,
+                 d_pad: int) -> jax.Array:
+    """Reconstruct the (G, d_pad) union admission mask from run queues —
+    the executor-facing semantics (ref path + property tests)."""
+    slot = jnp.arange(d_pad, dtype=jnp.int32)                # (dp,)
+    live = (jnp.arange(starts.shape[1], dtype=jnp.int32)[None]
+            < n_drun[:, None])                               # (G, R)
+    inside = ((slot[None, None, :] >= starts[:, :, None])
+              & (slot[None, None, :] < (starts + lens)[:, :, None])
+              & live[:, :, None])                            # (G, R, dp)
+    return inside.any(axis=1)
+
+
 def plan_wave(cids: jax.Array, live: jax.Array, admit: jax.Array,
-              seg_admit: jax.Array, block_q: int) -> WavePlan:
+              seg_admit: jax.Array, block_q: int,
+              doc_seg_mod: jax.Array, doc_mask: jax.Array,
+              block_d: int | None = None) -> WavePlan:
     """Compact a wave's admission masks into dense work queues.
 
     cids (G,) int32; live (G,) bool; admit (n_q, G) bool;
-    seg_admit (n_q, G, n_seg) bool. ``block_q`` must divide the padded
-    batch the executor will run (callers pad; n_q here may be unpadded —
-    the trailing partial block simply admits fewer queries).
+    seg_admit (n_q, G, n_seg) bool; doc_seg_mod/doc_mask (G, d_pad) the
+    wave's gathered *pre-modded* segment map (ClusterIndex.doc_seg_mod)
+    and liveness. ``block_q`` must divide the padded batch the executor
+    will run (callers pad; n_q here may be unpadded — the trailing
+    partial block simply admits fewer queries). ``block_d`` is resolved
+    via :func:`resolve_block_d` (None => whole-tile execution).
     """
     n_q, G = admit.shape
+    dp = doc_mask.shape[-1]
+    block_d = resolve_block_d(dp, block_d)
     n_qb = -(-n_q // block_q)
     pad = n_qb * block_q - n_q
     admit_p = jnp.pad(admit, ((0, pad), (0, 0))) if pad else admit
 
-    tile_keep = admit.any(axis=0) & live                     # (G,)
+    # union doc admission over the batch (segment fold via the hoisted
+    # modded map): a tile whose union is empty — every segment pruned for
+    # every admitting query, or only tombstones/padding — is dropped from
+    # the tile queue outright, it could only produce masked output
+    docs_any = _union_doc_admission(seg_admit.any(axis=0), doc_seg_mod,
+                                    doc_mask)                # (G, dp)
+
+    tile_keep = admit.any(axis=0) & live & docs_any.any(axis=-1)   # (G,)
     tile_pos, n_tiles = _compact_front(tile_keep)
     tile_cids = cids[tile_pos]
 
@@ -129,24 +275,48 @@ def plan_wave(cids: jax.Array, live: jax.Array, admit: jax.Array,
     # queue contents
     t = jnp.arange(G, dtype=jnp.int32)
     n_qblock = jnp.where(t < n_tiles, n_qblock, 0)
+
+    # doc-run queues, in compacted-slot order (aligned with tile_cids).
+    # The RLE is O(G * dp) scalar work per wave — marginal next to the
+    # O(n_q * G * dp) doc-admission masking every wave already pays —
+    # and storing the runs on the plan keeps the executor-facing
+    # sub-tile queue, the ref oracle (score_runs_ref) and the property
+    # suite all reading one canonical encoding.
+    docs_c = docs_any[tile_pos]                              # (G, dp)
+    drun_start, drun_len, n_drun = _doc_runs(docs_c, dp // 2 + 1)
+    n_db = dp // block_d
+    sub_any = docs_c.reshape(G, n_db, block_d).any(axis=-1)  # (G, n_db)
+    dblock, n_dblock = _compact_front(sub_any)
+    n_drun = jnp.where(t < n_tiles, n_drun, 0)
+    n_dblock = jnp.where(t < n_tiles, n_dblock, 0)
     return WavePlan(
         cids=cids, live=live, admit=admit, seg_admit=seg_admit,
         tile_cids=tile_cids, tile_pos=tile_pos, n_tiles=n_tiles,
         qblock=qblock, n_qblock=n_qblock,
-        n_blocks=n_qblock.sum().astype(jnp.int32), block_q=block_q)
+        n_blocks=n_qblock.sum().astype(jnp.int32),
+        drun_start=drun_start, drun_len=drun_len, n_drun=n_drun,
+        dblock=dblock, n_dblock=n_dblock, dmask_union=docs_c,
+        block_q=block_q, block_d=block_d)
 
 
-def doc_admission(plan: WavePlan, doc_seg: jax.Array,
+def doc_admission(plan: WavePlan, doc_seg_mod: jax.Array,
                   doc_mask: jax.Array) -> jax.Array:
     """(n_q, G, d_pad) bool: which (query, doc) scores are admitted.
 
-    doc_seg/doc_mask are the wave's (G, d_pad) gathered metadata. This is
-    the single source of truth for masking executor output to NEG —
-    including blocks the compacted grid never visited (whose kernel
-    output is unwritten garbage by design)."""
+    doc_seg_mod/doc_mask are the wave's (G, d_pad) gathered metadata —
+    the *pre-modded* segment map hoisted onto ClusterIndex (planning no
+    longer pays ``doc_seg % n_seg`` per wave). This is the single source
+    of truth for masking executor output to NEG — including blocks the
+    compacted grid never visited (whose kernel output is unwritten
+    garbage by design)."""
     n_seg = plan.seg_admit.shape[-1]
-    seg_of_doc = (doc_seg % n_seg)[None]                    # (1, G, dp)
-    admitted = jnp.take_along_axis(
-        plan.seg_admit, jnp.broadcast_to(
-            seg_of_doc, (plan.admit.shape[0],) + doc_seg.shape), axis=2)
+    n_q = plan.admit.shape[0]
+    if n_seg == 1:
+        # collapsed (anytime) table: one admission bit per (query, tile)
+        admitted = jnp.broadcast_to(plan.seg_admit,
+                                    (n_q,) + doc_seg_mod.shape)
+    else:
+        admitted = jnp.take_along_axis(
+            plan.seg_admit, jnp.broadcast_to(
+                doc_seg_mod[None], (n_q,) + doc_seg_mod.shape), axis=2)
     return admitted & plan.admit[:, :, None] & doc_mask[None]

@@ -66,7 +66,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.bounds import cluster_bounds
-from repro.core.plan import WavePlan, plan_wave
+from repro.core.plan import WavePlan, plan_wave, resolve_block_d
 from repro.core.types import ClusterIndex, QueryBatch, TopK
 from repro.kernels.score_cluster_batch.ref import score_admitted_ref
 
@@ -87,6 +87,9 @@ class SearchConfig:
     engine: str = "batched"            # batched | per_query (reference)
     block_q: int = 64                  # executor grid blocking over queries
     block_v: int | None = None         # executor vocab chunking (None: full)
+    block_d: int | None = 16           # executor doc sub-tile size; rounded
+                                       # up to a divisor of d_pad (None:
+                                       # whole-tile, no doc-run skipping)
 
     def __post_init__(self):
         if not (0.0 < self.mu <= self.eta <= 1.0):
@@ -98,6 +101,8 @@ class SearchConfig:
             raise ValueError(f"unknown engine {self.engine!r}")
         if self.block_q < 1:
             raise ValueError(f"block_q must be >= 1, got {self.block_q}")
+        if self.block_d is not None and self.block_d < 1:
+            raise ValueError(f"block_d must be >= 1, got {self.block_d}")
 
 
 def score_docs_ref(doc_tids: jax.Array, doc_tw: jax.Array, qmap: jax.Array,
@@ -149,6 +154,7 @@ def brute_force_topk(index: ClusterIndex, queries: QueryBatch,
         n_scored_clusters=m_full,
         n_scored_segments=jnp.full((nq,), index.m * index.n_seg, jnp.int32),
         n_scored_tiles=m_full, n_walked_tiles=m_full,
+        n_walked_docs=jnp.full((nq,), index.m * index.d_pad, jnp.int32),
     )
 
 
@@ -228,10 +234,12 @@ def _search_one_query(index: ClusterIndex, qmap: jax.Array,
         seg_admit = seg_admit & admit[:, None]                # (G, n_seg)
 
         scores = _score_docs(index, cids, qmap, cfg)          # (G, d_pad)
-        dseg = index.doc_seg[cids]                            # (G, d_pad)
-        doc_admit = (index.doc_mask[cids]
-                     & jnp.take_along_axis(
-                         seg_admit, dseg % n_seg_eff, axis=1))
+        if n_seg_eff == 1:      # collapsed (anytime) segment table
+            seg_ok = seg_admit[:, :1]                         # (G, 1)
+        else:                   # hoisted pre-modded map: no per-wave mod
+            seg_ok = jnp.take_along_axis(
+                seg_admit, index.doc_seg_mod[cids], axis=1)
+        doc_admit = index.doc_mask[cids] & seg_ok
         scores = jnp.where(doc_admit, scores, NEG)
 
         cand_scores = jnp.concatenate([top_scores, scores.reshape(-1)])
@@ -260,21 +268,24 @@ def _search_one_query(index: ClusterIndex, qmap: jax.Array,
     top_ids = jnp.where(top_scores > NEG, top_ids, -1)
     # tile counters in per-query terms (see TopK docstring): every
     # admitted cluster is a scored tile, every visited cluster position
-    # a walked one (clamped: the last group's padding is not a cluster)
+    # a walked one (clamped: the last group's padding is not a cluster);
+    # whole-tile execution walks exactly d_pad doc slots per scored tile
     return (top_ids, top_scores, n_docs, n_clusters, n_segments,
-            n_clusters, jnp.minimum(g_end * G, jnp.int32(m)))
+            n_clusters, jnp.minimum(g_end * G, jnp.int32(m)),
+            n_clusters * jnp.int32(index.d_pad))
 
 
 def _plan_admission(cfg: SearchConfig, *, cids, glive, done, theta,
                     max_s_w, avg_s_w, key_w, seg_b_w, rank_w,
-                    n_clusters, n_pruned,
-                    budget) -> tuple[WavePlan, jax.Array]:
+                    n_clusters, n_pruned, budget, dseg_mod_w, dmask_w,
+                    block_d) -> tuple[WavePlan, jax.Array]:
     """Planner half of one wave: (mu, eta)/segment admission + budget
-    rank-horizon, compacted into the wave's work queues.
+    rank-horizon, compacted into the wave's work queues (tile,
+    query-block, and doc-run/sub-tile levels).
 
     The ``_w`` arrays are already sliced to the wave: max_s_w/avg_s_w/
-    key_w/rank_w (n_q, G), seg_b_w (n_q, G, n_seg). Returns
-    (plan, n_newly_pruned)."""
+    key_w/rank_w (n_q, G), seg_b_w (n_q, G, n_seg), dseg_mod_w/dmask_w
+    (G, d_pad). Returns (plan, n_newly_pruned)."""
     mu = jnp.float32(cfg.mu)
     eta = jnp.float32(cfg.eta)
 
@@ -297,31 +308,39 @@ def _plan_admission(cfg: SearchConfig, *, cids, glive, done, theta,
     else:
         seg_admit = jnp.ones_like(seg_b_w, dtype=bool)
     seg_admit = seg_admit & admit[:, :, None]
-    plan = plan_wave(cids, glive, admit, seg_admit, cfg.block_q)
+    plan = plan_wave(cids, glive, admit, seg_admit, cfg.block_q,
+                     dseg_mod_w, dmask_w, block_d=block_d)
     return plan, newly_pruned
 
 
 def _execute_wave(index: ClusterIndex, plan: WavePlan, qmaps: jax.Array,
-                  cfg: SearchConfig) -> jax.Array:
+                  cfg: SearchConfig, dseg_mod: jax.Array | None = None,
+                  dmask: jax.Array | None = None) -> jax.Array:
     """Executor half of one wave: (n_q, G, d_pad) admission-masked scores.
 
     Kernel path: the Pallas executor scalar-prefetches the plan's queues
-    and DMAs admitted tiles straight out of the full index arrays — no
-    XLA gather, no fetch for tiles/query-blocks outside the queues.
+    (tile, query-block, doc sub-tile) and DMAs admitted doc sub-tiles
+    straight out of the full index arrays — no XLA gather, no fetch for
+    tiles/query-blocks/sub-tiles outside the queues.
     jnp path: the dense oracle, wrapped in a cond so a wave with an empty
-    queue skips its gather + einsum entirely."""
-    dseg = index.doc_seg[plan.cids]                         # (G, dp)
-    dmask = index.doc_mask[plan.cids]
+    queue skips its gather + einsum entirely. ``dseg_mod``/``dmask``
+    default to gathering from ``plan.cids`` — inside the search loop the
+    identical gathers already exist in the planner's trace and XLA CSE
+    dedupes them; replay callers (execute_plans) rely on the defaults."""
+    if dseg_mod is None:
+        dseg_mod = index.doc_seg_mod[plan.cids]             # (G, dp)
+    if dmask is None:
+        dmask = index.doc_mask[plan.cids]
     if cfg.use_kernel:
         from repro.kernels.score_cluster_batch import ops as scb_ops
         return scb_ops.score_admitted(
-            index.doc_tids, index.doc_tw, dseg, dmask, qmaps, plan,
+            index.doc_tids, index.doc_tw, dseg_mod, dmask, qmaps, plan,
             index.scale, block_v=cfg.block_v)
 
     def dense(_):
         tids = index.doc_tids[plan.cids]                    # (G, dp, tp)
         tw = index.doc_tw[plan.cids]
-        return score_admitted_ref(tids, tw, dseg, dmask, qmaps, plan,
+        return score_admitted_ref(tids, tw, dseg_mod, dmask, qmaps, plan,
                                   index.scale)
 
     def empty(_):
@@ -353,6 +372,7 @@ def _search_batch(index: ClusterIndex, qmaps: jax.Array, seg_b: jax.Array,
     n_groups = -(-m // G)
     m_padded = n_groups * G
     n_qb = -(-n_q // cfg.block_q)
+    block_d = resolve_block_d(dp, cfg.block_d)
 
     budget = _resolve_budget(cfg, m, budget)
     mu = jnp.float32(cfg.mu)
@@ -398,7 +418,9 @@ def _search_batch(index: ClusterIndex, qmaps: jax.Array, seg_b: jax.Array,
             max_s_w=max_s[:, cids], avg_s_w=avg_s[:, cids],
             key_w=order_key[:, cids], seg_b_w=seg_b[:, cids, :],
             rank_w=rank[:, cids], n_clusters=n_clusters,
-            n_pruned=n_pruned, budget=budget)
+            n_pruned=n_pruned, budget=budget,
+            dseg_mod_w=index.doc_seg_mod[cids],
+            dmask_w=index.doc_mask[cids], block_d=block_d)
 
     first_wave = (shared_p[:G], jnp.zeros((G,), bool),
                   jnp.zeros((n_q,), bool), jnp.full((n_q,), NEG),
@@ -423,7 +445,7 @@ def _search_batch(index: ClusterIndex, qmaps: jax.Array, seg_b: jax.Array,
     def body(state):
         (g, done, top_scores, top_ids,
          n_docs, n_clusters, n_segments, n_pruned,
-         n_tiles_exec, n_tiles_walk, rec) = state
+         n_tiles_exec, n_tiles_walk, n_docs_walk, rec) = state
         theta = top_scores[:, k - 1]                          # (n_q,)
         pos = g * G
         cids = jax.lax.dynamic_slice(shared_p, (pos,), (G,))  # (G,)
@@ -466,6 +488,7 @@ def _search_batch(index: ClusterIndex, qmaps: jax.Array, seg_b: jax.Array,
         n_segments += seg_admit.sum(axis=(1, 2)).astype(jnp.int32)
         n_tiles_exec += plan.n_blocks
         n_tiles_walk += jnp.int32(G * n_qb)
+        n_docs_walk += plan.walked_docs()
 
         if record_plans:
             rec = (jax.tree_util.tree_map(
@@ -481,22 +504,23 @@ def _search_batch(index: ClusterIndex, qmaps: jax.Array, seg_b: jax.Array,
                 | (n_clusters >= budget))
         return (g + 1, done, top_scores, top_ids,
                 n_docs, n_clusters, n_segments, n_pruned,
-                n_tiles_exec, n_tiles_walk, rec)
+                n_tiles_exec, n_tiles_walk, n_docs_walk, rec)
 
     init = (jnp.int32(0), jnp.zeros((n_q,), bool),
             jnp.full((n_q, k), NEG), jnp.full((n_q, k), -1, jnp.int32),
             jnp.zeros((n_q,), jnp.int32), jnp.zeros((n_q,), jnp.int32),
             jnp.zeros((n_q,), jnp.int32), jnp.zeros((n_q,), jnp.int32),
-            jnp.int32(0), jnp.int32(0), rec_init)
+            jnp.int32(0), jnp.int32(0), jnp.int32(0), rec_init)
     (_, _, top_scores, top_ids, n_docs, n_clusters, n_segments, _,
-     n_tiles_exec, n_tiles_walk, rec) = (
+     n_tiles_exec, n_tiles_walk, n_docs_walk, rec) = (
         jax.lax.while_loop(cond, body, init))
     top_ids = jnp.where(top_scores > NEG, top_ids, -1)
-    # batch-level tile counters, replicated per query (see TopK docstring)
+    # batch-level tile/doc counters, replicated per query (TopK docstring)
     tiles_exec = jnp.full((n_q,), n_tiles_exec, jnp.int32)
     tiles_walk = jnp.full((n_q,), n_tiles_walk, jnp.int32)
+    docs_walk = jnp.full((n_q,), n_docs_walk, jnp.int32)
     out = (top_ids, top_scores, n_docs, n_clusters, n_segments,
-           tiles_exec, tiles_walk)
+           tiles_exec, tiles_walk, docs_walk)
     return out + (rec,) if record_plans else out
 
 
@@ -514,8 +538,9 @@ def _retrieve_arrays(index: ClusterIndex, queries: QueryBatch,
                      budget: jax.Array | None = None,
                      record_plans: bool = False) -> tuple:
     """(ids, scores, n_docs, n_clusters, n_segments, n_tiles_scored,
-    n_tiles_walked), each leading n_q — plus the recorded wave plans as
-    a trailing element when ``record_plans`` (batched engine only).
+    n_tiles_walked, n_docs_walked), each leading n_q — plus the recorded
+    wave plans as a trailing element when ``record_plans`` (batched
+    engine only).
 
     Shared by :func:`retrieve`, :func:`retrieve_with_plans` and the
     distributed shard-local search. The dense query maps are
@@ -538,10 +563,11 @@ def _retrieve_arrays(index: ClusterIndex, queries: QueryBatch,
 
 def _topk_of(arrays: tuple) -> TopK:
     (ids, scores, n_docs, n_clusters, n_segments,
-     n_tiles, n_walked) = arrays
+     n_tiles, n_walked, n_walked_docs) = arrays
     return TopK(doc_ids=ids, scores=scores, n_scored_docs=n_docs,
                 n_scored_clusters=n_clusters, n_scored_segments=n_segments,
-                n_scored_tiles=n_tiles, n_walked_tiles=n_walked)
+                n_scored_tiles=n_tiles, n_walked_tiles=n_walked,
+                n_walked_docs=n_walked_docs)
 
 
 @partial(jax.jit, static_argnames=("cfg",))

@@ -121,6 +121,7 @@ class QueryBatch:
         "doc_mask",
         "doc_ids",
         "doc_seg",
+        "doc_seg_mod",
         "seg_max_stacked",
         "scale",
         "cluster_ndocs",
@@ -140,6 +141,13 @@ class ClusterIndex:
     doc_mask: (m, d_pad) bool           per-document validity.
     doc_ids:  (m, d_pad) int32          global document ids (-1 padding).
     doc_seg:  (m, d_pad) int32          segment id of each doc in [0, n_seg).
+    doc_seg_mod: (m, d_pad) int32       the *hoisted modded segment map*:
+              ``doc_seg % n_seg``, maintained at pack/insert/compaction
+              time so per-wave planning (core/plan.py doc admission and
+              doc-run compaction) indexes segment-admission tables
+              directly instead of re-modding ``doc_seg`` every wave.
+              Invariant: always in [0, n_seg); lifecycle write paths keep
+              it consistent with ``doc_seg`` (tests/test_lifecycle.py).
     seg_max_stacked: (m, n_seg + 1, V) uint8 — the *stored stacked* bound
               table: rows [0, n_seg) are the segmented maximum term
               weights, row n_seg is their max over segments (the BoundSum
@@ -160,6 +168,7 @@ class ClusterIndex:
     doc_mask: jax.Array
     doc_ids: jax.Array
     doc_seg: jax.Array
+    doc_seg_mod: jax.Array
     seg_max_stacked: jax.Array
     scale: jax.Array
     cluster_ndocs: jax.Array
@@ -207,14 +216,16 @@ class ClusterIndex:
         return sum(
             x.size * x.dtype.itemsize
             for x in (self.doc_tids, self.doc_tw, self.doc_mask,
-                      self.doc_ids, self.doc_seg, self.seg_max_stacked)
+                      self.doc_ids, self.doc_seg, self.doc_seg_mod,
+                      self.seg_max_stacked)
         )
 
 
 @partial(
     _register,
     data_fields=("doc_ids", "scores", "n_scored_docs", "n_scored_clusters",
-                 "n_scored_segments", "n_scored_tiles", "n_walked_tiles"),
+                 "n_scored_segments", "n_scored_tiles", "n_walked_tiles",
+                 "n_walked_docs"),
     meta_fields=(),
 )
 @dataclasses.dataclass(frozen=True)
@@ -234,6 +245,15 @@ class TopK:
     reference engine counts that query's own admitted/visited cluster
     tiles. Their ratio is the frontier-compaction ratio *within* one
     engine — never compare the raw counts across engines.
+    n_walked_docs: (n_q,) int32 — document slots the executor actually
+    walks (doc-run queue compaction, core/plan.py): for the batched
+    engine the batch-level sum over admitted tiles of
+    ``n_qblock * n_dblock * block_d``, replicated per query; for the
+    per-query reference engine (whole-tile execution)
+    ``n_scored_tiles * d_pad`` exactly. Invariants (pinned by
+    tests/test_rank_safety_property.py): ``n_walked_docs <=
+    n_scored_tiles * d_pad`` with equality iff no doc run is skipped,
+    and every admitted doc (``n_scored_docs``) lies inside a walked run.
     """
 
     doc_ids: jax.Array
@@ -243,6 +263,7 @@ class TopK:
     n_scored_segments: jax.Array
     n_scored_tiles: jax.Array
     n_walked_tiles: jax.Array
+    n_walked_docs: jax.Array
 
 
 def tree_bytes(tree: Any) -> int:

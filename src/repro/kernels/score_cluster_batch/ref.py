@@ -1,12 +1,26 @@
-"""Pure-jnp oracle for the work-queue executor.
+"""Pure-jnp oracles for the work-queue executor.
 
 Same contract as ``ops.score_admitted``: given one visitation wave's
 gathered tiles and its :class:`~repro.core.plan.WavePlan`, produce
 ``(n_q, G, d_pad)`` RankScores with every non-admitted (query, doc) pair
 — tombstones, docs in non-admitted segments, (query, cluster) pairs the
-planner rejected — at exactly ``NEG``. The oracle scores densely and
-masks; the Pallas kernel only ever touches the compacted queues and is
-equivalence-tested against this.
+planner rejected — at exactly ``NEG``.
+
+Two oracles at the two compaction levels:
+
+  * :func:`score_admitted_ref` scores densely and masks with the
+    planner's per-query doc admission — the semantic ground truth;
+  * :func:`score_runs_ref` mimics the executor's *visitation*: it only
+    scores doc slots inside walked sub-tiles (the plan's compacted
+    ``dblock`` queue, i.e. sub-tiles intersecting an admitted doc run)
+    and treats everything the grid never visits as NEG. Because every
+    admitted doc lies inside some run (the planner folds the union
+    admission into the runs), both oracles are equal — the equality *is*
+    the rank-safety argument for doc-level queue compaction, and the
+    property suite pins it.
+
+The Pallas kernel only ever touches the compacted queues and is
+equivalence-tested against both.
 """
 
 from __future__ import annotations
@@ -14,22 +28,65 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.plan import WavePlan, doc_admission
+from repro.core.plan import WavePlan, doc_admission, runs_to_mask
 
 NEG = jnp.float32(jnp.finfo(jnp.float32).min)
 
 
-def score_admitted_ref(doc_tids: jax.Array, doc_tw: jax.Array,
-                       doc_seg: jax.Array, doc_mask: jax.Array,
-                       qmaps: jax.Array, plan: WavePlan,
-                       scale: jax.Array) -> jax.Array:
-    """doc_tids/doc_tw: (G, dp, tp) gathered wave tiles; doc_seg/doc_mask:
-    (G, dp); qmaps: (n_q, V + 1). Returns (n_q, G, dp) float32 scores,
-    NEG where not admitted."""
+def _dense_scores(doc_tids: jax.Array, doc_tw: jax.Array,
+                  qmaps: jax.Array, scale: jax.Array) -> jax.Array:
     # gather from the transposed map so each term id pulls one contiguous
     # row of all n_q query weights (~2x faster than the strided
     # (n_q, ...) gather on CPU; XLA folds the transpose into the gather)
     gathered = qmaps.T[doc_tids]                            # (G, dp, tp, n_q)
-    scores = jnp.einsum("gdtq,gdt->qgd", gathered,
-                        doc_tw.astype(jnp.float32)) * scale
-    return jnp.where(doc_admission(plan, doc_seg, doc_mask), scores, NEG)
+    return jnp.einsum("gdtq,gdt->qgd", gathered,
+                      doc_tw.astype(jnp.float32)) * scale
+
+
+def walked_doc_slots(plan: WavePlan) -> jax.Array:
+    """(G, d_pad) bool: doc slots inside a *walked* sub-tile of each
+    compacted tile slot — the executor's doc-axis visitation set."""
+    G, n_db = plan.dblock.shape
+    sub = (jnp.arange(n_db, dtype=jnp.int32)[None]
+           < plan.n_dblock[:, None])                        # (G, n_db)
+    visited = jnp.zeros((G, n_db), bool).at[
+        jnp.arange(G, dtype=jnp.int32)[:, None], plan.dblock
+    ].max(sub)
+    return jnp.repeat(visited, plan.block_d, axis=1)
+
+
+def score_admitted_ref(doc_tids: jax.Array, doc_tw: jax.Array,
+                       doc_seg_mod: jax.Array, doc_mask: jax.Array,
+                       qmaps: jax.Array, plan: WavePlan,
+                       scale: jax.Array) -> jax.Array:
+    """doc_tids/doc_tw: (G, dp, tp) gathered wave tiles; doc_seg_mod/
+    doc_mask: (G, dp) pre-modded segment map + liveness; qmaps:
+    (n_q, V + 1). Returns (n_q, G, dp) float32 scores, NEG where not
+    admitted."""
+    scores = _dense_scores(doc_tids, doc_tw, qmaps, scale)
+    return jnp.where(doc_admission(plan, doc_seg_mod, doc_mask), scores,
+                     NEG)
+
+
+def score_runs_ref(doc_tids: jax.Array, doc_tw: jax.Array,
+                   doc_seg_mod: jax.Array, doc_mask: jax.Array,
+                   qmaps: jax.Array, plan: WavePlan,
+                   scale: jax.Array) -> jax.Array:
+    """Run-queue-faithful oracle: scores only doc slots the executor
+    walks (sub-tiles intersecting an admitted run, looked up in
+    compacted-slot order via ``tile_pos``), masks residual in-sub-tile
+    docs with the union run mask, then applies per-query admission.
+    Output is identical to :func:`score_admitted_ref` — admitted docs
+    are never outside a run."""
+    G, dp = doc_mask.shape
+    in_run = runs_to_mask(plan.drun_start, plan.drun_len, plan.n_drun, dp)
+    walked = walked_doc_slots(plan) & in_run                # (G, dp) slots
+    # scatter compacted-slot masks back to wave positions (slots past
+    # n_tiles are clamped repeats — max() keeps the real slot's mask)
+    t = jnp.arange(G, dtype=jnp.int32)
+    by_pos = jnp.zeros((G, dp), bool).at[plan.tile_pos].max(
+        walked & (t < plan.n_tiles)[:, None])
+    scores = _dense_scores(doc_tids, doc_tw, qmaps, scale)
+    scores = jnp.where(by_pos[None], scores, NEG)
+    return jnp.where(doc_admission(plan, doc_seg_mod, doc_mask), scores,
+                     NEG)

@@ -5,8 +5,8 @@ The planner (core/plan.py) compacts each visitation wave's admitted
 executor. It scalar-prefetches the queues and uses them in its BlockSpec
 index maps, so the grid walks only real work:
 
-  * grid = (G, n_qb[, n_vb]): compacted tile slots x query blocks
-    (x vocab chunks for WordPiece-scale maps);
+  * grid = (G, n_qb, n_db[, n_vb]): compacted tile slots x query blocks
+    x doc sub-tiles (x vocab chunks for WordPiece-scale maps);
   * the cluster tile for slot ``i`` is DMA'd straight out of the *full*
     ``(m, d_pad, t_pad)`` index arrays at row ``tile_cids[i]`` — no XLA
     gather ever materializes the wave's tiles, and a tile admitted by no
@@ -17,12 +17,20 @@ index maps, so the grid walks only real work:
     containing an admitting query are fetched, and the resident VMEM
     footprint is ``BQ * V_chunk`` floats instead of the whole
     ``(n_q, V + 1)`` map, which is what lets batch 256+ fit VMEM;
+  * the tile's doc axis is blocked into ``block_d``-slot sub-tiles and
+    step ``(i, j, d)`` loads sub-tile ``dblock[i, d]`` — the planner's
+    doc-run queues projected onto the blocking, so a sub-tile no
+    admitted doc run intersects never enters the grid either: the
+    paper's in-cluster document skipping, applied to both the DMA and
+    the multiply-adds. Residual docs a visited sub-tile carries outside
+    every run are masked to NEG *in-kernel* via the planner's union
+    admission mask, so written output is exact for unadmitted docs too;
   * steps past the end of a queue are re-mapped (in the index maps, via
     the prefetched counts) to the block of the *last real step*, so they
     issue no DMA, compute nothing (``pl.when``), and their write-back is
     an idempotent rewrite of data the last real step already produced.
 
-Output blocks the queue never visits are uninitialized garbage *by
+Output blocks the queues never visit are uninitialized garbage *by
 design*: the op wrapper (ops.py) masks everything non-admitted to NEG
 with the planner's doc-admission mask, which is the single source of
 truth downstream (top-k merge, work counters).
@@ -52,38 +60,43 @@ _CompilerParams = pallas_tpu_compiler_params()
 NEG = float(jnp.finfo(jnp.float32).min)
 
 
-def _queue_step(i, j, n_tiles_ref, n_qblock_ref):
-    """Clamp a (tile slot, qblock slot) grid step onto the work queue.
+def _queue_step(i, j, d, n_tiles_ref, n_qblock_ref, n_dblock_ref):
+    """Clamp a (tile, qblock, doc sub-tile) grid step onto the queues.
 
-    Real steps map to themselves; steps past a queue's end map to the
-    last real step (same blocks already resident in VMEM => no DMA, and
-    the write-back rewrites what that step already wrote). Also returns
-    whether the step is real, so the vocab-chunk index can be clamped
-    the same way."""
+    Real steps map to themselves; steps past any queue's end map to the
+    *last real step* of the innermost live queue (same blocks already
+    resident in VMEM => no DMA, and the write-back rewrites what that
+    step already wrote). Padded steps must pin the last real step's
+    blocks outright — min() clamping per axis would restart inner queues
+    at slot 0 and revisit out blocks non-consecutively, which compiled
+    write-back turns into stale-VMEM clobbers of already-written scores
+    (interpret mode re-reads out blocks per step and cannot see this).
+    Also returns whether the step is real, so the vocab-chunk index can
+    be clamped the same way."""
     tile_live = i < n_tiles_ref[0]
     ii = jnp.where(tile_live, i, jnp.maximum(n_tiles_ref[0] - 1, 0))
-    last = jnp.maximum(n_qblock_ref[ii] - 1, 0)
-    # padded *tile* steps must pin the last real step's qblock outright —
-    # min(j, last) would restart at qblock 0 and revisit out blocks
-    # non-consecutively, which compiled write-back turns into stale-VMEM
-    # clobbers of already-written scores (interpret mode re-reads out
-    # blocks per step and cannot see this)
-    jj = jnp.where(tile_live, jnp.minimum(j, last), last)
-    real = tile_live & (j < n_qblock_ref[ii])
-    return ii, jj, real
+    lastq = jnp.maximum(n_qblock_ref[ii] - 1, 0)
+    qb_live = tile_live & (j < n_qblock_ref[ii])
+    jj = jnp.where(qb_live, j, lastq)
+    lastd = jnp.maximum(n_dblock_ref[ii] - 1, 0)
+    real = qb_live & (d < n_dblock_ref[ii])
+    dd = jnp.where(real, d, lastd)
+    return ii, jj, dd, real
 
 
 def _kernel(tile_cids_ref, tile_pos_ref, n_tiles_ref, qblock_ref,
-            n_qblock_ref, tids_ref, tw_ref, qmaps_ref, out_ref, *,
-            n_vb: int, block_v: int):
+            n_qblock_ref, dblock_ref, n_dblock_ref, tids_ref, tw_ref,
+            qmaps_ref, dmask_ref, out_ref, *, n_vb: int, block_v: int):
     i = pl.program_id(0)
     j = pl.program_id(1)
-    k = pl.program_id(2)
+    d = pl.program_id(2)
+    k = pl.program_id(3)
 
-    @pl.when((i < n_tiles_ref[0]) & (j < n_qblock_ref[i]))
+    @pl.when((i < n_tiles_ref[0]) & (j < n_qblock_ref[i])
+             & (d < n_dblock_ref[i]))
     def _score():
-        tids = tids_ref[...][0].astype(jnp.int32)        # (dp, tp)
-        tw = tw_ref[...][0].astype(jnp.float32)          # (dp, tp)
+        tids = tids_ref[...][0].astype(jnp.int32)        # (BD, tp)
+        tw = tw_ref[...][0].astype(jnp.float32)          # (BD, tp)
         qmaps = qmaps_ref[...]                           # (BQ, BV)
         if n_vb == 1:
             qv = jnp.take(qmaps, tids.reshape(-1), axis=1,
@@ -97,23 +110,30 @@ def _kernel(tile_cids_ref, tile_pos_ref, n_tiles_ref, qblock_ref,
             qv = qv.reshape((qmaps.shape[0],) + tids.shape)
             in_chunk = (tids >= v0) & (tids < v0 + block_v)
             qv = jnp.where(in_chunk[None], qv, 0.0)
-        partial_scores = jnp.sum(qv * tw[None], axis=-1)  # (BQ, dp)
+        partial_scores = jnp.sum(qv * tw[None], axis=-1)  # (BQ, BD)
+        # residual docs the sub-tile carries outside every admitted run:
+        # exactly NEG in the written output (unvisited blocks stay
+        # garbage; the op wrapper's doc-admission mask owns those)
+        in_run = dmask_ref[...][0] != 0                   # (BD,)
 
         if n_vb == 1:
-            out_ref[...] = partial_scores[:, None, :]
+            out_ref[...] = jnp.where(in_run[None], partial_scores,
+                                     NEG)[:, None, :]
         else:
             @pl.when(k == 0)
             def _init():
-                out_ref[...] = partial_scores[:, None, :]
+                out_ref[...] = jnp.where(in_run[None], partial_scores,
+                                         NEG)[:, None, :]
 
             @pl.when(k > 0)
             def _accum():
-                out_ref[...] += partial_scores[:, None, :]
+                out_ref[...] += jnp.where(in_run[None], partial_scores,
+                                          0.0)[:, None, :]
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("block_q", "block_v", "interpret"))
+    static_argnames=("block_q", "block_d", "block_v", "interpret"))
 def score_queue_kernel(
     doc_tids: jax.Array,        # (m, dp, tp) integer in [0, V] (V = zero slot)
     doc_tw: jax.Array,          # (m, dp, tp) uint8
@@ -123,24 +143,34 @@ def score_queue_kernel(
     n_tiles: jax.Array,         # () int32
     qblock: jax.Array,          # (G, n_qb) int32 compacted query-block queue
     n_qblock: jax.Array,        # (G,) int32
+    dblock: jax.Array,          # (G, n_db) int32 compacted doc sub-tile queue
+    n_dblock: jax.Array,        # (G,) int32
+    dmask_union: jax.Array,     # (G, dp) uint8 union doc admission per slot
     *,
     block_q: int,
+    block_d: int,
     block_v: int | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
     """(n_q_pad, G, dp) raw scores laid out by *wave position* (the
     ``tile_pos`` entry of each queue slot), without scale or admission
-    masking; wave positions the queue never visits hold unwritten
-    garbage — callers must mask with the planner's doc-admission
-    (ops.score_admitted does)."""
+    masking; wave positions / doc sub-tiles the queues never visit hold
+    unwritten garbage — callers must mask with the planner's
+    doc-admission (ops.score_admitted does). Docs a *visited* sub-tile
+    carries outside every admitted run come out exactly NEG (the
+    in-kernel residual mask)."""
     if interpret is None:       # backend auto-detect + env override
         interpret = pallas_interpret_default()
     m, dp, tp = doc_tids.shape
     n_q_pad, v_cols = qmaps.shape
     G, n_qb = qblock.shape
+    n_db = dblock.shape[1]
     if n_q_pad % block_q:
         raise ValueError(f"qmaps rows {n_q_pad} not a multiple of "
                          f"block_q {block_q}")
+    if dp % block_d or n_db != dp // block_d:
+        raise ValueError(f"doc queue width {n_db} does not block d_pad "
+                         f"{dp} by block_d {block_d}")
     if block_v is None:
         block_v = v_cols
     v_pad = -v_cols % block_v
@@ -148,41 +178,53 @@ def score_queue_kernel(
         qmaps = jnp.pad(qmaps, ((0, 0), (0, v_pad)))
     n_vb = qmaps.shape[1] // block_v
 
-    def tile_idx(i, j, k, cids, pos, nt, qb, nqb):
-        ii, _, _ = _queue_step(i, j, nt, nqb)
-        return (cids[ii], 0, 0)
+    def tile_idx(i, j, d, k, cids, pos, nt, qb, nqb, db, ndb):
+        ii, _, dd, _ = _queue_step(i, j, d, nt, nqb, ndb)
+        return (cids[ii], db[ii, dd], 0)
 
-    def qmap_idx(i, j, k, cids, pos, nt, qb, nqb):
-        ii, jj, real = _queue_step(i, j, nt, nqb)
+    def qmap_idx(i, j, d, k, cids, pos, nt, qb, nqb, db, ndb):
+        ii, jj, _, real = _queue_step(i, j, d, nt, nqb, ndb)
         # padded steps pin the *last* chunk too — the one the previous
         # real step left resident — so they issue no qmap DMA either
         kk = jnp.where(real, k, n_vb - 1)
         return (qb[ii, jj], kk)
 
-    def out_idx(i, j, k, cids, pos, nt, qb, nqb):
-        ii, jj, _ = _queue_step(i, j, nt, nqb)
-        return (qb[ii, jj], pos[ii], 0)
+    def dmask_idx(i, j, d, k, cids, pos, nt, qb, nqb, db, ndb):
+        ii, _, dd, _ = _queue_step(i, j, d, nt, nqb, ndb)
+        return (ii, db[ii, dd])
+
+    def out_idx(i, j, d, k, cids, pos, nt, qb, nqb, db, ndb):
+        ii, jj, dd, _ = _queue_step(i, j, d, nt, nqb, ndb)
+        return (qb[ii, jj], pos[ii], db[ii, dd])
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=5,
-        grid=(G, n_qb, n_vb),
+        num_scalar_prefetch=7,
+        # doc sub-tiles inside query blocks: the query-map block stays
+        # resident across a tile's whole doc queue (it is the dominant
+        # traffic at WordPiece scale); the tile's sub-blocks re-stream
+        # per query block but shrink with every skipped run
+        grid=(G, n_qb, n_db, n_vb),
         in_specs=[
-            # one cluster tile straight out of the full index arrays
-            pl.BlockSpec((1, dp, tp), tile_idx),
-            pl.BlockSpec((1, dp, tp), tile_idx),
+            # one doc sub-tile straight out of the full index arrays
+            pl.BlockSpec((1, block_d, tp), tile_idx),
+            pl.BlockSpec((1, block_d, tp), tile_idx),
             # only query blocks with >= 1 admitting query are fetched
             pl.BlockSpec((block_q, block_v), qmap_idx),
+            # union doc-admission for the in-kernel residual mask
+            pl.BlockSpec((1, block_d), dmask_idx),
         ],
-        out_specs=pl.BlockSpec((block_q, 1, dp), out_idx),
+        out_specs=pl.BlockSpec((block_q, 1, block_d), out_idx),
     )
     out = pl.pallas_call(
         functools.partial(_kernel, n_vb=n_vb, block_v=block_v),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((n_q_pad, G, dp), jnp.float32),
         compiler_params=_CompilerParams(
-            dimension_semantics=("arbitrary", "arbitrary", "arbitrary")),
+            dimension_semantics=("arbitrary",) * 4),
         interpret=interpret,
     )(tile_cids.astype(jnp.int32), tile_pos.astype(jnp.int32),
       n_tiles.reshape(1).astype(jnp.int32), qblock.astype(jnp.int32),
-      n_qblock.astype(jnp.int32), doc_tids, doc_tw, qmaps)
+      n_qblock.astype(jnp.int32), dblock.astype(jnp.int32),
+      n_dblock.astype(jnp.int32), doc_tids, doc_tw, qmaps,
+      dmask_union.astype(jnp.uint8))
     return out

@@ -457,6 +457,7 @@ def _build_retrieval(arch: str, shape: str, mesh, multi_pod: bool,
         doc_tw=_sds((m, dp, tp), jnp.uint8),
         doc_mask=_sds((m, dp), BOOL), doc_ids=_sds((m, dp), I32),
         doc_seg=_sds((m, dp), I32),
+        doc_seg_mod=_sds((m, dp), I32),
         seg_max_stacked=_sds((m, n_seg + 1, V), jnp.uint8),
         scale=_sds((), F32), cluster_ndocs=_sds((m,), I32),
         vocab=V, n_seg=n_seg)

@@ -62,6 +62,9 @@ class MutableIndex:
         self.doc_mask = np.asarray(index.doc_mask).copy()
         self.doc_ids = np.asarray(index.doc_ids).copy()
         self.doc_seg = np.asarray(index.doc_seg).copy()
+        # hoisted pre-modded segment map: kept consistent with doc_seg by
+        # every write (insert/delete/compaction), so planning never mods
+        self.doc_seg_mod = np.asarray(index.doc_seg_mod).copy()
         # one stacked mirror; seg_max / seg_max_collapsed are numpy *views*
         # into it, so max-folding either keeps the stored stacked layout
         # (what snapshots publish) coherent for free
@@ -177,6 +180,7 @@ class MutableIndex:
         self.doc_mask[c, slot] = True
         self.doc_ids[c, slot] = doc_id
         self.doc_seg[c, slot] = j
+        self.doc_seg_mod[c, slot] = j % self.n_seg
         np.maximum.at(self.seg_max[c, j], tids, q)   # monotone => exact
         np.maximum.at(self.seg_max_collapsed[c], tids, q)
         self.cluster_ndocs[c] += 1
@@ -197,6 +201,7 @@ class MutableIndex:
         self.doc_tids[c, slot, :] = self.vocab
         self.doc_tw[c, slot, :] = 0
         self.doc_seg[c, slot] = 0
+        self.doc_seg_mod[c, slot] = 0
         self.cluster_ndocs[c] -= 1
         self.n_deletes += 1
         return True
@@ -270,6 +275,7 @@ class MutableIndex:
         self.doc_mask = packed["doc_mask"]
         self.doc_ids = packed["doc_ids"]
         self.doc_seg = packed["doc_seg"]
+        self.doc_seg_mod = packed["doc_seg_mod"]
         self.seg_max_stacked = packed["seg_max_stacked"]
         self.seg_max = self.seg_max_stacked[:, : self.n_seg]
         self.seg_max_collapsed = self.seg_max_stacked[:, self.n_seg]
@@ -297,6 +303,7 @@ class MutableIndex:
             doc_mask=jnp.asarray(self.doc_mask),
             doc_ids=jnp.asarray(self.doc_ids),
             doc_seg=jnp.asarray(self.doc_seg),
+            doc_seg_mod=jnp.asarray(self.doc_seg_mod),
             seg_max_stacked=jnp.asarray(self.seg_max_stacked),
             scale=jnp.float32(self.scale),
             cluster_ndocs=jnp.asarray(self.cluster_ndocs),

@@ -33,15 +33,18 @@ from repro.core.types import ClusterIndex
 #   2 — stored stacked bound table seg_max_stacked (m, n_seg + 1, V);
 #       v1 shards are still readable: the stacked layout (and the
 #       collapsed row, if the shard predates it) is derived at load
-FORMAT_VERSION = 2
-_READABLE_VERSIONS = (1, 2)
+#   3 — hoisted modded segment map doc_seg_mod (m, d_pad); v1/v2 shards
+#       derive it at load as doc_seg % n_seg (bit-exact: the write paths
+#       only ever store in-range segment ids)
+FORMAT_VERSION = 3
+_READABLE_VERSIONS = (1, 2, 3)
 
 # cluster-axis-sharded array fields, in manifest order
 _FIELDS = ("doc_tids", "doc_tw", "doc_mask", "doc_ids", "doc_seg",
-           "seg_max_stacked", "cluster_ndocs")
+           "doc_seg_mod", "seg_max_stacked", "cluster_ndocs")
 
 
-def _derive_stacked(arrays: dict) -> "np.ndarray":
+def _derive_stacked(arrays: dict, manifest: dict) -> "np.ndarray":
     """Legacy (v1) shards: build the stacked table from seg_max plus the
     collapsed row (recomputed when the shard predates it too)."""
     seg_max = arrays.pop("seg_max")
@@ -51,10 +54,16 @@ def _derive_stacked(arrays: dict) -> "np.ndarray":
     return np.concatenate([seg_max, collapsed[:, None]], axis=1)
 
 
+def _derive_seg_mod(arrays: dict, manifest: dict) -> "np.ndarray":
+    """v1/v2 shards predate the hoisted modded segment map."""
+    return (arrays["doc_seg"] % manifest["n_seg"]).astype(np.int32)
+
+
 # fields that may be absent in checkpoints written before they existed;
 # each maps to a recompute-from-what-is-there fallback applied at load
 _DERIVABLE = {
     "seg_max_stacked": _derive_stacked,
+    "doc_seg_mod": _derive_seg_mod,
 }
 # legacy spellings accepted from old shards (loaded, then folded into the
 # derivation above instead of becoming index fields)
@@ -173,7 +182,7 @@ def load_index(directory: str,
     arrays = {f: np.concatenate(p, axis=0) for f, p in parts.items() if p}
     for f, derive in _DERIVABLE.items():
         if f not in arrays:
-            arrays[f] = derive(arrays)
+            arrays[f] = derive(arrays, manifest)
 
     if shards is None and arrays["doc_tids"].shape[0] != manifest["m"]:
         raise ValueError("shard rows do not reassemble the manifest's m")
@@ -184,6 +193,7 @@ def load_index(directory: str,
         doc_mask=jnp.asarray(arrays["doc_mask"]),
         doc_ids=jnp.asarray(arrays["doc_ids"]),
         doc_seg=jnp.asarray(arrays["doc_seg"]),
+        doc_seg_mod=jnp.asarray(arrays["doc_seg_mod"]),
         seg_max_stacked=jnp.asarray(arrays["seg_max_stacked"]),
         scale=jnp.float32(manifest["scale"]),
         cluster_ndocs=jnp.asarray(arrays["cluster_ndocs"]),

@@ -185,6 +185,7 @@ def index_shard_specs(index: ClusterIndex,
     return ClusterIndex(
         doc_tids=P(c, None, None), doc_tw=P(c, None, None),
         doc_mask=P(c, None), doc_ids=P(c, None), doc_seg=P(c, None),
+        doc_seg_mod=P(c, None),
         seg_max_stacked=P(c, None, None), scale=P(),
         cluster_ndocs=P(c), vocab=index.vocab, n_seg=index.n_seg)
 
@@ -205,7 +206,7 @@ def distributed_retrieve(index: ClusterIndex, queries: QueryBatch,
         # engine (batched by default: shard-local waves are planned into
         # compacted work queues and executed exactly like the single-host
         # core — each local tile fetched once per batch, only if admitted)
-        ids, scores, nd, nc, ns, nt, nw = _retrieve_arrays(
+        ids, scores, nd, nc, ns, nt, nw, nwd = _retrieve_arrays(
             index_local, q_local, cfg)
         # merge the per-shard top-k across the cluster axes
         for ax in caxes:
@@ -218,14 +219,16 @@ def distributed_retrieve(index: ClusterIndex, queries: QueryBatch,
         ns = jax.lax.psum(ns, caxes)
         nt = jax.lax.psum(nt, caxes)
         nw = jax.lax.psum(nw, caxes)
+        nwd = jax.lax.psum(nwd, caxes)
         return TopK(doc_ids=ids, scores=scores, n_scored_docs=nd,
                     n_scored_clusters=nc, n_scored_segments=ns,
-                    n_scored_tiles=nt, n_walked_tiles=nw)
+                    n_scored_tiles=nt, n_walked_tiles=nw,
+                    n_walked_docs=nwd)
 
     out_specs = TopK(doc_ids=P(qaxis, None), scores=P(qaxis, None),
                      n_scored_docs=P(qaxis), n_scored_clusters=P(qaxis),
                      n_scored_segments=P(qaxis), n_scored_tiles=P(qaxis),
-                     n_walked_tiles=P(qaxis))
+                     n_walked_tiles=P(qaxis), n_walked_docs=P(qaxis))
     fn = shard_map(local, mesh=mesh, in_specs=(ispecs, qspec),
                    out_specs=out_specs, check_vma=False)
     return fn(index, queries)

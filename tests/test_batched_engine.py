@@ -33,14 +33,16 @@ from repro.kernels.score_cluster_batch import ops as scb_ops
 NEG_F = float(jnp.finfo(jnp.float32).min)
 
 
-def _mk_plan(cids, seg_admit, block_q, live=None):
+def _mk_plan(index, cids, seg_admit, block_q, block_d=None, live=None):
     """Wave plan from a raw (n_q, G, n_seg) segment-admission mask (a
     (query, tile) pair is admitted iff any of its segments is)."""
     cids = jnp.asarray(cids, jnp.int32)
     admit = jnp.asarray(seg_admit).any(axis=-1)
     if live is None:
         live = jnp.ones((cids.shape[0],), bool)
-    return plan_wave(cids, live, admit, jnp.asarray(seg_admit), block_q)
+    return plan_wave(cids, live, admit, jnp.asarray(seg_admit), block_q,
+                     index.doc_seg_mod[cids], index.doc_mask[cids],
+                     block_d=block_d)
 
 
 def _scorer_expected(index, cids, qmaps, seg_admit):
@@ -57,14 +59,17 @@ def _scorer_expected(index, cids, qmaps, seg_admit):
     return np.asarray(admitted), np.asarray(per_doc)
 
 
-def _check_scorer(index, cids, qmaps, seg_admit, block_q=8, block_v=None):
+def _check_scorer(index, cids, qmaps, seg_admit, block_q=8, block_v=None,
+                  block_d=None):
     cids = jnp.asarray(cids, jnp.int32)
-    dseg, dmask = index.doc_seg[cids], index.doc_mask[cids]
+    dseg, dmask = index.doc_seg_mod[cids], index.doc_mask[cids]
     tids, tw = index.doc_tids[cids], index.doc_tw[cids]
-    plan = _mk_plan(cids, seg_admit, block_q)
+    plan = _mk_plan(index, cids, seg_admit, block_q, block_d=block_d)
     admitted, expect = _scorer_expected(index, cids, qmaps, seg_admit)
     for impl, out in [
         ("ref", scb_ops.score_admitted_ref(
+            tids, tw, dseg, dmask, qmaps, plan, index.scale)),
+        ("runs_ref", scb_ops.score_runs_ref(
             tids, tw, dseg, dmask, qmaps, plan, index.scale)),
         ("kernel", scb_ops.score_admitted(
             index.doc_tids, index.doc_tw, dseg, dmask, qmaps, plan,
@@ -99,11 +104,11 @@ def test_batch_scorer_fully_pruned_tiles(index, queries):
     seg_admit[:, 3] = False
     seg_admit = jnp.asarray(seg_admit)
     _check_scorer(index, cids, qmaps, seg_admit)
-    plan = _mk_plan(cids, seg_admit, block_q=8)
+    plan = _mk_plan(index, cids, seg_admit, block_q=8)
     assert int(plan.n_tiles) == 2
     np.testing.assert_array_equal(np.asarray(plan.tile_cids)[:2], [0, 2])
     out = np.asarray(scb_ops.score_admitted(
-        index.doc_tids, index.doc_tw, index.doc_seg[cids],
+        index.doc_tids, index.doc_tw, index.doc_seg_mod[cids],
         index.doc_mask[cids], qmaps, plan, index.scale))
     assert (out[:, 1] == NEG_F).all() and (out[:, 3] == NEG_F).all()
 
@@ -143,14 +148,91 @@ def test_executor_query_blocking_invariant(index, queries):
         rng.random((q.n_queries, 6, index.n_seg)) < 0.15)
     outs = {}
     for bq in (1, 4, q.n_queries, 2 * q.n_queries):
-        plan = _mk_plan(cids, seg_admit, block_q=bq)
+        plan = _mk_plan(index, cids, seg_admit, block_q=bq)
         outs[bq] = np.asarray(scb_ops.score_admitted(
-            index.doc_tids, index.doc_tw, index.doc_seg[cids],
+            index.doc_tids, index.doc_tw, index.doc_seg_mod[cids],
             index.doc_mask[cids], qmaps, plan, index.scale))
     base = outs.popitem()[1]
     for bq, out in outs.items():
         np.testing.assert_allclose(out, base, rtol=1e-6, atol=1e-6,
                                    err_msg=f"block_q={bq} diverges")
+
+
+def test_executor_doc_blocking_invariant(index, queries):
+    """The executor result is invariant to the doc sub-tile size (sub-
+    tiles no admitted run intersects are skipped, not dropped)."""
+    q, _ = queries
+    qmaps = q.dense_map()
+    cids = jnp.arange(6)
+    rng = np.random.default_rng(13)
+    # sparse admission so many doc sub-tiles are empty per tile
+    seg_admit = jnp.asarray(
+        rng.random((q.n_queries, 6, index.n_seg)) < 0.25)
+    dp = index.d_pad
+    outs = {}
+    for bd in (1, 4, 16, dp, None):
+        plan = _mk_plan(index, cids, seg_admit, block_q=8, block_d=bd)
+        outs[bd] = np.asarray(scb_ops.score_admitted(
+            index.doc_tids, index.doc_tw, index.doc_seg_mod[cids],
+            index.doc_mask[cids], qmaps, plan, index.scale))
+    base = outs.popitem()[1]
+    for bd, out in outs.items():
+        np.testing.assert_allclose(out, base, rtol=1e-6, atol=1e-6,
+                                   err_msg=f"block_d={bd} diverges")
+
+
+def test_doc_runs_encode_union_admission(index, queries):
+    """The plan's run queues are exactly the RLE of the union (batch-
+    level) doc-admission mask, and the sub-tile queue covers them."""
+    from repro.core.plan import runs_to_mask
+    from repro.kernels.score_cluster_batch.ref import walked_doc_slots
+    q, _ = queries
+    cids = jnp.arange(8)
+    rng = np.random.default_rng(5)
+    seg_admit = jnp.asarray(
+        rng.random((q.n_queries, 8, index.n_seg)) < 0.2)
+    plan = _mk_plan(index, cids, seg_admit, block_q=8, block_d=8)
+    n_seg = index.n_seg
+    union = (np.asarray(index.doc_mask[cids])
+             & np.take_along_axis(
+                 np.asarray(seg_admit.any(0)),
+                 np.asarray(index.doc_seg_mod[cids]) % n_seg, axis=1))
+    union_slots = union[np.asarray(plan.tile_pos)]
+    n_tiles = int(plan.n_tiles)
+    from_runs = np.asarray(runs_to_mask(
+        plan.drun_start, plan.drun_len, plan.n_drun, index.d_pad))
+    np.testing.assert_array_equal(from_runs[:n_tiles],
+                                  union_slots[:n_tiles])
+    np.testing.assert_array_equal(np.asarray(plan.dmask_union)[:n_tiles],
+                                  union_slots[:n_tiles])
+    # every admitted doc lies in a walked sub-tile (rank safety of the
+    # doc-level compaction) and dead sub-tiles are actually skipped
+    walked = np.asarray(walked_doc_slots(plan))
+    assert (union_slots[:n_tiles] <= walked[:n_tiles]).all()
+    n_db = plan.n_db
+    assert (np.asarray(plan.n_dblock)[:n_tiles] <= n_db).all()
+
+
+def test_doc_subtile_skipping_dead_tail(index, queries):
+    """A tile whose trailing slots are all tombstoned drops its trailing
+    doc sub-tiles from the queue, and scores stay exact."""
+    from repro.core.plan import resolve_block_d
+    q, _ = queries
+    qmaps = q.dense_map()
+    cids = jnp.arange(4)
+    dp = index.d_pad
+    bd = resolve_block_d(dp, 8)              # the size the plan will use
+    keep = dp // 2 - (dp // 2) % bd          # kill an aligned tail
+    mask = np.asarray(index.doc_mask).copy()
+    mask[np.asarray(cids), keep:] = False
+    tomb = index.replace(doc_mask=jnp.asarray(mask))
+    seg_admit = jnp.ones((q.n_queries, 4, index.n_seg), bool)
+    _check_scorer(tomb, cids, qmaps, seg_admit, block_d=bd)
+    plan = _mk_plan(tomb, cids, seg_admit, block_q=8, block_d=bd)
+    n_tiles = int(plan.n_tiles)
+    assert n_tiles == 4
+    assert (np.asarray(plan.n_dblock)[:n_tiles] <= keep // bd).all()
+    assert int(plan.walked_docs()) < int(plan.n_blocks) * dp
 
 
 def test_executor_vocab_blocking_invariant(index, queries):
@@ -173,10 +255,11 @@ def test_empty_wave_is_all_neg(index, queries):
     qmaps = q.dense_map()
     cids = jnp.arange(4)
     seg_admit = jnp.zeros((q.n_queries, 4, index.n_seg), bool)
-    plan = _mk_plan(cids, seg_admit, block_q=8)
+    plan = _mk_plan(index, cids, seg_admit, block_q=8)
     assert int(plan.n_tiles) == 0 and int(plan.n_blocks) == 0
+    assert int(plan.walked_docs()) == 0
     out = np.asarray(scb_ops.score_admitted(
-        index.doc_tids, index.doc_tw, index.doc_seg[cids],
+        index.doc_tids, index.doc_tw, index.doc_seg_mod[cids],
         index.doc_mask[cids], qmaps, plan, index.scale))
     assert (out == NEG_F).all()
 
@@ -294,21 +377,33 @@ def test_queue_step_padding_maps_to_last_real_step():
     that re-opened an *earlier* out block would clobber its correct
     scores with stale buffer contents. Interpret mode cannot see this
     (it re-reads out blocks per step), so the invariant is pinned here
-    at the index-map level."""
+    at the index-map level — now across all three queue levels (tile,
+    query block, doc sub-tile)."""
     from repro.kernels.score_cluster_batch.score_cluster_batch import (
         _queue_step)
     n_tiles = jnp.asarray([2], jnp.int32)
     n_qblock = jnp.asarray([3, 1, 0, 0], jnp.int32)   # G=4, 2 live tiles
-    G, n_qb = 4, 4
-    last_real = (1, 0)            # tile slot 1's single live qblock
+    n_dblock = jnp.asarray([2, 3, 0, 0], jnp.int32)
+    G, n_qb, n_db = 4, 4, 4
+    # overall last real step: tile slot 1, its last qblock, last sub-tile
+    last_real = (1, 0, 2)
     for i in range(G):
         for j in range(n_qb):
-            ii, jj, real = _queue_step(jnp.int32(i), jnp.int32(j),
-                                       n_tiles, n_qblock)
-            ii, jj, real = int(ii), int(jj), bool(real)
-            if i < 2 and j < int(n_qblock[i]):
-                assert (ii, jj) == (i, j) and real
-            elif i < 2:           # qblock tail of a live tile
-                assert (ii, jj) == (i, int(n_qblock[i]) - 1) and not real
-            else:                 # padded tile slots
-                assert (ii, jj) == last_real and not real
+            for d in range(n_db):
+                ii, jj, dd, real = _queue_step(
+                    jnp.int32(i), jnp.int32(j), jnp.int32(d),
+                    n_tiles, n_qblock, n_dblock)
+                ii, jj, dd, real = int(ii), int(jj), int(dd), bool(real)
+                nq_i, nd_i = int(n_qblock[i]) if i < 2 else 0, \
+                    int(n_dblock[i]) if i < 2 else 0
+                if i < 2 and j < nq_i and d < nd_i:
+                    assert (ii, jj, dd) == (i, j, d) and real
+                elif i < 2 and j < nq_i:
+                    # doc tail of a live (tile, qblock): pin last sub-tile
+                    assert (ii, jj, dd) == (i, j, nd_i - 1) and not real
+                elif i < 2:
+                    # qblock tail of a live tile: pin its last real step
+                    assert (ii, jj, dd) == (i, nq_i - 1, nd_i - 1)
+                    assert not real
+                else:             # padded tile slots
+                    assert (ii, jj, dd) == last_real and not real

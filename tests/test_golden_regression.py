@@ -1,0 +1,146 @@
+"""Golden end-to-end regression fixture (ISSUE 4 satellite).
+
+A small seeded corpus + query batch with *committed* expected top-k ids
+and scores for each engine (``tests/golden/golden_topk.json``), so a
+future kernel/planner rework that changes results is caught by plain
+``pytest`` instead of a benchmark run.
+
+Ids are compared exactly; scores to 1e-4 (f32 contraction order may
+differ across BLAS builds). If a change *intentionally* alters results,
+regenerate with::
+
+    PYTHONPATH=src:tests python tests/test_golden_regression.py --regen
+
+and justify the diff in the PR — a golden churn without an intended
+semantic change is a regression by definition.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.index import build_index
+from repro.core.search import SearchConfig, brute_force_topk, retrieve
+from repro.data.synthetic import CorpusSpec, make_corpus, make_queries
+
+GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "golden",
+                           "golden_topk.json")
+
+K = 10
+
+# every configuration pinned by the fixture; names are the JSON keys
+ENGINES = {
+    "batched_asc": SearchConfig(k=K, mu=0.8, eta=1.0, method="asc",
+                                engine="batched", block_q=4, block_d=8),
+    "batched_asc_safe": SearchConfig(k=K, mu=1.0, eta=1.0, method="asc",
+                                     engine="batched", block_q=4,
+                                     block_d=8),
+    "batched_anytime": SearchConfig(k=K, mu=1.0, eta=1.0,
+                                    method="anytime", engine="batched",
+                                    block_q=4, block_d=None),
+    "per_query_asc": SearchConfig(k=K, mu=0.8, eta=1.0, method="asc",
+                                  engine="per_query"),
+}
+
+
+def _world():
+    spec = CorpusSpec(n_docs=600, vocab=256, n_topics=8, doc_terms=20,
+                      t_pad=24, query_terms=8, q_pad=12, seed=777)
+    docs, doc_topic = make_corpus(spec)
+    index = build_index(docs, doc_topic % 12, m=12, n_seg=4, d_pad=64,
+                        seed=778)
+    queries, _ = make_queries(spec, 6, doc_topic, seed=779)
+    return index, queries
+
+
+def _compute() -> dict:
+    index, queries = _world()
+    out = {"k": K, "engines": {}}
+    for name, cfg in ENGINES.items():
+        r = retrieve(index, queries, cfg)
+        out["engines"][name] = {
+            "doc_ids": np.asarray(r.doc_ids).tolist(),
+            "scores": np.round(np.asarray(r.scores, np.float64),
+                               6).tolist(),
+        }
+    oracle = brute_force_topk(index, queries, K)
+    out["engines"]["brute_force"] = {
+        "doc_ids": np.asarray(oracle.doc_ids).tolist(),
+        "scores": np.round(np.asarray(oracle.scores, np.float64),
+                           6).tolist(),
+    }
+    return out
+
+
+@pytest.fixture(scope="module")
+def golden() -> dict:
+    if not os.path.exists(GOLDEN_PATH):
+        pytest.fail(f"golden fixture missing: {GOLDEN_PATH} "
+                    f"(regenerate with --regen, then commit)")
+    with open(GOLDEN_PATH) as f:
+        return json.load(f)
+
+
+@pytest.fixture(scope="module")
+def computed() -> dict:
+    return _compute()
+
+
+def test_golden_covers_every_engine(golden):
+    assert set(golden["engines"]) == set(ENGINES) | {"brute_force"}
+    assert golden["k"] == K
+
+
+TIE_TOL = 1e-3   # f32 contraction order differs across BLAS builds
+
+
+@pytest.mark.parametrize("name", sorted(set(ENGINES) | {"brute_force"}))
+def test_engine_matches_golden(golden, computed, name):
+    want = golden["engines"][name]
+    got = computed["engines"][name]
+    np.testing.assert_allclose(
+        np.sort(np.asarray(got["scores"]), axis=1),
+        np.sort(np.asarray(want["scores"]), axis=1),
+        rtol=1e-4, atol=1e-4,
+        err_msg=f"{name}: top-k scores drifted from the committed golden")
+    # ids: exact per-query sets except where scores tie at a rank
+    # boundary within f32 noise (order there is platform-dependent)
+    want_ids, got_ids = np.asarray(want["doc_ids"]), np.asarray(
+        got["doc_ids"])
+    for qi in range(want_ids.shape[0]):
+        wset, gset = set(want_ids[qi].tolist()), set(got_ids[qi].tolist())
+        if wset == gset:
+            continue
+        score_of = dict(zip(want_ids[qi].tolist(), want["scores"][qi]))
+        score_of.update(zip(got_ids[qi].tolist(),
+                            computed["engines"][name]["scores"][qi]))
+        kth = min(want["scores"][qi])
+        for d in wset ^ gset:
+            assert abs(score_of[d] - kth) < TIE_TOL, (
+                f"{name} query {qi}: doc {d} drifted from the committed "
+                f"golden beyond tie tolerance")
+
+
+def test_golden_safe_mode_is_oracle(golden):
+    """Internal consistency of the committed fixture itself: the safe
+    batched engine's score multiset equals brute force."""
+    safe = np.sort(np.asarray(golden["engines"]["batched_asc_safe"]
+                              ["scores"]), axis=1)
+    oracle = np.sort(np.asarray(golden["engines"]["brute_force"]
+                                ["scores"]), axis=1)
+    np.testing.assert_allclose(safe, oracle, rtol=1e-4, atol=1e-4)
+
+
+if __name__ == "__main__":
+    import sys
+    if "--regen" in sys.argv:
+        os.makedirs(os.path.dirname(GOLDEN_PATH), exist_ok=True)
+        with open(GOLDEN_PATH, "w") as f:
+            json.dump(_compute(), f, indent=1)
+        print(f"wrote {GOLDEN_PATH}")
+    else:
+        print("run with --regen to regenerate the golden fixture")

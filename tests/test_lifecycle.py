@@ -119,6 +119,41 @@ def test_insert_raises_when_full():
         mi.insert([1], [1.0])
 
 
+def test_doc_seg_mod_consistent_under_churn(small_world):
+    """The hoisted modded segment map (ClusterIndex.doc_seg_mod, ISSUE 4
+    satellite) stays exactly ``doc_seg % n_seg`` — and in range — through
+    inserts, deletes, compaction, snapshot and save/load."""
+    _, _, base = small_world
+    np.testing.assert_array_equal(np.asarray(base.doc_seg_mod),
+                                  np.asarray(base.doc_seg) % NSEG)
+    mi = MutableIndex(base, seed=4)
+    rng = np.random.default_rng(9)
+    for _ in range(3):
+        _churn(mi, rng, n_del=60, n_ins=40)
+        np.testing.assert_array_equal(mi.doc_seg_mod, mi.doc_seg % NSEG)
+        assert mi.doc_seg_mod.min() >= 0 and mi.doc_seg_mod.max() < NSEG
+    mi.compact()
+    np.testing.assert_array_equal(mi.doc_seg_mod, mi.doc_seg % NSEG)
+    snap = mi.snapshot()
+    np.testing.assert_array_equal(np.asarray(snap.doc_seg_mod),
+                                  mi.doc_seg_mod)
+
+
+def test_doc_seg_mod_persist_roundtrip_and_legacy(small_world, tmp_path):
+    """Persisted at format v3; v1/v2 checkpoints (no stored map) derive
+    it bit-exactly at load."""
+    _, _, base = small_world
+    path = save_index(str(tmp_path / "ix"), base, n_shards=2)
+    loaded, _ = load_index(path)
+    np.testing.assert_array_equal(np.asarray(loaded.doc_seg_mod),
+                                  np.asarray(base.doc_seg_mod))
+    _downgrade_to_v1(path, keep_collapsed=True)
+    legacy, manifest = load_index(path)
+    assert manifest["format_version"] == 1
+    np.testing.assert_array_equal(np.asarray(legacy.doc_seg_mod),
+                                  np.asarray(base.doc_seg_mod))
+
+
 def test_insert_prefers_nearest_centroid(small_world):
     _, _, base = small_world
     centroids = np.zeros((M, 4), np.float32)
@@ -309,7 +344,7 @@ def test_save_load_roundtrip(small_world, tmp_path, n_shards):
     assert manifest["extra"] == {"note": "t"}
     assert loaded.vocab == base.vocab and loaded.n_seg == base.n_seg
     for f in ("doc_tids", "doc_tw", "doc_mask", "doc_ids", "doc_seg",
-              "seg_max", "cluster_ndocs"):
+              "doc_seg_mod", "seg_max", "cluster_ndocs"):
         np.testing.assert_array_equal(np.asarray(getattr(loaded, f)),
                                       np.asarray(getattr(base, f)))
     assert float(loaded.scale) == pytest.approx(float(base.scale))
@@ -389,6 +424,7 @@ def _downgrade_to_v1(path: str, keep_collapsed: bool) -> None:
         with np.load(shard) as z:
             arrays = {f: z[f] for f in z.files}
         stacked = arrays.pop("seg_max_stacked")
+        arrays.pop("doc_seg_mod", None)     # v1/v2 predate the hoisted map
         arrays["seg_max"] = stacked[:, :-1]
         if keep_collapsed:
             arrays["seg_max_collapsed"] = stacked[:, -1]
@@ -432,7 +468,7 @@ def test_legacy_v1_roundtrips_through_v2(small_world, tmp_path):
     reloaded, manifest = load_index(new)
     assert manifest["format_version"] == FORMAT_VERSION
     for f in ("doc_tids", "doc_tw", "doc_mask", "doc_ids", "doc_seg",
-              "seg_max_stacked", "cluster_ndocs"):
+              "doc_seg_mod", "seg_max_stacked", "cluster_ndocs"):
         np.testing.assert_array_equal(np.asarray(getattr(reloaded, f)),
                                       np.asarray(getattr(base, f)))
     a = asc_retrieve(base, q, k=10, mu=1.0, eta=1.0)

@@ -1,0 +1,306 @@
+"""Property suite: rank safety of doc-level queue compaction (ISSUE 4).
+
+The doc-compacted batched engine (plan/execute with doc-run queues,
+core/plan.py) is pinned against the preserved ``engine="per_query"``
+oracle under random ``(mu, eta)``, cluster budgets, batch sizes and doc
+sub-tile blockings:
+
+  * (mu, eta) = (1, 1), no budget: exact top-k — identical score
+    multisets to both the per-query engine and the brute-force oracle,
+    for every ``block_d``;
+  * any parameters: *true-score integrity* — every returned (id, score)
+    pair is the document's real RankScore (doc skipping may drop
+    candidates, never corrupt survivors) — plus the Prop-3
+    mu-approximation bound when unbudgeted;
+  * work-counter invariants (the observable side of skipping):
+    ``n_walked_docs <= n_scored_tiles * d_pad``,
+    ``n_scored_tiles <= n_walked_tiles``,
+    ``sum_q n_scored_docs <= n_walked_docs * block_q``,
+    monotonicity in (mu, eta), and bit-exact preservation across the
+    ``retrieve_with_plans`` / ``execute_plans`` replay path.
+
+Runs through tests/_prop.py: real hypothesis when installed, the seeded
+deterministic fallback otherwise. The ``*_kernel_smoke`` test is the
+interpret-mode CI subset (kernels-interpret job) — it forces the Pallas
+executor onto the doc-run queues with a tiny example budget.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _prop import given, settings, st
+
+from repro.core.index import build_index
+from repro.core.plan import resolve_block_d, segment_histogram
+from repro.core.search import (NEG, SearchConfig, brute_force_topk,
+                               execute_plans, retrieve,
+                               retrieve_with_plans, score_docs_ref)
+from repro.data.synthetic import CorpusSpec, make_corpus, make_queries
+
+NEG_F = float(np.finfo(np.float32).min)
+
+_CACHE: dict = {}
+
+
+def _world(n_q: int = 8):
+    """Small seeded corpus + index + queries + per-doc true-score map."""
+    key = ("world", n_q)
+    if key not in _CACHE:
+        spec = CorpusSpec(n_docs=900, vocab=320, n_topics=12,
+                          doc_terms=24, t_pad=32, query_terms=8,
+                          q_pad=12, seed=101)
+        docs, doc_topic = make_corpus(spec)
+        # padded d_pad so the dead tail gives doc-run compaction a floor
+        idx = build_index(docs, doc_topic % 16, m=16, n_seg=4, d_pad=80,
+                          seed=102)
+        q, _ = make_queries(spec, n_q, doc_topic, seed=103)
+        qmaps = q.dense_map()
+        # (n_q, m, d_pad) true scores — the integrity oracle
+        true = np.stack([
+            np.where(np.asarray(idx.doc_mask),
+                     np.asarray(score_docs_ref(idx.doc_tids, idx.doc_tw,
+                                               qmaps[i], idx.scale)),
+                     NEG_F)
+            for i in range(n_q)])
+        by_id = {}
+        ids = np.asarray(idx.doc_ids)
+        for qi in range(n_q):
+            by_id[qi] = {int(d): float(s)
+                         for d, s in zip(ids.ravel(), true[qi].ravel())
+                         if d >= 0}
+        _CACHE[key] = (idx, q, by_id)
+    return _CACHE[key]
+
+
+def _oracle(n_q: int, k: int):
+    key = ("oracle", n_q, k)
+    if key not in _CACHE:
+        idx, q, _ = _world(n_q)
+        _CACHE[key] = brute_force_topk(idx, q, k)
+    return _CACHE[key]
+
+
+def _sorted_scores(out) -> np.ndarray:
+    return np.sort(np.asarray(out.scores), axis=1)[:, ::-1]
+
+
+def _check_true_scores(out, by_id, tol=2e-4):
+    ids = np.asarray(out.doc_ids)
+    scores = np.asarray(out.scores)
+    for qi in range(ids.shape[0]):
+        for d, s in zip(ids[qi], scores[qi]):
+            if d < 0:
+                continue
+            assert abs(by_id[qi][int(d)] - float(s)) < tol, (
+                f"query {qi}: doc {d} returned {s}, true "
+                f"{by_id[qi][int(d)]}")
+
+
+# ---------------------------------------------------------------------------
+# rank safety vs the per-query oracle
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=14, deadline=None)
+@given(
+    mu=st.sampled_from([0.4, 0.6, 0.8, 1.0]),
+    eta=st.sampled_from([0.7, 0.9, 1.0]),
+    n_q=st.sampled_from([3, 8]),
+    block_d=st.sampled_from([8, 20, None]),
+    method=st.sampled_from(["asc", "anytime_star"]),
+    budget=st.sampled_from([None, 5, 11]),
+)
+def test_doc_compacted_engine_vs_per_query_oracle(mu, eta, n_q, block_d,
+                                                  method, budget):
+    if mu > eta:
+        mu = eta
+    if method == "anytime_star":
+        eta = mu
+    idx, q, by_id = _world(n_q)
+    k = 10
+    b = None if budget is None else jnp.int32(budget)
+    outs = {}
+    for engine in ("batched", "per_query"):
+        cfg = SearchConfig(k=k, mu=mu, eta=eta, method=method,
+                           engine=engine, block_q=4, block_d=block_d)
+        outs[engine] = retrieve(idx, q, cfg, budget=b)
+    # survivors always carry their true scores, under every parameter
+    _check_true_scores(outs["batched"], by_id)
+    if budget is not None:
+        assert int(outs["batched"].n_scored_clusters.max()) <= budget
+        return
+    bs, ps = _sorted_scores(outs["batched"]), _sorted_scores(
+        outs["per_query"])
+    if mu == 1.0 and eta == 1.0:
+        # rank-safe: the doc-compacted engine returns the oracle set
+        np.testing.assert_allclose(bs, ps, rtol=1e-5, atol=1e-5)
+    else:
+        o = _sorted_scores(_oracle(n_q, k))
+        for name, a in (("batched", bs), ("per_query", ps)):
+            a = np.where(a > NEG_F / 2, a, 0.0)
+            assert np.all(a.mean(1) >= mu * o.mean(1) - 1e-4), (
+                f"{name}: Prop-3 violated at mu={mu} eta={eta} "
+                f"block_d={block_d} method={method}")
+
+
+@pytest.mark.parametrize("block_d", [1, 8, 80, None])
+@pytest.mark.parametrize("method", ["asc", "anytime"])
+def test_exact_topk_at_unit_parameters(block_d, method):
+    """(mu, eta) = (1, 1) reproduces the exact top-k for every doc
+    sub-tile blocking (the satellite's exactness pin)."""
+    idx, q, _ = _world(8)
+    k = 10
+    out = retrieve(idx, q, SearchConfig(k=k, mu=1.0, eta=1.0,
+                                        method=method, block_d=block_d))
+    np.testing.assert_allclose(_sorted_scores(out),
+                               _sorted_scores(_oracle(8, k)),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# counter invariants
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=12, deadline=None)
+@given(
+    mu=st.sampled_from([0.5, 0.8, 1.0]),
+    eta=st.sampled_from([0.8, 1.0]),
+    n_q=st.sampled_from([3, 8]),
+    block_d=st.sampled_from([8, 20, None]),
+    budget=st.sampled_from([None, 6]),
+)
+def test_counter_invariants(mu, eta, n_q, block_d, budget):
+    if mu > eta:
+        mu = eta
+    idx, q, _ = _world(n_q)
+    cfg = SearchConfig(k=10, mu=mu, eta=eta, block_q=4, block_d=block_d)
+    b = None if budget is None else jnp.int32(budget)
+    out = retrieve(idx, q, cfg, budget=b)
+    dp = idx.d_pad
+    walked_docs = np.asarray(out.n_walked_docs)
+    scored_tiles = np.asarray(out.n_scored_tiles)
+    walked_tiles = np.asarray(out.n_walked_tiles)
+    scored_docs = np.asarray(out.n_scored_docs)
+    # the executor never walks more doc slots than whole-tile execution
+    assert np.all(walked_docs <= scored_tiles * dp)
+    # and never scores more grid blocks than the dense walk holds
+    assert np.all(scored_tiles <= walked_tiles)
+    # every admitted (query, doc) pair lies inside a walked run slot of
+    # its query block
+    assert scored_docs.sum() <= int(walked_docs[0]) * cfg.block_q
+    # per-query admission bounded by admitted clusters
+    assert np.all(scored_docs
+                  <= np.asarray(out.n_scored_clusters) * dp)
+
+
+def test_doc_skipping_strict_with_dead_tail():
+    """Strict doc-level skipping, engineered: tombstone an aligned tail
+    of every cluster — the executor must walk strictly fewer doc slots
+    than whole-tile execution while staying exact at (1, 1)."""
+    idx, q, _ = _world(8)
+    dp = idx.d_pad
+    bd = resolve_block_d(dp, 8)
+    cut = dp - 2 * bd                        # kill two sub-tiles per tile
+    mask = np.asarray(idx.doc_mask).copy()
+    mask[:, cut:] = False
+    ndocs = mask.sum(axis=1).astype(np.int32)
+    tomb = idx.replace(doc_mask=jnp.asarray(mask),
+                       cluster_ndocs=jnp.asarray(ndocs))
+    cfg = SearchConfig(k=10, mu=1.0, eta=1.0, block_d=bd, block_q=4)
+    out = retrieve(tomb, q, cfg)
+    walked, tiles = int(out.n_walked_docs[0]), int(out.n_scored_tiles[0])
+    assert tiles > 0
+    assert walked < tiles * dp, (
+        f"dead-tail sub-tiles were walked: {walked} vs {tiles * dp}")
+    oracle = brute_force_topk(tomb, q, 10)
+    np.testing.assert_allclose(_sorted_scores(out),
+                               _sorted_scores(oracle),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_counters_monotone_in_mu_and_eta():
+    """Looser (mu, eta) — less pruning — must not reduce admitted work
+    (batch-mean level, matching the existing Prop-2 style checks)."""
+    idx, q, _ = _world(8)
+    for counter in ("n_scored_docs", "n_scored_segments",
+                    "n_scored_clusters"):
+        prev = None
+        for mu in (1.0, 0.7, 0.4):
+            out = retrieve(idx, q, SearchConfig(k=10, mu=mu, eta=1.0))
+            val = float(np.asarray(getattr(out, counter)).mean())
+            if prev is not None:
+                assert val <= prev + 1e-6, (
+                    f"{counter} grew as mu tightened: mu={mu}")
+            prev = val
+    prev_w = None
+    for eta in (1.0, 0.8, 0.6):
+        out = retrieve(idx, q, SearchConfig(k=10, mu=0.6, eta=eta))
+        w = int(np.asarray(out.n_walked_docs)[0])
+        if prev_w is not None:
+            assert w <= prev_w, (
+                f"executor walked more docs as eta tightened: eta={eta}")
+        prev_w = w
+
+
+def test_counters_bit_exact_across_plan_replay():
+    """retrieve / retrieve_with_plans agree bit-exactly on every TopK
+    field, and the executor replay over recorded plans is deterministic."""
+    idx, q, _ = _world(8)
+    cfg = SearchConfig(k=10, mu=0.8, eta=1.0, block_q=4, block_d=8)
+    plain = retrieve(idx, q, cfg)
+    with_plans, (plans, executed) = retrieve_with_plans(idx, q, cfg)
+    for f in ("doc_ids", "scores", "n_scored_docs", "n_scored_clusters",
+              "n_scored_segments", "n_scored_tiles", "n_walked_tiles",
+              "n_walked_docs"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(plain, f)),
+            np.asarray(getattr(with_plans, f)),
+            err_msg=f"plan recording changed {f}")
+    qmaps = q.dense_map()
+    r1 = np.asarray(execute_plans(idx, qmaps, plans, executed, cfg))
+    r2 = np.asarray(execute_plans(idx, qmaps, plans, executed, cfg))
+    np.testing.assert_array_equal(r1, r2)
+    assert np.all(np.isfinite(r1))
+
+
+def test_segment_histogram_pins_union_mask():
+    """The per-tile segment histogram is exactly the live-doc count per
+    segment — the fold the doc-run arithmetic in docs/perf.md rests on."""
+    idx, _, _ = _world(8)
+    hist = np.asarray(segment_histogram(idx.doc_seg_mod, idx.doc_mask,
+                                        idx.n_seg))
+    assert hist.shape == (idx.m, idx.n_seg)
+    np.testing.assert_array_equal(hist.sum(axis=1),
+                                  np.asarray(idx.doc_mask).sum(axis=1))
+    dseg = np.asarray(idx.doc_seg_mod)
+    dmask = np.asarray(idx.doc_mask)
+    for c in (0, idx.m // 2, idx.m - 1):
+        np.testing.assert_array_equal(
+            hist[c], np.bincount(dseg[c][dmask[c]], minlength=idx.n_seg))
+
+
+# ---------------------------------------------------------------------------
+# interpret-mode kernel smoke subset (the kernels-interpret CI job)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=3, deadline=None)
+@given(
+    mu=st.sampled_from([0.7, 1.0]),
+    block_d=st.sampled_from([8, None]),
+)
+def test_doc_run_executor_kernel_smoke(mu, block_d):
+    """The Pallas doc-run executor end to end (interpret mode off-TPU):
+    tiny example budget, exactness at mu = 1 and true-score integrity +
+    counter sanity otherwise."""
+    idx, q, by_id = _world(3)
+    cfg = SearchConfig(k=5, mu=mu, eta=1.0, block_q=4, block_d=block_d,
+                       use_kernel=True, bounds_impl="gemm")
+    out = retrieve(idx, q, cfg)
+    _check_true_scores(out, by_id)
+    if mu == 1.0:
+        np.testing.assert_allclose(_sorted_scores(out),
+                                   _sorted_scores(_oracle(3, 5)),
+                                   rtol=1e-5, atol=1e-5)
+    assert np.all(np.asarray(out.n_walked_docs)
+                  <= np.asarray(out.n_scored_tiles) * idx.d_pad)
