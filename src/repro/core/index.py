@@ -61,6 +61,7 @@ def pack_clusters(
     seg_method: str = "random_uniform",
     dense_rep: np.ndarray | None = None,
     rng: np.random.Generator | None = None,
+    sort_segments: bool = True,
 ) -> dict[str, np.ndarray]:
     """Pack quantized docs into the (m, d_pad) slab layout + seg_max table.
 
@@ -69,6 +70,16 @@ def pack_clusters(
     tw_u8:     (n_docs, t_pad) quantized weights (0 at padding).
     doc_ids:   global id per row (defaults to arange) — compaction passes
                the surviving original ids through here.
+
+    With ``sort_segments`` (the default) each cluster's docs are laid out
+    *segment-contiguously*: segment assignment stays random (the Prop-4
+    model is about membership, not slot order), but slots are stable-
+    sorted by segment so segment j occupies exactly
+    ``[seg_offsets[c, j], seg_offsets[c, j + 1])`` — an admitted segment
+    is one physical doc run and the planner's run encoding is a prefix-
+    table gather. ``sort_segments=False`` keeps arrival order (the
+    pre-segment-major layout; ``seg_offsets`` degenerates to zeros and
+    ``sorted_upto`` to 0 so planning treats every slot as unsorted tail).
 
     Returns the host-side arrays of a :class:`ClusterIndex` (everything
     except ``scale``). Used by both the offline build and online
@@ -91,6 +102,8 @@ def pack_clusters(
     doc_seg = np.zeros((m, d_pad), np.int32)
     seg_max = np.zeros((m, n_seg, V), np.uint8)
     cluster_ndocs = np.zeros((m,), np.int32)
+    seg_offsets = np.zeros((m, n_seg + 1), np.int32)
+    sorted_upto = np.full((m,), d_pad if sort_segments else 0, np.int32)
 
     for c in range(m):
         members = np.nonzero(assign == c)[0]
@@ -98,10 +111,6 @@ def pack_clusters(
         cluster_ndocs[c] = nc
         if nc == 0:
             continue
-        doc_tids[c, :nc] = safe_tids[members]
-        doc_tw[c, :nc] = tw_u8[members]
-        doc_mask[c, :nc] = True
-        out_ids[c, :nc] = doc_ids_in[members]
 
         if seg_method == "random_uniform":
             seg = segmentation.random_uniform_segments(rng, nc, n_seg)
@@ -112,6 +121,19 @@ def pack_clusters(
                 np.asarray(dense_rep)[members], n_seg, rng=rng)
         else:
             raise ValueError(f"unknown seg_method {seg_method!r}")
+        seg = np.asarray(seg, np.int64)
+        if sort_segments:
+            # segment-major slot order: stable, so within a segment the
+            # original member order is preserved (what makes legacy-load
+            # re-sorting in lifecycle/persist.py bit-exact)
+            order = np.argsort(seg, kind="stable")
+            members, seg = members[order], seg[order]
+            seg_offsets[c, 1:] = np.cumsum(
+                np.bincount(seg, minlength=n_seg))
+        doc_tids[c, :nc] = safe_tids[members]
+        doc_tw[c, :nc] = tw_u8[members]
+        doc_mask[c, :nc] = True
+        out_ids[c, :nc] = doc_ids_in[members]
         doc_seg[c, :nc] = seg
 
         # segmented maxima over quantized weights
@@ -132,7 +154,8 @@ def pack_clusters(
     doc_seg_mod = (doc_seg % n_seg).astype(np.int32)
     return dict(doc_tids=doc_tids, doc_tw=doc_tw, doc_mask=doc_mask,
                 doc_ids=out_ids, doc_seg=doc_seg, doc_seg_mod=doc_seg_mod,
-                seg_max_stacked=seg_max_stacked,
+                seg_max_stacked=seg_max_stacked, seg_offsets=seg_offsets,
+                sorted_upto=sorted_upto,
                 cluster_ndocs=cluster_ndocs)
 
 
@@ -147,6 +170,7 @@ def build_index(
     seed: int = 0,
     scale: float | None = None,
     doc_ids: np.ndarray | None = None,
+    sort_segments: bool = True,
 ) -> ClusterIndex:
     """Assemble the padded forward index + segmented max-weight table.
 
@@ -182,7 +206,8 @@ def build_index(
 
     packed = pack_clusters(safe_tids, tw_u8, assign, m, n_seg, d_pad, V,
                            doc_ids=doc_ids, seg_method=seg_method,
-                           dense_rep=dense_rep, rng=rng)
+                           dense_rep=dense_rep, rng=rng,
+                           sort_segments=sort_segments)
 
     return ClusterIndex(
         doc_tids=jnp.asarray(packed["doc_tids"]),
@@ -192,6 +217,8 @@ def build_index(
         doc_seg=jnp.asarray(packed["doc_seg"]),
         doc_seg_mod=jnp.asarray(packed["doc_seg_mod"]),
         seg_max_stacked=jnp.asarray(packed["seg_max_stacked"]),
+        seg_offsets=jnp.asarray(packed["seg_offsets"]),
+        sorted_upto=jnp.asarray(packed["sorted_upto"]),
         scale=jnp.float32(scale),
         cluster_ndocs=jnp.asarray(packed["cluster_ndocs"]),
         vocab=V,

@@ -11,23 +11,32 @@ Pallas executor (kernels/score_cluster_batch) scalar-prefetches:
     DMA was already issued;
   * ``qblock`` — per admitted tile, the query *blocks* (``block_q``
     consecutive queries of the batch) containing at least one admitting
-    query, again compacted to the front. The executor's grid is blocked
-    over queries, so only these blocks' dense query maps are gathered
-    into VMEM — batch 256+ no longer pins the whole ``(n_q, V+1)`` map
-    block resident;
-  * *doc-run queues* — the second compaction level, under the tile
-    queue: the per-(query, tile) segment-admission masks are folded (via
-    the hoisted ``doc_seg_mod`` map) into a per-tile *union*
-    doc-admission mask over the whole batch, run-length encoded into
-    ``(start, length)`` pairs of admitted doc runs within each tile
-    (``drun_start`` / ``drun_len`` / ``n_drun``), and projected onto the
-    executor's doc-axis blocking as a compacted *doc sub-tile queue*
-    (``dblock`` / ``n_dblock``): sub-tiles of ``block_d`` consecutive
-    doc slots that intersect at least one run. Sub-tiles no run
-    intersects never enter the executor grid — at low segment-admission
-    rates (and for the dead padding tail of underfull clusters) the
-    executor skips intra-tile work too, the TPU analogue of the paper's
-    document skipping inside visited clusters;
+    query with a non-empty doc union, again compacted to the front. The
+    executor's grid is blocked over queries, so only these blocks' dense
+    query maps are gathered into VMEM — batch 256+ no longer pins the
+    whole ``(n_q, V+1)`` map block resident;
+  * *doc-run queues* — the second compaction level, keyed by
+    **(tile, query block)**: each query block folds its *own* union of
+    segment admissions (via the hoisted ``doc_seg_mod`` map) into a
+    per-(tile, qblock) doc-admission mask, encoded into ``(start,
+    length)`` doc runs and projected onto the executor's doc-axis
+    blocking as a compacted *doc sub-tile queue* (``dblock`` /
+    ``n_dblock``). Keying by query block instead of the whole batch is
+    what keeps doc skipping alive at batch 256: the batch-wide union
+    approaches "every segment admitted by someone" while a 16-query
+    block's union stays sparse (``SearchConfig.doc_union`` selects the
+    scope; ``"batch"`` reproduces the old batch-union behaviour for
+    comparison);
+  * under the **segment-major physical layout**
+    (``ClusterIndex.seg_offsets`` / ``sorted_upto``, core/index.py) run
+    encoding is a *prefix-table gather*: an admitted segment of the
+    sorted prefix is exactly one run ``[seg_offsets[j],
+    seg_offsets[j+1])`` clipped to ``sorted_upto``; only the unsorted
+    insert tail ``[sorted_upto, d_pad)`` falls back to per-doc mask-RLE.
+    Runs may cover tombstoned slots inside an admitted segment — they
+    are a *superset* of the union admission mask, and the executor's
+    residual in-kernel mask (``dmask_union``) keeps per-doc output
+    exact;
   * queue tails are *clamped* (padded by repeating the last live entry),
     so skipped grid steps re-map to the block already resident in VMEM
     and trigger no new HBM traffic.
@@ -74,27 +83,32 @@ class WavePlan:
                             wave (indexes admit/seg_admit/outputs).
     n_tiles:   () int32     number of admitted tiles (<= G).
     qblock:    (G, n_qb) int32  per compacted tile: indices of query
-                            blocks with >= 1 admitting query, compacted,
-                            tail clamped.
+                            blocks with >= 1 admitting query and a
+                            non-empty doc union, compacted, tail clamped.
     n_qblock:  (G,) int32   live query-block count per compacted tile.
     n_blocks:  () int32     total executor grid blocks with real work
                             (= sum of n_qblock over admitted tiles).
-    drun_start:(G, R) int32 per compacted tile: start doc slot of each
-                            admitted doc run (union over the batch),
+    drun_start:(G, n_qb, R) int32  per (compacted tile, compacted query-
+                            block slot): start doc slot of each admitted
+                            doc run of *that query block's* union,
                             compacted, tail clamped like the tile queue.
-    drun_len:  (G, R) int32 matching run lengths (0 past n_drun, so a
-                            clamped tail entry never admits anything).
-    n_drun:    (G,) int32   live run count per compacted tile.
-    dblock:    (G, n_db) int32  per compacted tile: indices of doc
-                            sub-tiles (``block_d`` consecutive slots)
-                            intersecting >= 1 run, compacted, clamped.
-    n_dblock:  (G,) int32   live doc sub-tile count per compacted tile.
-    dmask_union: (G, d_pad) bool  per compacted tile: the union
-                            doc-admission mask the runs encode (any
-                            query admits the doc's segment AND the doc
-                            is live) — the executor's in-kernel residual
-                            mask for docs a visited sub-tile carries
-                            outside every run.
+    drun_len:  (G, n_qb, R) int32  matching run lengths (0 past n_drun,
+                            so a clamped tail entry never admits
+                            anything).
+    n_drun:    (G, n_qb) int32  live run count per (tile, qblock slot).
+    dblock:    (G, n_qb, n_db) int32  per (tile, qblock slot): indices
+                            of doc sub-tiles (``block_d`` consecutive
+                            slots) intersecting that block's union,
+                            compacted, clamped.
+    n_dblock:  (G, n_qb) int32  live doc sub-tile count per (tile,
+                            qblock slot) — the executor's per-(g, qb)
+                            doc-axis clamp.
+    dmask_union: (G, n_qb, d_pad) bool  per (tile, qblock slot): the
+                            union doc-admission mask of that query block
+                            (any of its queries admits the doc's segment
+                            AND the doc is live) — the executor's
+                            in-kernel residual mask for docs a visited
+                            sub-tile carries outside the union.
     block_q:   static       queries per block (grid blocking factor).
     block_d:   static       doc slots per sub-tile (doc-axis blocking;
                             == d_pad disables intra-tile skipping).
@@ -125,19 +139,18 @@ class WavePlan:
 
     @property
     def n_db(self) -> int:
-        return self.dblock.shape[1]
+        return self.dblock.shape[-1]
 
     @property
     def d_pad(self) -> int:
-        return self.dmask_union.shape[1]
+        return self.dmask_union.shape[-1]
 
     def walked_docs(self) -> jax.Array:
         """() int32: doc slots the executor walks for this wave — each
-        (admitted tile, live query block) pair scores that tile's
-        ``n_dblock * block_d`` doc slots. Equals
+        live (admitted tile, query block) pair scores its own
+        ``n_dblock[g, qb] * block_d`` doc slots. Equals
         ``n_blocks * d_pad`` iff no sub-tile is skipped."""
-        return ((self.n_qblock * self.n_dblock).sum() * self.block_d
-                ).astype(jnp.int32)
+        return (self.n_dblock.sum() * self.block_d).astype(jnp.int32)
 
 
 def resolve_block_d(d_pad: int, block_d: int | None) -> int:
@@ -189,15 +202,17 @@ def segment_histogram(doc_seg_mod: jax.Array, doc_mask: jax.Array,
 
 def _union_doc_admission(seg_admit_any: jax.Array, doc_seg_mod: jax.Array,
                          doc_mask: jax.Array) -> jax.Array:
-    """(G, d_pad) bool: docs admitted by >= 1 query of the batch.
+    """(..., G, d_pad) bool: docs admitted by the given segment union.
 
-    seg_admit_any: (G, n_seg_eff) union segment admission. n_seg_eff == 1
-    is the collapsed (anytime) table — every live doc of an admitted
-    tile is admitted, no segment gather needed."""
+    seg_admit_any: (..., G, n_seg_eff) union segment admission (leading
+    axes — e.g. a query-block axis — broadcast against the (G, d_pad)
+    metadata). n_seg_eff == 1 is the collapsed (anytime) table — every
+    live doc of an admitted tile is admitted, no segment gather needed."""
     if seg_admit_any.shape[-1] == 1:
         return doc_mask & seg_admit_any
-    return doc_mask & jnp.take_along_axis(seg_admit_any, doc_seg_mod,
-                                          axis=-1)
+    idx = jnp.broadcast_to(doc_seg_mod,
+                           seg_admit_any.shape[:-1] + doc_seg_mod.shape[-1:])
+    return doc_mask & jnp.take_along_axis(seg_admit_any, idx, axis=-1)
 
 
 def _doc_runs(admit_docs: jax.Array,
@@ -224,78 +239,157 @@ def _doc_runs(admit_docs: jax.Array,
 
 def runs_to_mask(starts: jax.Array, lens: jax.Array, n_drun: jax.Array,
                  d_pad: int) -> jax.Array:
-    """Reconstruct the (G, d_pad) union admission mask from run queues —
-    the executor-facing semantics (ref path + property tests)."""
-    slot = jnp.arange(d_pad, dtype=jnp.int32)                # (dp,)
-    live = (jnp.arange(starts.shape[1], dtype=jnp.int32)[None]
-            < n_drun[:, None])                               # (G, R)
-    inside = ((slot[None, None, :] >= starts[:, :, None])
-              & (slot[None, None, :] < (starts + lens)[:, :, None])
-              & live[:, :, None])                            # (G, R, dp)
-    return inside.any(axis=1)
+    """Reconstruct the (..., d_pad) admission mask a run queue encodes —
+    the executor-facing semantics (ref path + property tests). Works for
+    any leading batch shape (per-tile or per-(tile, qblock) queues).
+    Note the reconstruction is a *superset* of the union admission mask
+    under the segment-major layout: prefix-table runs cover tombstoned
+    slots inside admitted segments (the residual mask owns those)."""
+    slot = jnp.arange(d_pad, dtype=jnp.int32)
+    R = starts.shape[-1]
+    live = jnp.arange(R, dtype=jnp.int32) < n_drun[..., None]  # (..., R)
+    inside = ((slot >= starts[..., None])
+              & (slot < (starts + lens)[..., None])
+              & live[..., None])                             # (..., R, dp)
+    return inside.any(axis=-2)
 
 
 def plan_wave(cids: jax.Array, live: jax.Array, admit: jax.Array,
               seg_admit: jax.Array, block_q: int,
               doc_seg_mod: jax.Array, doc_mask: jax.Array,
-              block_d: int | None = None) -> WavePlan:
+              block_d: int | None = None,
+              seg_offsets: jax.Array | None = None,
+              sorted_upto: jax.Array | None = None,
+              union_scope: str = "qblock") -> WavePlan:
     """Compact a wave's admission masks into dense work queues.
 
     cids (G,) int32; live (G,) bool; admit (n_q, G) bool;
     seg_admit (n_q, G, n_seg) bool; doc_seg_mod/doc_mask (G, d_pad) the
     wave's gathered *pre-modded* segment map (ClusterIndex.doc_seg_mod)
-    and liveness. ``block_q`` must divide the padded batch the executor
-    will run (callers pad; n_q here may be unpadded — the trailing
-    partial block simply admits fewer queries). ``block_d`` is resolved
-    via :func:`resolve_block_d` (None => whole-tile execution).
-    """
+    and liveness; seg_offsets (G, n_seg + 1) / sorted_upto (G,) the
+    wave's gathered segment-major layout metadata (None falls back to
+    pure mask-RLE run encoding, treating every slot as unsorted tail).
+    ``block_q`` must divide the padded batch the executor will run
+    (callers pad; n_q here may be unpadded — the trailing partial block
+    simply admits fewer queries). ``block_d`` is resolved via
+    :func:`resolve_block_d` (None => whole-tile execution).
+    ``union_scope`` keys the doc-run/sub-tile queues by query block
+    (``"qblock"``, the default) or replicates the whole-batch union into
+    every block (``"batch"``, the pre-per-qblock behaviour)."""
+    if union_scope not in ("qblock", "batch"):
+        raise ValueError(f"unknown union_scope {union_scope!r}")
     n_q, G = admit.shape
     dp = doc_mask.shape[-1]
+    n_seg_eff = seg_admit.shape[-1]
     block_d = resolve_block_d(dp, block_d)
     n_qb = -(-n_q // block_q)
     pad = n_qb * block_q - n_q
     admit_p = jnp.pad(admit, ((0, pad), (0, 0))) if pad else admit
+    seg_p = (jnp.pad(seg_admit, ((0, pad), (0, 0), (0, 0)))
+             if pad else seg_admit)
 
-    # union doc admission over the batch (segment fold via the hoisted
-    # modded map): a tile whose union is empty — every segment pruned for
-    # every admitting query, or only tombstones/padding — is dropped from
-    # the tile queue outright, it could only produce masked output
-    docs_any = _union_doc_admission(seg_admit.any(axis=0), doc_seg_mod,
-                                    doc_mask)                # (G, dp)
+    # per-query-block segment unions: the union over block_q consecutive
+    # queries instead of the whole batch — at batch 256 a block's union
+    # stays sparse where the batch union saturates
+    seg_qb = seg_p.reshape(n_qb, block_q, G, n_seg_eff).any(axis=1)
+    if union_scope == "batch":
+        seg_qb = jnp.broadcast_to(seg_qb.any(axis=0, keepdims=True),
+                                  seg_qb.shape)              # (n_qb, G, s)
+    # per-qblock union doc admission (segment fold via the hoisted modded
+    # map), wave-position space
+    dmask_qb = _union_doc_admission(seg_qb, doc_seg_mod,
+                                    doc_mask)                # (n_qb, G, dp)
 
+    # a tile whose batch union is empty — every segment pruned for every
+    # admitting query, or only tombstones/padding — is dropped from the
+    # tile queue outright, it could only produce masked output
+    docs_any = dmask_qb.any(axis=0)                          # (G, dp)
     tile_keep = admit.any(axis=0) & live & docs_any.any(axis=-1)   # (G,)
     tile_pos, n_tiles = _compact_front(tile_keep)
     tile_cids = cids[tile_pos]
 
-    # per wave-position: which query blocks contain an admitting query
+    # per wave-position: query blocks with an admitting query AND a
+    # non-empty doc union (a block whose queries admit the tile but
+    # prune every segment would only produce masked output)
     blk_any = admit_p.reshape(n_qb, block_q, G).any(axis=1)  # (n_qb, G)
-    blk_any = blk_any[:, tile_pos].T                         # (G, n_qb)
-    qblock, n_qblock = _compact_front(blk_any)
+    blk_keep = (blk_any & dmask_qb.any(axis=-1))[:, tile_pos].T  # (G, n_qb)
+    qblock, n_qblock = _compact_front(blk_keep)
     # tiles beyond n_tiles contribute no work regardless of their clamped
     # queue contents
     t = jnp.arange(G, dtype=jnp.int32)
     n_qblock = jnp.where(t < n_tiles, n_qblock, 0)
 
-    # doc-run queues, in compacted-slot order (aligned with tile_cids).
-    # The RLE is O(G * dp) scalar work per wave — marginal next to the
-    # O(n_q * G * dp) doc-admission masking every wave already pays —
-    # and storing the runs on the plan keeps the executor-facing
-    # sub-tile queue, the ref oracle (score_runs_ref) and the property
-    # suite all reading one canonical encoding.
-    docs_c = docs_any[tile_pos]                              # (G, dp)
-    drun_start, drun_len, n_drun = _doc_runs(docs_c, dp // 2 + 1)
+    # gather the union masks and segment unions into compacted
+    # (tile slot, qblock slot) order — aligned with tile_cids and qblock
+    dmask_c = jnp.take_along_axis(
+        jnp.transpose(dmask_qb, (1, 0, 2))[tile_pos],
+        qblock[:, :, None], axis=1)                          # (G, n_qb, dp)
+    seg_qb_c = jnp.take_along_axis(
+        jnp.transpose(seg_qb, (1, 0, 2))[tile_pos],
+        qblock[:, :, None], axis=1)                          # (G, n_qb, s)
+
+    # ---- doc-run queues, per (tile, qblock slot) -----------------------
+    # Segment-major prefix gather: an admitted segment of the sorted
+    # prefix is ONE run [off[j], off[j+1]) clipped to sorted_upto — no
+    # per-doc scan. Only the unsorted insert tail [sorted_upto, dp) is
+    # mask-RLE'd. Runs are a superset of the union mask (they may cover
+    # tombstones inside admitted segments); dmask_c stays the executor's
+    # exact residual mask.
+    if seg_offsets is None or sorted_upto is None:
+        off = jnp.zeros((G, n_seg_eff + 1), jnp.int32)
+        su = jnp.zeros((G,), jnp.int32)
+        off_total = off[:, -1:]
+    else:
+        off = seg_offsets[tile_pos].astype(jnp.int32)        # (G, n_seg+1)
+        su = sorted_upto[tile_pos].astype(jnp.int32)         # (G,)
+        off_total = off[:, -1:]
+    if n_seg_eff == 1:
+        # collapsed (anytime) table: the whole sorted prefix is one run
+        seg_starts = jnp.zeros((G, 1), jnp.int32)
+        seg_ends = jnp.minimum(off_total, su[:, None])
+    else:
+        seg_starts = jnp.minimum(off[:, :-1], su[:, None])
+        seg_ends = jnp.minimum(off[:, 1:], su[:, None])
+    seg_lens = jnp.maximum(seg_ends - seg_starts, 0)         # (G, s)
+    cand_seg_start = jnp.broadcast_to(seg_starts[:, None],
+                                      (G, n_qb, n_seg_eff))
+    cand_seg_len = jnp.broadcast_to(seg_lens[:, None],
+                                    (G, n_qb, n_seg_eff))
+    keep_seg = seg_qb_c & (cand_seg_len > 0)
+
+    slot = jnp.arange(dp, dtype=jnp.int32)
+    tail_mask = dmask_c & (slot >= su[:, None, None])        # (G, n_qb, dp)
+    rt = dp // 2 + 1
+    ts, tl, tn = _doc_runs(tail_mask.reshape(G * n_qb, dp), rt)
+    ts = ts.reshape(G, n_qb, rt)
+    tl = tl.reshape(G, n_qb, rt)
+    tn = tn.reshape(G, n_qb)
+    keep_tail = jnp.arange(rt, dtype=jnp.int32) < tn[..., None]
+
+    cand_start = jnp.concatenate([cand_seg_start, ts], axis=-1)
+    cand_len = jnp.concatenate([cand_seg_len, tl], axis=-1)
+    cand_keep = jnp.concatenate([keep_seg, keep_tail], axis=-1)
+    ridx, n_drun = _compact_front(cand_keep)
+    drun_start = jnp.take_along_axis(cand_start, ridx, axis=-1)
+    drun_len = jnp.take_along_axis(cand_len, ridx, axis=-1)
+    rslot = jnp.arange(ridx.shape[-1], dtype=jnp.int32)
+    drun_len = jnp.where(rslot < n_drun[..., None], drun_len, 0)
+
+    # doc sub-tile queue per (tile, qblock slot): the executor's doc-axis
+    # clamp — grid stays (G, n_qb, n_db), n_db clamps per (g, qb)
     n_db = dp // block_d
-    sub_any = docs_c.reshape(G, n_db, block_d).any(axis=-1)  # (G, n_db)
+    sub_any = dmask_c.reshape(G, n_qb, n_db, block_d).any(axis=-1)
     dblock, n_dblock = _compact_front(sub_any)
-    n_drun = jnp.where(t < n_tiles, n_drun, 0)
-    n_dblock = jnp.where(t < n_tiles, n_dblock, 0)
+    qb_live = jnp.arange(n_qb, dtype=jnp.int32)[None] < n_qblock[:, None]
+    n_drun = jnp.where(qb_live, n_drun, 0)
+    n_dblock = jnp.where(qb_live, n_dblock, 0)
     return WavePlan(
         cids=cids, live=live, admit=admit, seg_admit=seg_admit,
         tile_cids=tile_cids, tile_pos=tile_pos, n_tiles=n_tiles,
         qblock=qblock, n_qblock=n_qblock,
         n_blocks=n_qblock.sum().astype(jnp.int32),
         drun_start=drun_start, drun_len=drun_len, n_drun=n_drun,
-        dblock=dblock, n_dblock=n_dblock, dmask_union=docs_c,
+        dblock=dblock, n_dblock=n_dblock, dmask_union=dmask_c,
         block_q=block_q, block_d=block_d)
 
 

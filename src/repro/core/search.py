@@ -73,6 +73,13 @@ from repro.kernels.score_cluster_batch.ref import score_admitted_ref
 NEG = jnp.float32(jnp.finfo(jnp.float32).min)
 
 
+# `engine="auto"` routes tiny batches to the per-query reference engine:
+# below this batch size the batched planner's per-wave queue compaction
+# costs more than the tile reuse saves (BENCH_retrieval.json measured
+# paired_speedup < 1 at batch 1; pinned by tests/test_batched_engine.py)
+AUTO_ENGINE_MIN_BATCH = 4
+
+
 @dataclasses.dataclass(frozen=True)
 class SearchConfig:
     k: int = 10
@@ -84,12 +91,25 @@ class SearchConfig:
     bounds_impl: str = "gather"        # gather | gemm
     use_kernel: bool = False           # pallas kernels where available
     doc_prune: bool = True             # segment-level document pruning
-    engine: str = "batched"            # batched | per_query (reference)
-    block_q: int = 64                  # executor grid blocking over queries
-    block_v: int | None = None         # executor vocab chunking (None: full)
-    block_d: int | None = 16           # executor doc sub-tile size; rounded
-                                       # up to a divisor of d_pad (None:
-                                       # whole-tile, no doc-run skipping)
+    engine: str = "auto"               # auto | batched | per_query;
+                                       # auto routes batches below
+                                       # AUTO_ENGINE_MIN_BATCH to the
+                                       # per_query path
+    block_q: int | str = "auto"        # executor grid blocking over queries
+                                       # ("auto": derived from batch size +
+                                       # VMEM budget, see autotune_blocks)
+    block_v: int | str | None = "auto"  # executor vocab chunking (None:
+                                       # full-V; "auto": chunk only when
+                                       # the map block would blow VMEM)
+    block_d: int | str | None = "auto"  # executor doc sub-tile size;
+                                       # rounded up to a divisor of d_pad
+                                       # (None: whole-tile, no doc-run
+                                       # skipping; "auto": from geometry +
+                                       # the VMEM budget remainder)
+    doc_union: str = "qblock"          # doc-run queue scope: per query
+                                       # block (keeps doc skipping alive
+                                       # at batch 256) | "batch" (legacy
+                                       # batch-wide union, for comparison)
 
     def __post_init__(self):
         if not (0.0 < self.mu <= self.eta <= 1.0):
@@ -97,12 +117,76 @@ class SearchConfig:
                 f"need 0 < mu <= eta <= 1, got mu={self.mu} eta={self.eta}")
         if self.method not in ("asc", "anytime", "anytime_star"):
             raise ValueError(f"unknown method {self.method!r}")
-        if self.engine not in ("batched", "per_query"):
+        if self.engine not in ("auto", "batched", "per_query"):
             raise ValueError(f"unknown engine {self.engine!r}")
-        if self.block_q < 1:
-            raise ValueError(f"block_q must be >= 1, got {self.block_q}")
-        if self.block_d is not None and self.block_d < 1:
-            raise ValueError(f"block_d must be >= 1, got {self.block_d}")
+        if self.block_q != "auto" and (not isinstance(self.block_q, int)
+                                       or self.block_q < 1):
+            raise ValueError(f"block_q must be >= 1 or 'auto', "
+                             f"got {self.block_q!r}")
+        for name in ("block_d", "block_v"):
+            v = getattr(self, name)
+            if v is not None and v != "auto" and (not isinstance(v, int)
+                                                  or v < 1):
+                raise ValueError(f"{name} must be >= 1, None or 'auto', "
+                                 f"got {v!r}")
+        if self.doc_union not in ("qblock", "batch"):
+            raise ValueError(f"unknown doc_union {self.doc_union!r}")
+
+
+# executor resident-set target for block autotuning: roughly a quarter
+# of a v5e core's 16 MiB VMEM, leaving room for double buffering and the
+# scalar-prefetch queues (docs/perf.md §VMEM blocking math)
+VMEM_BLOCK_BUDGET = 4 * 2**20
+
+
+def autotune_blocks(d_pad: int, t_pad: int, n_seg: int, vocab: int,
+                    n_q: int) -> tuple[int, int, int | None]:
+    """Derive (block_q, block_d, block_v) from index geometry + batch
+    size under the VMEM budget. The resident set of one executor step is
+
+        4 * BQ * BV          query-map block
+      + 3 * BD * t_pad       doc sub-tile ids (2B) + weights (1B)
+      + 4 * BQ * BD          output block
+
+    (docs/perf.md). block_q is the power of two covering the batch,
+    capped at 64; block_v chunks the map only when the full-V block
+    would exceed half the budget; block_d spends the remainder but never
+    exceeds ~one sub-tile per two segments (coarser blocks can't skip
+    what segment admission prunes). Explicit SearchConfig values
+    override each knob independently (resolve_blocks)."""
+    bq = 1
+    while bq < min(64, max(n_q, 1)):
+        bq *= 2
+    v_cols = vocab + 1
+    if 4 * bq * v_cols <= VMEM_BLOCK_BUDGET // 2:
+        bv = None                       # full-V gather, no chunk masking
+        map_bytes = 4 * bq * v_cols
+    else:
+        bv = 512
+        while 4 * bq * bv * 2 <= VMEM_BLOCK_BUDGET // 2:
+            bv *= 2
+        map_bytes = 4 * bq * bv
+    rem = max(VMEM_BLOCK_BUDGET - map_bytes, 0)
+    bd_cap = max(8, rem // (3 * t_pad + 4 * bq))
+    bd_req = max(8, min(int(bd_cap),
+                        max(1, d_pad // max(2 * n_seg, 4))))
+    return bq, resolve_block_d(d_pad, bd_req), bv
+
+
+def resolve_blocks(index: ClusterIndex, n_q: int,
+                   cfg: SearchConfig) -> tuple[int, int, int | None]:
+    """Resolve the executor blocking factors for this (index, batch):
+    ``"auto"`` entries come from :func:`autotune_blocks`, explicit
+    SearchConfig values pass through untouched (block_d still rounds up
+    to a divisor of d_pad)."""
+    bq, bd, bv = cfg.block_q, cfg.block_d, cfg.block_v
+    if "auto" in (bq, bd, bv):
+        a_bq, a_bd, a_bv = autotune_blocks(index.d_pad, index.t_pad,
+                                           index.n_seg, index.vocab, n_q)
+        bq = a_bq if bq == "auto" else bq
+        bd = a_bd if bd == "auto" else bd
+        bv = a_bv if bv == "auto" else bv
+    return bq, resolve_block_d(index.d_pad, bd), bv
 
 
 def score_docs_ref(doc_tids: jax.Array, doc_tw: jax.Array, qmap: jax.Array,
@@ -278,14 +362,16 @@ def _search_one_query(index: ClusterIndex, qmap: jax.Array,
 def _plan_admission(cfg: SearchConfig, *, cids, glive, done, theta,
                     max_s_w, avg_s_w, key_w, seg_b_w, rank_w,
                     n_clusters, n_pruned, budget, dseg_mod_w, dmask_w,
-                    block_d) -> tuple[WavePlan, jax.Array]:
+                    block_q, block_d, soff_w=None,
+                    su_w=None) -> tuple[WavePlan, jax.Array]:
     """Planner half of one wave: (mu, eta)/segment admission + budget
     rank-horizon, compacted into the wave's work queues (tile,
-    query-block, and doc-run/sub-tile levels).
+    query-block, and per-qblock doc-run/sub-tile levels).
 
     The ``_w`` arrays are already sliced to the wave: max_s_w/avg_s_w/
     key_w/rank_w (n_q, G), seg_b_w (n_q, G, n_seg), dseg_mod_w/dmask_w
-    (G, d_pad). Returns (plan, n_newly_pruned)."""
+    (G, d_pad), soff_w (G, n_seg + 1)/su_w (G,) the segment-major layout
+    metadata. Returns (plan, n_newly_pruned)."""
     mu = jnp.float32(cfg.mu)
     eta = jnp.float32(cfg.eta)
 
@@ -308,8 +394,10 @@ def _plan_admission(cfg: SearchConfig, *, cids, glive, done, theta,
     else:
         seg_admit = jnp.ones_like(seg_b_w, dtype=bool)
     seg_admit = seg_admit & admit[:, :, None]
-    plan = plan_wave(cids, glive, admit, seg_admit, cfg.block_q,
-                     dseg_mod_w, dmask_w, block_d=block_d)
+    plan = plan_wave(cids, glive, admit, seg_admit, block_q,
+                     dseg_mod_w, dmask_w, block_d=block_d,
+                     seg_offsets=soff_w, sorted_upto=su_w,
+                     union_scope=cfg.doc_union)
     return plan, newly_pruned
 
 
@@ -333,9 +421,10 @@ def _execute_wave(index: ClusterIndex, plan: WavePlan, qmaps: jax.Array,
         dmask = index.doc_mask[plan.cids]
     if cfg.use_kernel:
         from repro.kernels.score_cluster_batch import ops as scb_ops
+        block_v = resolve_blocks(index, qmaps.shape[0], cfg)[2]
         return scb_ops.score_admitted(
             index.doc_tids, index.doc_tw, dseg_mod, dmask, qmaps, plan,
-            index.scale, block_v=cfg.block_v)
+            index.scale, block_v=block_v)
 
     def dense(_):
         tids = index.doc_tids[plan.cids]                    # (G, dp, tp)
@@ -371,8 +460,8 @@ def _search_batch(index: ClusterIndex, qmaps: jax.Array, seg_b: jax.Array,
     n_q = order_key.shape[0]
     n_groups = -(-m // G)
     m_padded = n_groups * G
-    n_qb = -(-n_q // cfg.block_q)
-    block_d = resolve_block_d(dp, cfg.block_d)
+    block_q, block_d, _ = resolve_blocks(index, n_q, cfg)
+    n_qb = -(-n_q // block_q)
 
     budget = _resolve_budget(cfg, m, budget)
     mu = jnp.float32(cfg.mu)
@@ -420,7 +509,9 @@ def _search_batch(index: ClusterIndex, qmaps: jax.Array, seg_b: jax.Array,
             rank_w=rank[:, cids], n_clusters=n_clusters,
             n_pruned=n_pruned, budget=budget,
             dseg_mod_w=index.doc_seg_mod[cids],
-            dmask_w=index.doc_mask[cids], block_d=block_d)
+            dmask_w=index.doc_mask[cids], block_q=block_q,
+            block_d=block_d, soff_w=index.seg_offsets[cids],
+            su_w=index.sorted_upto[cids])
 
     first_wave = (shared_p[:G], jnp.zeros((G,), bool),
                   jnp.zeros((n_q,), bool), jnp.full((n_q,), NEG),
@@ -550,7 +641,17 @@ def _retrieve_arrays(index: ClusterIndex, queries: QueryBatch,
     stats = cluster_bounds(index, queries, impl=cfg.bounds_impl,
                            use_kernel=cfg.use_kernel, qmaps=qmaps)
     seg_b, max_s, avg_s, order_key = _method_stats(stats, cfg)
-    if cfg.engine == "per_query":
+    engine = cfg.engine
+    if engine == "auto":
+        # tiny batches can't amortize the batched planner (measured
+        # regression at batch 1 — see AUTO_ENGINE_MIN_BATCH); batch size
+        # is a trace-time shape, so the routing costs nothing at runtime.
+        # Plan recording only exists on the batched engine, so it wins
+        # the route regardless of batch size.
+        engine = ("per_query" if (queries.n_queries < AUTO_ENGINE_MIN_BATCH
+                                  and not record_plans)
+                  else "batched")
+    if engine == "per_query":
         if record_plans:
             raise ValueError("plan recording requires engine='batched'")
         fn = jax.vmap(

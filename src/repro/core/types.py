@@ -123,6 +123,8 @@ class QueryBatch:
         "doc_seg",
         "doc_seg_mod",
         "seg_max_stacked",
+        "seg_offsets",
+        "sorted_upto",
         "scale",
         "cluster_ndocs",
     ),
@@ -156,6 +158,24 @@ class ClusterIndex:
               concatenating a per-call uint8 copy, and the whole table
               still shards on the leading cluster axis. Maintained at
               build/compaction time and max-folded by online inserts.
+    seg_offsets: (m, n_seg + 1) int32 — per-cluster *segment prefix
+              table* of the segment-major physical layout: pack_clusters
+              lays each cluster's docs out segment-contiguously (doc_seg
+              stays random — only the slot order sorts), so segment j of
+              cluster c occupies slots [seg_offsets[c, j],
+              seg_offsets[c, j + 1]) and seg_offsets[c, n_seg] is the
+              packed live count. Planning turns an admitted segment into
+              exactly one doc run by gathering this table (core/plan.py)
+              instead of run-length-encoding a per-doc mask.
+    sorted_upto: (m,) int32 — how many leading slots of each cluster
+              still obey the segment-major layout. d_pad right after
+              pack/compaction; online inserts append into the unsorted
+              tail [sorted_upto, d_pad) (reusing a tombstoned slot
+              inside the sorted prefix shrinks it — see
+              lifecycle/mutable.py), and the planner falls back to
+              mask-RLE for the tail only. Tombstones inside the sorted
+              prefix do NOT shrink it: a run may cover dead slots, the
+              executor's residual mask keeps per-doc output exact.
     scale:    () float32                w_fp = w_u8 * scale.
     cluster_ndocs: (m,) int32           live docs per cluster.
 
@@ -170,6 +190,8 @@ class ClusterIndex:
     doc_seg: jax.Array
     doc_seg_mod: jax.Array
     seg_max_stacked: jax.Array
+    seg_offsets: jax.Array
+    sorted_upto: jax.Array
     scale: jax.Array
     cluster_ndocs: jax.Array
     vocab: int
@@ -217,7 +239,8 @@ class ClusterIndex:
             x.size * x.dtype.itemsize
             for x in (self.doc_tids, self.doc_tw, self.doc_mask,
                       self.doc_ids, self.doc_seg, self.doc_seg_mod,
-                      self.seg_max_stacked)
+                      self.seg_max_stacked, self.seg_offsets,
+                      self.sorted_upto)
         )
 
 
@@ -246,11 +269,11 @@ class TopK:
     tiles. Their ratio is the frontier-compaction ratio *within* one
     engine — never compare the raw counts across engines.
     n_walked_docs: (n_q,) int32 — document slots the executor actually
-    walks (doc-run queue compaction, core/plan.py): for the batched
-    engine the batch-level sum over admitted tiles of
-    ``n_qblock * n_dblock * block_d``, replicated per query; for the
-    per-query reference engine (whole-tile execution)
-    ``n_scored_tiles * d_pad`` exactly. Invariants (pinned by
+    walks (per-query-block doc-run compaction, core/plan.py): for the
+    batched engine the batch-level sum over live (admitted tile, query
+    block) pairs of that pair's own ``n_dblock * block_d``, replicated
+    per query; for the per-query reference engine (whole-tile
+    execution) ``n_scored_tiles * d_pad`` exactly. Invariants (pinned by
     tests/test_rank_safety_property.py): ``n_walked_docs <=
     n_scored_tiles * d_pad`` with equality iff no doc run is skipped,
     and every admitted doc (``n_scored_docs``) lies inside a walked run.

@@ -10,14 +10,17 @@ Two oracles at the two compaction levels:
 
   * :func:`score_admitted_ref` scores densely and masks with the
     planner's per-query doc admission — the semantic ground truth;
-  * :func:`score_runs_ref` mimics the executor's *visitation*: it only
-    scores doc slots inside walked sub-tiles (the plan's compacted
-    ``dblock`` queue, i.e. sub-tiles intersecting an admitted doc run)
-    and treats everything the grid never visits as NEG. Because every
-    admitted doc lies inside some run (the planner folds the union
-    admission into the runs), both oracles are equal — the equality *is*
-    the rank-safety argument for doc-level queue compaction, and the
-    property suite pins it.
+  * :func:`score_runs_ref` mimics the executor's *visitation*: for each
+    query it only scores doc slots its own query block walks (the
+    plan's per-(tile, qblock) compacted ``dblock`` queue, i.e.
+    sub-tiles intersecting that block's union) inside that block's run
+    queue, and treats everything the grid never visits as NEG. Because
+    every doc a query admits lies inside some run of *its own block's*
+    union by construction (the planner folds each block's union into
+    its runs — under the segment-major layout a run may additionally
+    cover tombstoned slots, which per-query admission masks anyway),
+    both oracles are equal — the equality *is* the rank-safety argument
+    for per-query-block doc compaction, and the property suite pins it.
 
 The Pallas kernel only ever touches the compacted queues and is
 equivalence-tested against both.
@@ -44,15 +47,47 @@ def _dense_scores(doc_tids: jax.Array, doc_tw: jax.Array,
 
 
 def walked_doc_slots(plan: WavePlan) -> jax.Array:
-    """(G, d_pad) bool: doc slots inside a *walked* sub-tile of each
-    compacted tile slot — the executor's doc-axis visitation set."""
-    G, n_db = plan.dblock.shape
-    sub = (jnp.arange(n_db, dtype=jnp.int32)[None]
-           < plan.n_dblock[:, None])                        # (G, n_db)
-    visited = jnp.zeros((G, n_db), bool).at[
-        jnp.arange(G, dtype=jnp.int32)[:, None], plan.dblock
-    ].max(sub)
-    return jnp.repeat(visited, plan.block_d, axis=1)
+    """(G, n_qb, d_pad) bool in (compacted tile slot, RAW query block)
+    space: doc slots inside a *walked* sub-tile of that (tile, query
+    block) — the executor's per-qblock doc-axis visitation set. Rows of
+    query blocks absent from a tile's queue are all False."""
+    G, n_qb, n_db = plan.dblock.shape
+    sub = (jnp.arange(n_db, dtype=jnp.int32)[None, None]
+           < plan.n_dblock[:, :, None])                    # (G, n_qb, n_db)
+    gi = jnp.arange(G, dtype=jnp.int32)[:, None, None]
+    qi = jnp.arange(n_qb, dtype=jnp.int32)[None, :, None]
+    visited = jnp.zeros((G, n_qb, n_db), bool).at[
+        gi, qi, plan.dblock].max(sub)
+    walked_c = jnp.repeat(visited, plan.block_d, axis=-1)  # compacted qb
+    return _scatter_qb(plan, walked_c)
+
+
+def _scatter_qb(plan: WavePlan, per_slot: jax.Array) -> jax.Array:
+    """Scatter (G, n_qb, dp) data from compacted qblock-slot order back
+    to raw query-block indices (clamped tail repeats contribute False)."""
+    G, n_qb = plan.qblock.shape
+    qb_live = (jnp.arange(n_qb, dtype=jnp.int32)[None]
+               < plan.n_qblock[:, None])                   # (G, n_qb)
+    gi = jnp.arange(G, dtype=jnp.int32)[:, None]
+    return jnp.zeros_like(per_slot).at[gi, plan.qblock].max(
+        per_slot & qb_live[..., None])
+
+
+def _visited_by_query(plan: WavePlan, n_q: int) -> jax.Array:
+    """(n_q, G, d_pad) bool: doc slots the executor walks *and* that lie
+    inside a run, for each query's own block — in wave-position space."""
+    G, n_qb = plan.qblock.shape
+    dp = plan.d_pad
+    in_run = runs_to_mask(plan.drun_start, plan.drun_len, plan.n_drun,
+                          dp)                              # (G, n_qb, dp)
+    vis = walked_doc_slots(plan) & _scatter_qb(plan, in_run)
+    # scatter compacted tile slots back to wave positions (slots past
+    # n_tiles are clamped repeats — max() keeps the real slot's mask)
+    t = jnp.arange(G, dtype=jnp.int32)
+    by_pos = jnp.zeros_like(vis).at[plan.tile_pos].max(
+        vis & (t < plan.n_tiles)[:, None, None])           # (G, n_qb, dp)
+    qb_of = jnp.arange(n_q, dtype=jnp.int32) // plan.block_q
+    return jnp.transpose(by_pos, (1, 0, 2))[qb_of]         # (n_q, G, dp)
 
 
 def score_admitted_ref(doc_tids: jax.Array, doc_tw: jax.Array,
@@ -73,20 +108,14 @@ def score_runs_ref(doc_tids: jax.Array, doc_tw: jax.Array,
                    qmaps: jax.Array, plan: WavePlan,
                    scale: jax.Array) -> jax.Array:
     """Run-queue-faithful oracle: scores only doc slots the executor
-    walks (sub-tiles intersecting an admitted run, looked up in
-    compacted-slot order via ``tile_pos``), masks residual in-sub-tile
-    docs with the union run mask, then applies per-query admission.
-    Output is identical to :func:`score_admitted_ref` — admitted docs
-    are never outside a run."""
-    G, dp = doc_mask.shape
-    in_run = runs_to_mask(plan.drun_start, plan.drun_len, plan.n_drun, dp)
-    walked = walked_doc_slots(plan) & in_run                # (G, dp) slots
-    # scatter compacted-slot masks back to wave positions (slots past
-    # n_tiles are clamped repeats — max() keeps the real slot's mask)
-    t = jnp.arange(G, dtype=jnp.int32)
-    by_pos = jnp.zeros((G, dp), bool).at[plan.tile_pos].max(
-        walked & (t < plan.n_tiles)[:, None])
+    walks for each query's own block (that block's sub-tile queue,
+    looked up in compacted-slot order via ``tile_pos``/``qblock``),
+    masks residual in-sub-tile docs with the block's run queue, then
+    applies per-query admission. Output is identical to
+    :func:`score_admitted_ref` — a doc a query admits is never outside
+    its own block's runs."""
+    n_q = qmaps.shape[0]
     scores = _dense_scores(doc_tids, doc_tw, qmaps, scale)
-    scores = jnp.where(by_pos[None], scores, NEG)
+    scores = jnp.where(_visited_by_query(plan, n_q), scores, NEG)
     return jnp.where(doc_admission(plan, doc_seg_mod, doc_mask), scores,
                      NEG)

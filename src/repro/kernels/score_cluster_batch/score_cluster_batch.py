@@ -18,13 +18,17 @@ index maps, so the grid walks only real work:
     footprint is ``BQ * V_chunk`` floats instead of the whole
     ``(n_q, V + 1)`` map, which is what lets batch 256+ fit VMEM;
   * the tile's doc axis is blocked into ``block_d``-slot sub-tiles and
-    step ``(i, j, d)`` loads sub-tile ``dblock[i, d]`` — the planner's
-    doc-run queues projected onto the blocking, so a sub-tile no
-    admitted doc run intersects never enters the grid either: the
-    paper's in-cluster document skipping, applied to both the DMA and
-    the multiply-adds. Residual docs a visited sub-tile carries outside
-    every run are masked to NEG *in-kernel* via the planner's union
-    admission mask, so written output is exact for unadmitted docs too;
+    step ``(i, j, d)`` loads sub-tile ``dblock[i, j, d]`` — the
+    planner's doc-run queues, keyed by **(tile, query block)** and
+    projected onto the blocking, so a sub-tile *this query block's*
+    union admits nothing in never enters the grid: the paper's
+    in-cluster document skipping, applied per query block to both the
+    DMA and the multiply-adds (``n_db`` clamps per ``(g, qb)`` via the
+    prefetched ``n_dblock[i, j]`` counts — batch 256 skips like batch
+    8 because each block only walks its own union). Residual docs a
+    visited sub-tile carries outside the block's union are masked to
+    NEG *in-kernel* via the planner's per-qblock union admission mask,
+    so written output is exact for unadmitted docs too;
   * steps past the end of a queue are re-mapped (in the index maps, via
     the prefetched counts) to the block of the *last real step*, so they
     issue no DMA, compute nothing (``pl.when``), and their write-back is
@@ -72,14 +76,19 @@ def _queue_step(i, j, d, n_tiles_ref, n_qblock_ref, n_dblock_ref):
     write-back turns into stale-VMEM clobbers of already-written scores
     (interpret mode re-reads out blocks per step and cannot see this).
     Also returns whether the step is real, so the vocab-chunk index can
-    be clamped the same way."""
+    be clamped the same way.
+
+    ``n_dblock_ref`` is (G, n_qb): the doc queue is keyed per
+    (tile, query-block slot), so the doc-axis clamp — and therefore how
+    many sub-tiles a step actually walks — is resolved per ``(ii, jj)``
+    pair, not per tile."""
     tile_live = i < n_tiles_ref[0]
     ii = jnp.where(tile_live, i, jnp.maximum(n_tiles_ref[0] - 1, 0))
     lastq = jnp.maximum(n_qblock_ref[ii] - 1, 0)
     qb_live = tile_live & (j < n_qblock_ref[ii])
     jj = jnp.where(qb_live, j, lastq)
-    lastd = jnp.maximum(n_dblock_ref[ii] - 1, 0)
-    real = qb_live & (d < n_dblock_ref[ii])
+    lastd = jnp.maximum(n_dblock_ref[ii, jj] - 1, 0)
+    real = qb_live & (d < n_dblock_ref[ii, jj])
     dd = jnp.where(real, d, lastd)
     return ii, jj, dd, real
 
@@ -93,7 +102,7 @@ def _kernel(tile_cids_ref, tile_pos_ref, n_tiles_ref, qblock_ref,
     k = pl.program_id(3)
 
     @pl.when((i < n_tiles_ref[0]) & (j < n_qblock_ref[i])
-             & (d < n_dblock_ref[i]))
+             & (d < n_dblock_ref[i, j]))
     def _score():
         tids = tids_ref[...][0].astype(jnp.int32)        # (BD, tp)
         tw = tw_ref[...][0].astype(jnp.float32)          # (BD, tp)
@@ -111,10 +120,10 @@ def _kernel(tile_cids_ref, tile_pos_ref, n_tiles_ref, qblock_ref,
             in_chunk = (tids >= v0) & (tids < v0 + block_v)
             qv = jnp.where(in_chunk[None], qv, 0.0)
         partial_scores = jnp.sum(qv * tw[None], axis=-1)  # (BQ, BD)
-        # residual docs the sub-tile carries outside every admitted run:
-        # exactly NEG in the written output (unvisited blocks stay
-        # garbage; the op wrapper's doc-admission mask owns those)
-        in_run = dmask_ref[...][0] != 0                   # (BD,)
+        # residual docs the sub-tile carries outside this query block's
+        # union: exactly NEG in the written output (unvisited blocks
+        # stay garbage; the op wrapper's doc-admission mask owns those)
+        in_run = dmask_ref[...][0, 0] != 0                # (BD,)
 
         if n_vb == 1:
             out_ref[...] = jnp.where(in_run[None], partial_scores,
@@ -143,9 +152,11 @@ def score_queue_kernel(
     n_tiles: jax.Array,         # () int32
     qblock: jax.Array,          # (G, n_qb) int32 compacted query-block queue
     n_qblock: jax.Array,        # (G,) int32
-    dblock: jax.Array,          # (G, n_db) int32 compacted doc sub-tile queue
-    n_dblock: jax.Array,        # (G,) int32
-    dmask_union: jax.Array,     # (G, dp) uint8 union doc admission per slot
+    dblock: jax.Array,          # (G, n_qb, n_db) int32 per-(tile, qblock)
+                                #   compacted doc sub-tile queue
+    n_dblock: jax.Array,        # (G, n_qb) int32 per-(tile, qblock) clamp
+    dmask_union: jax.Array,     # (G, n_qb, dp) uint8 per-qblock union doc
+                                #   admission per slot
     *,
     block_q: int,
     block_d: int,
@@ -157,14 +168,14 @@ def score_queue_kernel(
     masking; wave positions / doc sub-tiles the queues never visit hold
     unwritten garbage — callers must mask with the planner's
     doc-admission (ops.score_admitted does). Docs a *visited* sub-tile
-    carries outside every admitted run come out exactly NEG (the
+    carries outside its query block's union come out exactly NEG (the
     in-kernel residual mask)."""
     if interpret is None:       # backend auto-detect + env override
         interpret = pallas_interpret_default()
     m, dp, tp = doc_tids.shape
     n_q_pad, v_cols = qmaps.shape
     G, n_qb = qblock.shape
-    n_db = dblock.shape[1]
+    n_db = dblock.shape[-1]
     if n_q_pad % block_q:
         raise ValueError(f"qmaps rows {n_q_pad} not a multiple of "
                          f"block_q {block_q}")
@@ -179,8 +190,8 @@ def score_queue_kernel(
     n_vb = qmaps.shape[1] // block_v
 
     def tile_idx(i, j, d, k, cids, pos, nt, qb, nqb, db, ndb):
-        ii, _, dd, _ = _queue_step(i, j, d, nt, nqb, ndb)
-        return (cids[ii], db[ii, dd], 0)
+        ii, jj, dd, _ = _queue_step(i, j, d, nt, nqb, ndb)
+        return (cids[ii], db[ii, jj, dd], 0)
 
     def qmap_idx(i, j, d, k, cids, pos, nt, qb, nqb, db, ndb):
         ii, jj, _, real = _queue_step(i, j, d, nt, nqb, ndb)
@@ -190,12 +201,12 @@ def score_queue_kernel(
         return (qb[ii, jj], kk)
 
     def dmask_idx(i, j, d, k, cids, pos, nt, qb, nqb, db, ndb):
-        ii, _, dd, _ = _queue_step(i, j, d, nt, nqb, ndb)
-        return (ii, db[ii, dd])
+        ii, jj, dd, _ = _queue_step(i, j, d, nt, nqb, ndb)
+        return (ii, jj, db[ii, jj, dd])
 
     def out_idx(i, j, d, k, cids, pos, nt, qb, nqb, db, ndb):
         ii, jj, dd, _ = _queue_step(i, j, d, nt, nqb, ndb)
-        return (qb[ii, jj], pos[ii], db[ii, dd])
+        return (qb[ii, jj], pos[ii], db[ii, jj, dd])
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=7,
@@ -210,8 +221,9 @@ def score_queue_kernel(
             pl.BlockSpec((1, block_d, tp), tile_idx),
             # only query blocks with >= 1 admitting query are fetched
             pl.BlockSpec((block_q, block_v), qmap_idx),
-            # union doc-admission for the in-kernel residual mask
-            pl.BlockSpec((1, block_d), dmask_idx),
+            # per-qblock union doc-admission for the in-kernel residual
+            # mask
+            pl.BlockSpec((1, 1, block_d), dmask_idx),
         ],
         out_specs=pl.BlockSpec((block_q, 1, block_d), out_idx),
     )

@@ -459,6 +459,8 @@ def _build_retrieval(arch: str, shape: str, mesh, multi_pod: bool,
         doc_seg=_sds((m, dp), I32),
         doc_seg_mod=_sds((m, dp), I32),
         seg_max_stacked=_sds((m, n_seg + 1, V), jnp.uint8),
+        seg_offsets=_sds((m, n_seg + 1), I32),
+        sorted_upto=_sds((m,), I32),
         scale=_sds((), F32), cluster_ndocs=_sds((m,), I32),
         vocab=V, n_seg=n_seg)
     q_shapes = QueryBatch(tids=_sds((B, qp), I32), tw=_sds((B, qp), F32),

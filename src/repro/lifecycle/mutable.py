@@ -71,6 +71,11 @@ class MutableIndex:
         self.seg_max_stacked = np.asarray(index.seg_max_stacked).copy()
         self.seg_max = self.seg_max_stacked[:, : index.n_seg]
         self.seg_max_collapsed = self.seg_max_stacked[:, index.n_seg]
+        # segment-major layout metadata: the prefix table describes the
+        # sorted prefix [0, sorted_upto) of each cluster; inserts append
+        # into the unsorted tail and may shrink sorted_upto (below)
+        self.seg_offsets = np.asarray(index.seg_offsets).copy()
+        self.sorted_upto = np.asarray(index.sorted_upto).copy()
         self.cluster_ndocs = np.asarray(index.cluster_ndocs).copy()
         self.scale = float(index.scale)
         self.vocab = index.vocab
@@ -156,7 +161,17 @@ class MutableIndex:
             tids, tw = tids[top], tw[top]
 
         c = self._choose_cluster(dense_rep)
-        slot = int(np.nonzero(~self.doc_mask[c])[0][0])
+        # append into the unsorted tail when it has room; only when every
+        # free slot sits inside the sorted prefix (tombstone reuse) does
+        # the insert land there — shrinking sorted_upto to that slot, so
+        # the planner's prefix-table runs never cover unsorted docs. The
+        # segment-major invariant degrades gracefully under churn and
+        # compaction restores sorted_upto = d_pad for free.
+        free = np.nonzero(~self.doc_mask[c])[0]
+        tail_free = free[free >= self.sorted_upto[c]]
+        slot = int(tail_free[0]) if tail_free.size else int(free[0])
+        if slot < self.sorted_upto[c]:
+            self.sorted_upto[c] = slot
         j = int(self._rng.integers(self.n_seg))
 
         qf = np.round(tw / self.scale)
@@ -279,6 +294,8 @@ class MutableIndex:
         self.seg_max_stacked = packed["seg_max_stacked"]
         self.seg_max = self.seg_max_stacked[:, : self.n_seg]
         self.seg_max_collapsed = self.seg_max_stacked[:, self.n_seg]
+        self.seg_offsets = packed["seg_offsets"]
+        self.sorted_upto = packed["sorted_upto"]
         self.cluster_ndocs = packed["cluster_ndocs"]
 
         cl, sl = np.nonzero(self.doc_mask)
@@ -305,6 +322,8 @@ class MutableIndex:
             doc_seg=jnp.asarray(self.doc_seg),
             doc_seg_mod=jnp.asarray(self.doc_seg_mod),
             seg_max_stacked=jnp.asarray(self.seg_max_stacked),
+            seg_offsets=jnp.asarray(self.seg_offsets),
+            sorted_upto=jnp.asarray(self.sorted_upto),
             scale=jnp.float32(self.scale),
             cluster_ndocs=jnp.asarray(self.cluster_ndocs),
             vocab=self.vocab,

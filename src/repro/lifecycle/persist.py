@@ -36,12 +36,21 @@ from repro.core.types import ClusterIndex
 #   3 — hoisted modded segment map doc_seg_mod (m, d_pad); v1/v2 shards
 #       derive it at load as doc_seg % n_seg (bit-exact: the write paths
 #       only ever store in-range segment ids)
-FORMAT_VERSION = 3
-_READABLE_VERSIONS = (1, 2, 3)
+#   4 — segment-major physical layout: per-cluster segment prefix table
+#       seg_offsets (m, n_seg + 1) + sorted prefix length sorted_upto
+#       (m,). v1-v3 shards (arrival-order slots) are re-sorted at load:
+#       each cluster's live slots are stable-sorted by segment, which is
+#       exactly the permutation pack_clusters applies at build time, so
+#       the derived layout is bit-identical to a fresh segment-major
+#       pack of the same membership (global doc ids ride along — results
+#       are unchanged, only slot order moves)
+FORMAT_VERSION = 4
+_READABLE_VERSIONS = (1, 2, 3, 4)
 
 # cluster-axis-sharded array fields, in manifest order
 _FIELDS = ("doc_tids", "doc_tw", "doc_mask", "doc_ids", "doc_seg",
-           "doc_seg_mod", "seg_max_stacked", "cluster_ndocs")
+           "doc_seg_mod", "seg_max_stacked", "seg_offsets", "sorted_upto",
+           "cluster_ndocs")
 
 
 def _derive_stacked(arrays: dict, manifest: dict) -> "np.ndarray":
@@ -59,12 +68,43 @@ def _derive_seg_mod(arrays: dict, manifest: dict) -> "np.ndarray":
     return (arrays["doc_seg"] % manifest["n_seg"]).astype(np.int32)
 
 
+def _derive_segment_major(arrays: dict, manifest: dict) -> None:
+    """v1-v3 shards store arrival-order slots: re-sort each cluster's
+    slots segment-major in place (stable by segment, live docs first,
+    tombstones/padding last) and synthesize the prefix table. The stable
+    sort is exactly the permutation ``pack_clusters`` applies at build
+    time, so the derived layout is bit-identical to a fresh pack of the
+    same membership; tombstoned slots already hold the dead pattern
+    (tids == vocab, tw == 0, ids == -1, seg == 0) so moving them to the
+    tail reproduces the packed padding exactly."""
+    n_seg = manifest["n_seg"]
+    mask = arrays["doc_mask"]
+    m, d_pad = mask.shape
+    key = np.where(mask, arrays["doc_seg_mod"], n_seg)       # dead last
+    order = np.argsort(key, axis=1, kind="stable")           # (m, d_pad)
+    for f in ("doc_tids", "doc_tw", "doc_mask", "doc_ids", "doc_seg",
+              "doc_seg_mod"):
+        a = arrays[f]
+        idx = order[..., None] if a.ndim == 3 else order
+        arrays[f] = np.take_along_axis(a, idx, axis=1)
+    counts = np.zeros((m, n_seg), np.int64)
+    live_c, live_s = np.nonzero(arrays["doc_mask"])
+    np.add.at(counts, (live_c, arrays["doc_seg_mod"][live_c, live_s]), 1)
+    seg_offsets = np.zeros((m, n_seg + 1), np.int32)
+    seg_offsets[:, 1:] = np.cumsum(counts, axis=1)
+    arrays["seg_offsets"] = seg_offsets
+    arrays["sorted_upto"] = np.full((m,), d_pad, np.int32)
+
+
 # fields that may be absent in checkpoints written before they existed;
 # each maps to a recompute-from-what-is-there fallback applied at load
 _DERIVABLE = {
     "seg_max_stacked": _derive_stacked,
     "doc_seg_mod": _derive_seg_mod,
 }
+# fields derived jointly by the segment-major migration (they permute
+# several arrays at once, so they run after the per-field derivations)
+_LAYOUT_FIELDS = ("seg_offsets", "sorted_upto")
 # legacy spellings accepted from old shards (loaded, then folded into the
 # derivation above instead of becoming index fields)
 _LEGACY_FIELDS = ("seg_max", "seg_max_collapsed")
@@ -175,7 +215,8 @@ def load_index(directory: str,
         with np.load(path) as z:
             for f in _FIELDS + _LEGACY_FIELDS:
                 if f not in z.files:
-                    if f in _DERIVABLE or f in _LEGACY_FIELDS:
+                    if (f in _DERIVABLE or f in _LEGACY_FIELDS
+                            or f in _LAYOUT_FIELDS):
                         continue
                     raise KeyError(f"shard {path!r} is missing field {f!r}")
                 parts[f].append(z[f])
@@ -183,6 +224,8 @@ def load_index(directory: str,
     for f, derive in _DERIVABLE.items():
         if f not in arrays:
             arrays[f] = derive(arrays, manifest)
+    if any(f not in arrays for f in _LAYOUT_FIELDS):
+        _derive_segment_major(arrays, manifest)
 
     if shards is None and arrays["doc_tids"].shape[0] != manifest["m"]:
         raise ValueError("shard rows do not reassemble the manifest's m")
@@ -195,6 +238,8 @@ def load_index(directory: str,
         doc_seg=jnp.asarray(arrays["doc_seg"]),
         doc_seg_mod=jnp.asarray(arrays["doc_seg_mod"]),
         seg_max_stacked=jnp.asarray(arrays["seg_max_stacked"]),
+        seg_offsets=jnp.asarray(arrays["seg_offsets"]),
+        sorted_upto=jnp.asarray(arrays["sorted_upto"]),
         scale=jnp.float32(manifest["scale"]),
         cluster_ndocs=jnp.asarray(arrays["cluster_ndocs"]),
         vocab=manifest["vocab"],

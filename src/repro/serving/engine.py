@@ -186,7 +186,8 @@ def index_shard_specs(index: ClusterIndex,
         doc_tids=P(c, None, None), doc_tw=P(c, None, None),
         doc_mask=P(c, None), doc_ids=P(c, None), doc_seg=P(c, None),
         doc_seg_mod=P(c, None),
-        seg_max_stacked=P(c, None, None), scale=P(),
+        seg_max_stacked=P(c, None, None), seg_offsets=P(c, None),
+        sorted_upto=P(c), scale=P(),
         cluster_ndocs=P(c), vocab=index.vocab, n_seg=index.n_seg)
 
 

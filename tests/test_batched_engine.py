@@ -42,7 +42,8 @@ def _mk_plan(index, cids, seg_admit, block_q, block_d=None, live=None):
         live = jnp.ones((cids.shape[0],), bool)
     return plan_wave(cids, live, admit, jnp.asarray(seg_admit), block_q,
                      index.doc_seg_mod[cids], index.doc_mask[cids],
-                     block_d=block_d)
+                     block_d=block_d, seg_offsets=index.seg_offsets[cids],
+                     sorted_upto=index.sorted_upto[cids])
 
 
 def _scorer_expected(index, cids, qmaps, seg_admit):
@@ -182,40 +183,80 @@ def test_executor_doc_blocking_invariant(index, queries):
 
 
 def test_doc_runs_encode_union_admission(index, queries):
-    """The plan's run queues are exactly the RLE of the union (batch-
-    level) doc-admission mask, and the sub-tile queue covers them."""
+    """The plan's per-(tile, qblock) run queues cover exactly that query
+    block's union doc-admission mask (a superset is allowed only on
+    tombstoned slots inside admitted segments — the segment-major runs
+    span whole segments), and the sub-tile queue covers the union."""
     from repro.core.plan import runs_to_mask
     from repro.kernels.score_cluster_batch.ref import walked_doc_slots
     q, _ = queries
+    block_q = 4
+    n_qb = -(-q.n_queries // block_q)
     cids = jnp.arange(8)
     rng = np.random.default_rng(5)
     seg_admit = jnp.asarray(
         rng.random((q.n_queries, 8, index.n_seg)) < 0.2)
-    plan = _mk_plan(index, cids, seg_admit, block_q=8, block_d=8)
-    n_seg = index.n_seg
-    union = (np.asarray(index.doc_mask[cids])
-             & np.take_along_axis(
-                 np.asarray(seg_admit.any(0)),
-                 np.asarray(index.doc_seg_mod[cids]) % n_seg, axis=1))
-    union_slots = union[np.asarray(plan.tile_pos)]
+    plan = _mk_plan(index, cids, seg_admit, block_q=block_q, block_d=8)
     n_tiles = int(plan.n_tiles)
+    tile_pos = np.asarray(plan.tile_pos)
+    dseg = np.asarray(index.doc_seg_mod[cids])
+    dmask = np.asarray(index.doc_mask[cids])
+    seg_qb = np.asarray(seg_admit).reshape(
+        n_qb, block_q, 8, index.n_seg).any(axis=1)        # (n_qb, G, s)
     from_runs = np.asarray(runs_to_mask(
-        plan.drun_start, plan.drun_len, plan.n_drun, index.d_pad))
-    np.testing.assert_array_equal(from_runs[:n_tiles],
-                                  union_slots[:n_tiles])
-    np.testing.assert_array_equal(np.asarray(plan.dmask_union)[:n_tiles],
-                                  union_slots[:n_tiles])
-    # every admitted doc lies in a walked sub-tile (rank safety of the
-    # doc-level compaction) and dead sub-tiles are actually skipped
-    walked = np.asarray(walked_doc_slots(plan))
-    assert (union_slots[:n_tiles] <= walked[:n_tiles]).all()
-    n_db = plan.n_db
-    assert (np.asarray(plan.n_dblock)[:n_tiles] <= n_db).all()
+        plan.drun_start, plan.drun_len, plan.n_drun,
+        index.d_pad))                                     # (G, n_qb, dp)
+    walked = np.asarray(walked_doc_slots(plan))           # raw-qb space
+    qblock = np.asarray(plan.qblock)
+    n_qblock = np.asarray(plan.n_qblock)
+    for g in range(n_tiles):
+        wp = tile_pos[g]
+        for s in range(n_qblock[g]):
+            b = qblock[g, s]
+            union = dmask[wp] & seg_qb[b, wp][dseg[wp]]
+            runs = from_runs[g, s]
+            # runs cover the union; anything extra is a dead slot in an
+            # admitted segment (never a live doc outside the union)
+            assert (union <= runs).all(), (g, s)
+            extra = runs & ~union
+            assert not (extra & dmask[wp]).any(), (g, s)
+            # the committed residual mask is the exact union
+            np.testing.assert_array_equal(
+                np.asarray(plan.dmask_union)[g, s], union)
+            # every admitted doc lies in a walked sub-tile of its own
+            # query block (rank safety of per-qblock doc compaction)
+            assert (union <= walked[g, b]).all(), (g, s)
+    assert (np.asarray(plan.n_dblock) <= plan.n_db).all()
+
+
+def test_per_qblock_queues_skip_more_than_batch_union(index, queries):
+    """A block whose queries admit few segments walks fewer doc slots
+    under per-qblock unions than under the replicated batch union."""
+    q, _ = queries
+    cids = jnp.arange(8)
+    rng = np.random.default_rng(17)
+    seg_admit = jnp.asarray(
+        rng.random((q.n_queries, 8, index.n_seg)) < 0.2)
+    admit = seg_admit.any(-1)
+    live = jnp.ones((8,), bool)
+    from repro.core.plan import plan_wave
+    walked = {}
+    for scope in ("qblock", "batch"):
+        plan = plan_wave(cids, live, admit, seg_admit, 4,
+                         index.doc_seg_mod[cids], index.doc_mask[cids],
+                         block_d=8, seg_offsets=index.seg_offsets[cids],
+                         sorted_upto=index.sorted_upto[cids],
+                         union_scope=scope)
+        walked[scope] = int(plan.walked_docs())
+    assert walked["qblock"] <= walked["batch"]
+    assert walked["qblock"] < walked["batch"], (
+        "per-qblock unions should skip sub-tiles the batch union keeps")
 
 
 def test_doc_subtile_skipping_dead_tail(index, queries):
     """A tile whose trailing slots are all tombstoned drops its trailing
-    doc sub-tiles from the queue, and scores stay exact."""
+    doc sub-tiles from every query block's queue, and scores stay
+    exact."""
     from repro.core.plan import resolve_block_d
     q, _ = queries
     qmaps = q.dense_map()
@@ -231,7 +272,10 @@ def test_doc_subtile_skipping_dead_tail(index, queries):
     plan = _mk_plan(tomb, cids, seg_admit, block_q=8, block_d=bd)
     n_tiles = int(plan.n_tiles)
     assert n_tiles == 4
-    assert (np.asarray(plan.n_dblock)[:n_tiles] <= keep // bd).all()
+    nqb = np.asarray(plan.n_qblock)
+    ndb = np.asarray(plan.n_dblock)
+    for g in range(n_tiles):
+        assert (ndb[g, :nqb[g]] <= keep // bd).all()
     assert int(plan.walked_docs()) < int(plan.n_blocks) * dp
 
 
@@ -344,6 +388,37 @@ def test_batched_identical_sets_safe_mode(index, queries, method):
                 assert abs(scores_of.get(int(d), kth) - kth) < 1e-4
 
 
+def test_auto_engine_routes_small_batches_to_per_query(index, queries):
+    """engine="auto" (the default) routes batches below
+    AUTO_ENGINE_MIN_BATCH to the per-query path — the measured batch-1
+    regression in BENCH_retrieval.json — and everything else to the
+    batched planner. Pinned bit-exactly on every TopK field (the work
+    counters differ between engines, so equality identifies the route)."""
+    from repro.core.search import AUTO_ENGINE_MIN_BATCH
+    q, _ = queries
+    fields = ("doc_ids", "scores", "n_scored_docs", "n_scored_clusters",
+              "n_scored_segments", "n_scored_tiles", "n_walked_tiles",
+              "n_walked_docs")
+
+    def take(n):
+        import dataclasses as dc
+        return dc.replace(q, tids=q.tids[:n], tw=q.tw[:n],
+                          mask=q.mask[:n])
+
+    for n, want in ((1, "per_query"), (AUTO_ENGINE_MIN_BATCH - 1,
+                                       "per_query"),
+                    (AUTO_ENGINE_MIN_BATCH, "batched"),
+                    (q.n_queries, "batched")):
+        qq = take(n)
+        auto = retrieve(index, qq, SearchConfig(k=10, engine="auto"))
+        expl = retrieve(index, qq, SearchConfig(k=10, engine=want))
+        for f in fields:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(auto, f)),
+                np.asarray(getattr(expl, f)),
+                err_msg=f"auto at batch {n} did not route to {want} ({f})")
+
+
 def test_batched_budget_cap_and_traced_budget(index, queries):
     """The traced budget knob caps scored clusters under the batched
     engine exactly as it did per-query."""
@@ -370,6 +445,40 @@ def test_batched_counters_not_more_work_than_reference(index, queries):
         1.2 * float(p.n_scored_clusters.mean()) + 1.0
 
 
+def test_autotuned_blocks_fit_vmem_budget_and_overrides_win(index):
+    """Auto blocking (SearchConfig defaults) keeps the executor resident
+    set — query-map block + doc sub-tile + output block — under the VMEM
+    budget at every batch size, chunks the vocab only at map scales that
+    need it, and explicit SearchConfig values override each knob."""
+    from repro.core.plan import resolve_block_d
+    from repro.core.search import (VMEM_BLOCK_BUDGET, autotune_blocks,
+                                   resolve_blocks)
+    tp = index.t_pad
+    for n_q in (1, 8, 64, 256, 1024):
+        bq, bd, bv = autotune_blocks(index.d_pad, tp, index.n_seg,
+                                     index.vocab, n_q)
+        v_eff = bv if bv is not None else index.vocab + 1
+        resident = 4 * bq * v_eff + 3 * bd * tp + 4 * bq * bd
+        assert resident <= VMEM_BLOCK_BUDGET, (n_q, resident)
+        assert bq >= 1 and index.d_pad % bd == 0
+    # small vocab: full-V gather, no chunk masking
+    assert autotune_blocks(index.d_pad, tp, index.n_seg, index.vocab,
+                           64)[2] is None
+    # WordPiece scale at batch 256 forces vocab chunking under budget
+    bq, bd, bv = autotune_blocks(256, 64, 8, 30522, 256)
+    assert bv is not None
+    assert 4 * bq * bv <= VMEM_BLOCK_BUDGET // 2
+    # explicit values pass through untouched (block_d still rounds up)
+    cfg = SearchConfig(block_q=4, block_d=9, block_v=128)
+    assert resolve_blocks(index, 64, cfg) == (
+        4, resolve_block_d(index.d_pad, 9), 128)
+    # mixed: only the "auto" knobs are derived
+    cfg = SearchConfig(block_q="auto", block_d=8, block_v=None)
+    bq2, bd2, bv2 = resolve_blocks(index, 64, cfg)
+    assert bq2 == 64 and bd2 == resolve_block_d(index.d_pad, 8)
+    assert bv2 is None
+
+
 def test_queue_step_padding_maps_to_last_real_step():
     """Every padded grid step must re-map to exactly the LAST real step
     of the queue (not an earlier one): compiled Pallas writes the out
@@ -383,9 +492,15 @@ def test_queue_step_padding_maps_to_last_real_step():
         _queue_step)
     n_tiles = jnp.asarray([2], jnp.int32)
     n_qblock = jnp.asarray([3, 1, 0, 0], jnp.int32)   # G=4, 2 live tiles
-    n_dblock = jnp.asarray([2, 3, 0, 0], jnp.int32)
+    # per-(tile, qblock) doc queues: each live (tile, qblock) pair has
+    # its OWN sub-tile count now
+    n_dblock = jnp.asarray([[2, 4, 1, 0],
+                            [3, 0, 0, 0],
+                            [0, 0, 0, 0],
+                            [0, 0, 0, 0]], jnp.int32)
     G, n_qb, n_db = 4, 4, 4
-    # overall last real step: tile slot 1, its last qblock, last sub-tile
+    # overall last real step: tile slot 1, its last qblock, that PAIR's
+    # last sub-tile
     last_real = (1, 0, 2)
     for i in range(G):
         for j in range(n_qb):
@@ -394,16 +509,19 @@ def test_queue_step_padding_maps_to_last_real_step():
                     jnp.int32(i), jnp.int32(j), jnp.int32(d),
                     n_tiles, n_qblock, n_dblock)
                 ii, jj, dd, real = int(ii), int(jj), int(dd), bool(real)
-                nq_i, nd_i = int(n_qblock[i]) if i < 2 else 0, \
-                    int(n_dblock[i]) if i < 2 else 0
-                if i < 2 and j < nq_i and d < nd_i:
+                nq_i = int(n_qblock[i]) if i < 2 else 0
+                nd_ij = int(n_dblock[i, j]) if (i < 2 and j < nq_i) else 0
+                if i < 2 and j < nq_i and d < nd_ij:
                     assert (ii, jj, dd) == (i, j, d) and real
                 elif i < 2 and j < nq_i:
-                    # doc tail of a live (tile, qblock): pin last sub-tile
-                    assert (ii, jj, dd) == (i, j, nd_i - 1) and not real
+                    # doc tail of a live (tile, qblock): pin that pair's
+                    # last sub-tile
+                    assert (ii, jj, dd) == (i, j, nd_ij - 1) and not real
                 elif i < 2:
                     # qblock tail of a live tile: pin its last real step
-                    assert (ii, jj, dd) == (i, nq_i - 1, nd_i - 1)
+                    # (the last live qblock's own last sub-tile)
+                    nd_last = int(n_dblock[i, nq_i - 1])
+                    assert (ii, jj, dd) == (i, nq_i - 1, nd_last - 1)
                     assert not real
                 else:             # padded tile slots
                     assert (ii, jj, dd) == last_real and not real

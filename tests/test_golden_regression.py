@@ -44,6 +44,20 @@ ENGINES = {
                                     block_q=4, block_d=None),
     "per_query_asc": SearchConfig(k=K, mu=0.8, eta=1.0, method="asc",
                                   engine="per_query"),
+    # budgeted config (ROADMAP golden-breadth item): the rank-horizon
+    # budget semantics are part of the pinned surface
+    "batched_budget": SearchConfig(k=K, mu=1.0, eta=1.0,
+                                   method="anytime", engine="batched",
+                                   cluster_budget=4, block_q=4,
+                                   block_d=8),
+}
+
+# configs re-pinned on the churned-index snapshot (deterministic
+# insert/delete/compact stream through MutableIndex — dirty unsorted
+# tail before compaction is part of what the fixture freezes)
+CHURNED_ENGINES = {
+    "batched_asc_safe": ENGINES["batched_asc_safe"],
+    "batched_asc": ENGINES["batched_asc"],
 }
 
 
@@ -57,22 +71,51 @@ def _world():
     return index, queries
 
 
+def _churned_world():
+    """The base world pushed through a seeded insert/delete/compact
+    stream — every step deterministic, so the snapshot is committable."""
+    from repro.lifecycle import MutableIndex
+    index, queries = _world()
+    mi = MutableIndex(index, seed=881)
+    rng = np.random.default_rng(882)
+    for round_ in range(2):
+        for d in rng.choice(mi.live_ids(), 40, replace=False):
+            mi.delete(int(d))
+        for _ in range(30):
+            nnz = int(rng.integers(4, 12))
+            t = rng.choice(256, nnz, replace=False)
+            mi.insert(t, rng.lognormal(0.0, 0.5, nnz).astype(np.float32))
+    mi.compact()
+    # one more partial round so the committed snapshot carries a dirty
+    # unsorted tail (sorted_upto < d_pad somewhere)
+    for d in rng.choice(mi.live_ids(), 20, replace=False):
+        mi.delete(int(d))
+    for _ in range(25):
+        nnz = int(rng.integers(4, 12))
+        t = rng.choice(256, nnz, replace=False)
+        mi.insert(t, rng.lognormal(0.0, 0.5, nnz).astype(np.float32))
+    return mi.snapshot(), queries
+
+
+def _topk_entry(r) -> dict:
+    return {
+        "doc_ids": np.asarray(r.doc_ids).tolist(),
+        "scores": np.round(np.asarray(r.scores, np.float64), 6).tolist(),
+    }
+
+
 def _compute() -> dict:
     index, queries = _world()
-    out = {"k": K, "engines": {}}
+    out = {"k": K, "engines": {}, "churned": {}}
     for name, cfg in ENGINES.items():
-        r = retrieve(index, queries, cfg)
-        out["engines"][name] = {
-            "doc_ids": np.asarray(r.doc_ids).tolist(),
-            "scores": np.round(np.asarray(r.scores, np.float64),
-                               6).tolist(),
-        }
-    oracle = brute_force_topk(index, queries, K)
-    out["engines"]["brute_force"] = {
-        "doc_ids": np.asarray(oracle.doc_ids).tolist(),
-        "scores": np.round(np.asarray(oracle.scores, np.float64),
-                           6).tolist(),
-    }
+        out["engines"][name] = _topk_entry(retrieve(index, queries, cfg))
+    out["engines"]["brute_force"] = _topk_entry(
+        brute_force_topk(index, queries, K))
+    churned, cq = _churned_world()
+    for name, cfg in CHURNED_ENGINES.items():
+        out["churned"][name] = _topk_entry(retrieve(churned, cq, cfg))
+    out["churned"]["brute_force"] = _topk_entry(
+        brute_force_topk(churned, cq, K))
     return out
 
 
@@ -92,16 +135,14 @@ def computed() -> dict:
 
 def test_golden_covers_every_engine(golden):
     assert set(golden["engines"]) == set(ENGINES) | {"brute_force"}
+    assert set(golden["churned"]) == set(CHURNED_ENGINES) | {"brute_force"}
     assert golden["k"] == K
 
 
 TIE_TOL = 1e-3   # f32 contraction order differs across BLAS builds
 
 
-@pytest.mark.parametrize("name", sorted(set(ENGINES) | {"brute_force"}))
-def test_engine_matches_golden(golden, computed, name):
-    want = golden["engines"][name]
-    got = computed["engines"][name]
+def _check_entry(want: dict, got: dict, name: str):
     np.testing.assert_allclose(
         np.sort(np.asarray(got["scores"]), axis=1),
         np.sort(np.asarray(want["scores"]), axis=1),
@@ -116,13 +157,34 @@ def test_engine_matches_golden(golden, computed, name):
         if wset == gset:
             continue
         score_of = dict(zip(want_ids[qi].tolist(), want["scores"][qi]))
-        score_of.update(zip(got_ids[qi].tolist(),
-                            computed["engines"][name]["scores"][qi]))
+        score_of.update(zip(got_ids[qi].tolist(), got["scores"][qi]))
         kth = min(want["scores"][qi])
         for d in wset ^ gset:
             assert abs(score_of[d] - kth) < TIE_TOL, (
                 f"{name} query {qi}: doc {d} drifted from the committed "
                 f"golden beyond tie tolerance")
+
+
+@pytest.mark.parametrize("name", sorted(set(CHURNED_ENGINES)
+                                        | {"brute_force"}))
+def test_churned_engine_matches_golden(golden, computed, name):
+    _check_entry(golden["churned"][name], computed["churned"][name],
+                 f"churned/{name}")
+
+
+def test_churned_safe_mode_is_churned_oracle(golden):
+    """The committed churned fixture is internally consistent: safe-mode
+    retrieval on the churned snapshot equals its own brute force."""
+    safe = np.sort(np.asarray(golden["churned"]["batched_asc_safe"]
+                              ["scores"]), axis=1)
+    oracle = np.sort(np.asarray(golden["churned"]["brute_force"]
+                                ["scores"]), axis=1)
+    np.testing.assert_allclose(safe, oracle, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("name", sorted(set(ENGINES) | {"brute_force"}))
+def test_engine_matches_golden(golden, computed, name):
+    _check_entry(golden["engines"][name], computed["engines"][name], name)
 
 
 def test_golden_safe_mode_is_oracle(golden):

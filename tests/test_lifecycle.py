@@ -164,6 +164,54 @@ def test_insert_prefers_nearest_centroid(small_world):
     assert int(mi.cluster_ndocs[5]) == before + 1
 
 
+def test_segment_major_layout_under_churn(small_world):
+    """The sorted-prefix invariant (ISSUE 5): every live slot below
+    ``sorted_upto`` belongs to the segment its prefix-table range says,
+    inserts only ever land at slots >= (possibly shrunk) sorted_upto,
+    and compaction restores sorted_upto == d_pad."""
+    _, _, base = small_world
+    assert (np.asarray(base.sorted_upto) == D_PAD).all()
+    mi = MutableIndex(base, seed=11)
+    rng = np.random.default_rng(13)
+    for _ in range(3):
+        _churn(mi, rng, n_del=80, n_ins=60)
+        for c in range(mi.m):
+            su = int(mi.sorted_upto[c])
+            for j in range(NSEG):
+                s = min(int(mi.seg_offsets[c, j]), su)
+                e = min(int(mi.seg_offsets[c, j + 1]), su)
+                live = mi.doc_mask[c, s:e]
+                assert (mi.doc_seg[c, s:e][live] == j).all(), (c, j)
+    mi.compact()
+    assert (mi.sorted_upto == mi.d_pad).all()
+    np.testing.assert_array_equal(mi.seg_offsets[:, -1], mi.cluster_ndocs)
+
+
+def test_legacy_load_resorts_arrival_order(small_world, tmp_path):
+    """An arrival-order (pre-v4) checkpoint loads segment-major: the
+    derived layout is bit-identical to packing the same corpus with
+    sorting on (the stable per-segment order is shared)."""
+    from repro.core.index import build_index as _build
+    docs, _ = make_corpus(SPEC)
+    from repro.data.synthetic import make_corpus as _mc  # noqa: F401
+    doc_topic = np.asarray(
+        np.arange(SPEC.n_docs) % M, np.int64)
+    unsorted = _build(docs, doc_topic, m=M, n_seg=NSEG, d_pad=D_PAD,
+                      seed=21, sort_segments=False)
+    sorted_ix = _build(docs, doc_topic, m=M, n_seg=NSEG, d_pad=D_PAD,
+                       seed=21, sort_segments=True)
+    path = save_index(str(tmp_path / "ix"), unsorted, n_shards=2)
+    _downgrade_to_v1(path, keep_collapsed=True)
+    loaded, manifest = load_index(path)
+    assert manifest["format_version"] == 1
+    for f in ("doc_tids", "doc_tw", "doc_mask", "doc_ids", "doc_seg",
+              "doc_seg_mod", "seg_offsets", "sorted_upto",
+              "seg_max_stacked"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(loaded, f)),
+            np.asarray(getattr(sorted_ix, f)), err_msg=f)
+
+
 # ---------------------------------------------------------------------------
 # rank-safety under churn (the acceptance-criterion test)
 # ---------------------------------------------------------------------------
@@ -344,7 +392,8 @@ def test_save_load_roundtrip(small_world, tmp_path, n_shards):
     assert manifest["extra"] == {"note": "t"}
     assert loaded.vocab == base.vocab and loaded.n_seg == base.n_seg
     for f in ("doc_tids", "doc_tw", "doc_mask", "doc_ids", "doc_seg",
-              "doc_seg_mod", "seg_max", "cluster_ndocs"):
+              "doc_seg_mod", "seg_max", "seg_offsets", "sorted_upto",
+              "cluster_ndocs"):
         np.testing.assert_array_equal(np.asarray(getattr(loaded, f)),
                                       np.asarray(getattr(base, f)))
     assert float(loaded.scale) == pytest.approx(float(base.scale))
@@ -425,6 +474,8 @@ def _downgrade_to_v1(path: str, keep_collapsed: bool) -> None:
             arrays = {f: z[f] for f in z.files}
         stacked = arrays.pop("seg_max_stacked")
         arrays.pop("doc_seg_mod", None)     # v1/v2 predate the hoisted map
+        arrays.pop("seg_offsets", None)     # v1-v3 predate segment-major
+        arrays.pop("sorted_upto", None)
         arrays["seg_max"] = stacked[:, :-1]
         if keep_collapsed:
             arrays["seg_max_collapsed"] = stacked[:, -1]
@@ -468,7 +519,8 @@ def test_legacy_v1_roundtrips_through_v2(small_world, tmp_path):
     reloaded, manifest = load_index(new)
     assert manifest["format_version"] == FORMAT_VERSION
     for f in ("doc_tids", "doc_tw", "doc_mask", "doc_ids", "doc_seg",
-              "doc_seg_mod", "seg_max_stacked", "cluster_ndocs"):
+              "doc_seg_mod", "seg_max_stacked", "seg_offsets",
+              "sorted_upto", "cluster_ndocs"):
         np.testing.assert_array_equal(np.asarray(getattr(reloaded, f)),
                                       np.asarray(getattr(base, f)))
     a = asc_retrieve(base, q, k=10, mu=1.0, eta=1.0)

@@ -1,9 +1,12 @@
-"""Property suite: rank safety of doc-level queue compaction (ISSUE 4).
+"""Property suite: rank safety of doc-level queue compaction (ISSUE 4)
+and of the segment-major / per-query-block layout rework (ISSUE 5).
 
-The doc-compacted batched engine (plan/execute with doc-run queues,
-core/plan.py) is pinned against the preserved ``engine="per_query"``
-oracle under random ``(mu, eta)``, cluster budgets, batch sizes and doc
-sub-tile blockings:
+The doc-compacted batched engine (plan/execute with per-qblock doc-run
+queues, core/plan.py) is pinned against the preserved
+``engine="per_query"`` oracle under random ``(mu, eta)``, cluster
+budgets, batch sizes, doc sub-tile blockings and *physical layouts*
+(segment-major, arrival-order, and a churned index with a dirty
+unsorted insert tail):
 
   * (mu, eta) = (1, 1), no budget: exact top-k — identical score
     multisets to both the per-query engine and the brute-force oracle,
@@ -44,9 +47,16 @@ NEG_F = float(np.finfo(np.float32).min)
 _CACHE: dict = {}
 
 
-def _world(n_q: int = 8):
-    """Small seeded corpus + index + queries + per-doc true-score map."""
-    key = ("world", n_q)
+def _world(n_q: int = 8, layout: str = "sorted"):
+    """Small seeded corpus + index + queries + per-doc true-score map.
+
+    ``layout`` is the ISSUE-5 physical-layout axis:
+      * ``"sorted"``  — segment-major pack (sorted_upto == d_pad);
+      * ``"arrival"`` — arrival-order pack (sorted_upto == 0, the
+        pre-segment-major layout; planning falls back to mask-RLE);
+      * ``"dirty"``   — segment-major pack churned through MutableIndex
+        (tombstones + inserts leaving an unsorted tail)."""
+    key = ("world", n_q, layout)
     if key not in _CACHE:
         spec = CorpusSpec(n_docs=900, vocab=320, n_topics=12,
                           doc_terms=24, t_pad=32, query_terms=8,
@@ -54,7 +64,18 @@ def _world(n_q: int = 8):
         docs, doc_topic = make_corpus(spec)
         # padded d_pad so the dead tail gives doc-run compaction a floor
         idx = build_index(docs, doc_topic % 16, m=16, n_seg=4, d_pad=80,
-                          seed=102)
+                          seed=102, sort_segments=(layout != "arrival"))
+        if layout == "dirty":
+            from repro.lifecycle import MutableIndex
+            mi = MutableIndex(idx, seed=104)
+            rng = np.random.default_rng(105)
+            for d in rng.choice(mi.live_ids(), 120, replace=False):
+                mi.delete(int(d))
+            for _ in range(80):
+                t = rng.choice(spec.vocab, 8, replace=False)
+                mi.insert(t, rng.lognormal(0, 0.5, 8).astype(np.float32))
+            idx = mi.snapshot()
+            assert (np.asarray(idx.sorted_upto) < idx.d_pad).any()
         q, _ = make_queries(spec, n_q, doc_topic, seed=103)
         qmaps = q.dense_map()
         # (n_q, m, d_pad) true scores — the integrity oracle
@@ -74,10 +95,10 @@ def _world(n_q: int = 8):
     return _CACHE[key]
 
 
-def _oracle(n_q: int, k: int):
-    key = ("oracle", n_q, k)
+def _oracle(n_q: int, k: int, layout: str = "sorted"):
+    key = ("oracle", n_q, k, layout)
     if key not in _CACHE:
-        idx, q, _ = _world(n_q)
+        idx, q, _ = _world(n_q, layout)
         _CACHE[key] = brute_force_topk(idx, q, k)
     return _CACHE[key]
 
@@ -102,7 +123,7 @@ def _check_true_scores(out, by_id, tol=2e-4):
 # rank safety vs the per-query oracle
 # ---------------------------------------------------------------------------
 
-@settings(max_examples=14, deadline=None)
+@settings(max_examples=18, deadline=None)
 @given(
     mu=st.sampled_from([0.4, 0.6, 0.8, 1.0]),
     eta=st.sampled_from([0.7, 0.9, 1.0]),
@@ -110,14 +131,15 @@ def _check_true_scores(out, by_id, tol=2e-4):
     block_d=st.sampled_from([8, 20, None]),
     method=st.sampled_from(["asc", "anytime_star"]),
     budget=st.sampled_from([None, 5, 11]),
+    layout=st.sampled_from(["sorted", "arrival", "dirty"]),
 )
 def test_doc_compacted_engine_vs_per_query_oracle(mu, eta, n_q, block_d,
-                                                  method, budget):
+                                                  method, budget, layout):
     if mu > eta:
         mu = eta
     if method == "anytime_star":
         eta = mu
-    idx, q, by_id = _world(n_q)
+    idx, q, by_id = _world(n_q, layout)
     k = 10
     b = None if budget is None else jnp.int32(budget)
     outs = {}
@@ -136,25 +158,27 @@ def test_doc_compacted_engine_vs_per_query_oracle(mu, eta, n_q, block_d,
         # rank-safe: the doc-compacted engine returns the oracle set
         np.testing.assert_allclose(bs, ps, rtol=1e-5, atol=1e-5)
     else:
-        o = _sorted_scores(_oracle(n_q, k))
+        o = _sorted_scores(_oracle(n_q, k, layout))
         for name, a in (("batched", bs), ("per_query", ps)):
             a = np.where(a > NEG_F / 2, a, 0.0)
             assert np.all(a.mean(1) >= mu * o.mean(1) - 1e-4), (
                 f"{name}: Prop-3 violated at mu={mu} eta={eta} "
-                f"block_d={block_d} method={method}")
+                f"block_d={block_d} method={method} layout={layout}")
 
 
+@pytest.mark.parametrize("layout", ["sorted", "arrival", "dirty"])
 @pytest.mark.parametrize("block_d", [1, 8, 80, None])
 @pytest.mark.parametrize("method", ["asc", "anytime"])
-def test_exact_topk_at_unit_parameters(block_d, method):
+def test_exact_topk_at_unit_parameters(block_d, method, layout):
     """(mu, eta) = (1, 1) reproduces the exact top-k for every doc
-    sub-tile blocking (the satellite's exactness pin)."""
-    idx, q, _ = _world(8)
+    sub-tile blocking and every physical layout (the exactness pin)."""
+    idx, q, _ = _world(8, layout)
     k = 10
     out = retrieve(idx, q, SearchConfig(k=k, mu=1.0, eta=1.0,
-                                        method=method, block_d=block_d))
+                                        method=method, block_d=block_d,
+                                        engine="batched"))
     np.testing.assert_allclose(_sorted_scores(out),
-                               _sorted_scores(_oracle(8, k)),
+                               _sorted_scores(_oracle(8, k, layout)),
                                rtol=1e-5, atol=1e-5)
 
 
@@ -174,7 +198,8 @@ def test_counter_invariants(mu, eta, n_q, block_d, budget):
     if mu > eta:
         mu = eta
     idx, q, _ = _world(n_q)
-    cfg = SearchConfig(k=10, mu=mu, eta=eta, block_q=4, block_d=block_d)
+    cfg = SearchConfig(k=10, mu=mu, eta=eta, block_q=4, block_d=block_d,
+                       engine="batched")
     b = None if budget is None else jnp.int32(budget)
     out = retrieve(idx, q, cfg, budget=b)
     dp = idx.d_pad
@@ -281,26 +306,96 @@ def test_segment_histogram_pins_union_mask():
 
 
 # ---------------------------------------------------------------------------
+# segment-major layout: per-qblock run/counter invariants (ISSUE 5)
+# ---------------------------------------------------------------------------
+
+def test_runs_equal_admitted_segments_when_fully_sorted():
+    """Under the segment-major layout with no unsorted tail
+    (sorted_upto == d_pad), each live (tile, qblock) run queue holds
+    exactly one run per *non-empty admitted* segment of that block's
+    union — the prefix-table encoding, no fragmentation."""
+    idx, q, _ = _world(8, "sorted")
+    assert (np.asarray(idx.sorted_upto) == idx.d_pad).all()
+    cfg = SearchConfig(k=10, mu=0.8, eta=1.0, engine="batched",
+                       block_q=4, block_d=8)
+    _, (plans, executed) = retrieve_with_plans(idx, q, cfg)
+    seg_counts = np.diff(np.asarray(idx.seg_offsets), axis=1)  # (m, s)
+    n_qb = plans.qblock.shape[-1]
+    block_q = cfg.block_q
+    checked = 0
+    for w in np.nonzero(np.asarray(executed))[0]:
+        seg_admit = np.asarray(plans.seg_admit[w])      # (n_q, G, n_seg)
+        nq = seg_admit.shape[0]
+        pad = n_qb * block_q - nq
+        if pad:
+            seg_admit = np.pad(seg_admit, ((0, pad), (0, 0), (0, 0)))
+        seg_qb = seg_admit.reshape(n_qb, block_q, *seg_admit.shape[1:]
+                                   ).any(axis=1)        # (n_qb, G, s)
+        cids = np.asarray(plans.cids[w])
+        tile_pos = np.asarray(plans.tile_pos[w])
+        qblock = np.asarray(plans.qblock[w])
+        n_qblock = np.asarray(plans.n_qblock[w])
+        n_drun = np.asarray(plans.n_drun[w])
+        for g in range(int(plans.n_tiles[w])):
+            wp = tile_pos[g]
+            for s in range(n_qblock[g]):
+                b = qblock[g, s]
+                admitted = int((seg_qb[b, wp]
+                                & (seg_counts[cids[wp]] > 0)).sum())
+                assert n_drun[g, s] == admitted, (w, g, s)
+                checked += 1
+    assert checked > 0
+
+
+def test_segment_major_layout_walks_fewer_subtiles():
+    """Engineered single-admitted-segment wave: the segment-major layout
+    walks ~ceil(segment/block_d) sub-tiles where the arrival-order
+    layout shatters the segment across the tile — the `a` vs
+    `1-(1-a)^BD` skip-bound lift, observed on walked_docs()."""
+    from repro.core.plan import plan_wave
+    walked = {}
+    for layout in ("sorted", "arrival"):
+        idx, q, _ = _world(8, layout)
+        G = 8
+        cids = jnp.arange(G, dtype=jnp.int32)
+        seg_admit = np.zeros((q.n_queries, G, idx.n_seg), bool)
+        seg_admit[:, :, 0] = True               # everyone admits seg 0
+        seg_admit = jnp.asarray(seg_admit)
+        plan = plan_wave(cids, jnp.ones((G,), bool),
+                         seg_admit.any(-1), seg_admit, 4,
+                         idx.doc_seg_mod[cids], idx.doc_mask[cids],
+                         block_d=8, seg_offsets=idx.seg_offsets[cids],
+                         sorted_upto=idx.sorted_upto[cids])
+        walked[layout] = int(plan.walked_docs())
+    assert walked["sorted"] < walked["arrival"], walked
+
+
+# ---------------------------------------------------------------------------
 # interpret-mode kernel smoke subset (the kernels-interpret CI job)
 # ---------------------------------------------------------------------------
 
-@settings(max_examples=3, deadline=None)
+@settings(max_examples=4, deadline=None)
 @given(
     mu=st.sampled_from([0.7, 1.0]),
     block_d=st.sampled_from([8, None]),
+    layout=st.sampled_from(["sorted", "dirty"]),
 )
-def test_doc_run_executor_kernel_smoke(mu, block_d):
-    """The Pallas doc-run executor end to end (interpret mode off-TPU):
-    tiny example budget, exactness at mu = 1 and true-score integrity +
-    counter sanity otherwise."""
-    idx, q, by_id = _world(3)
+def test_doc_run_executor_kernel_smoke(mu, block_d, layout):
+    """The Pallas per-qblock doc-run executor end to end (interpret mode
+    off-TPU): tiny example budget, exactness at mu = 1 and true-score
+    integrity + counter sanity otherwise, on both a fully-sorted and a
+    churned (dirty-tail) segment-major index. ``engine="batched"`` is
+    explicit — at batch 3 the ``auto`` default would route to the
+    per-query path."""
+    idx, q, by_id = _world(3, layout)
     cfg = SearchConfig(k=5, mu=mu, eta=1.0, block_q=4, block_d=block_d,
-                       use_kernel=True, bounds_impl="gemm")
+                       use_kernel=True, bounds_impl="gemm",
+                       engine="batched")
     out = retrieve(idx, q, cfg)
     _check_true_scores(out, by_id)
     if mu == 1.0:
         np.testing.assert_allclose(_sorted_scores(out),
-                                   _sorted_scores(_oracle(3, 5)),
+                                   _sorted_scores(_oracle(3, 5, layout)),
                                    rtol=1e-5, atol=1e-5)
     assert np.all(np.asarray(out.n_walked_docs)
                   <= np.asarray(out.n_scored_tiles) * idx.d_pad)
