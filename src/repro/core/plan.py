@@ -393,6 +393,41 @@ def plan_wave(cids: jax.Array, live: jax.Array, admit: jax.Array,
         block_q=block_q, block_d=block_d)
 
 
+def wave_summaries(plans: WavePlan, executed) -> list[dict]:
+    """Host-side per-wave work summary from *stacked* recorded plans
+    (the ``record_plans`` output of core/search.py: every WavePlan field
+    carries a leading ``(n_groups,)`` axis, ``executed`` marks waves the
+    early-exiting walk actually ran).
+
+    One dict per executed wave, in walk order: admitted tile count,
+    live executor grid blocks, admitted (query, tile) pairs, admitted
+    segments, and the doc slots the executor walks for the wave
+    (``n_dblock * block_d``, the per-wave term of
+    ``TopK.n_walked_docs``). This is what the observability layer hangs
+    per-wave trace-span args on (repro.obs / docs/observability.md) —
+    wave *counts* are exact even though wave *durations* inside one
+    fused device computation are not individually measurable."""
+    import numpy as np
+
+    ex = np.asarray(executed)
+    n_tiles = np.asarray(plans.n_tiles)
+    n_blocks = np.asarray(plans.n_blocks)
+    admit = np.asarray(plans.admit)
+    seg_admit = np.asarray(plans.seg_admit)
+    n_dblock = np.asarray(plans.n_dblock)
+    out = []
+    for g in np.nonzero(ex)[0]:
+        out.append({
+            "wave": int(g),
+            "tiles_admitted": int(n_tiles[g]),
+            "grid_blocks": int(n_blocks[g]),
+            "admitted_pairs": int(admit[g].sum()),
+            "admitted_segments": int(seg_admit[g].sum()),
+            "walked_doc_slots": int(n_dblock[g].sum()) * plans.block_d,
+        })
+    return out
+
+
 def doc_admission(plan: WavePlan, doc_seg_mod: jax.Array,
                   doc_mask: jax.Array) -> jax.Array:
     """(n_q, G, d_pad) bool: which (query, doc) scores are admitted.

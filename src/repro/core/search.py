@@ -80,6 +80,21 @@ NEG = jnp.float32(jnp.finfo(jnp.float32).min)
 AUTO_ENGINE_MIN_BATCH = 4
 
 
+def resolved_engine(cfg: "SearchConfig", n_q: int,
+                    record_plans: bool = False) -> str:
+    """The engine a retrieve with this (cfg, batch size) actually runs:
+    resolves the ``"auto"`` route (batch size is a trace-time shape).
+    The observability layer keys its counter semantics off this — the
+    batched engine's tile/doc-walk counters are batch-level, the
+    per-query engine's are per query (TopK docstring)."""
+    if cfg.engine != "auto":
+        return cfg.engine
+    # plan recording only exists on the batched engine, so it wins the
+    # route regardless of batch size
+    return ("per_query" if (n_q < AUTO_ENGINE_MIN_BATCH
+                            and not record_plans) else "batched")
+
+
 @dataclasses.dataclass(frozen=True)
 class SearchConfig:
     k: int = 10
@@ -641,16 +656,10 @@ def _retrieve_arrays(index: ClusterIndex, queries: QueryBatch,
     stats = cluster_bounds(index, queries, impl=cfg.bounds_impl,
                            use_kernel=cfg.use_kernel, qmaps=qmaps)
     seg_b, max_s, avg_s, order_key = _method_stats(stats, cfg)
-    engine = cfg.engine
-    if engine == "auto":
-        # tiny batches can't amortize the batched planner (measured
-        # regression at batch 1 — see AUTO_ENGINE_MIN_BATCH); batch size
-        # is a trace-time shape, so the routing costs nothing at runtime.
-        # Plan recording only exists on the batched engine, so it wins
-        # the route regardless of batch size.
-        engine = ("per_query" if (queries.n_queries < AUTO_ENGINE_MIN_BATCH
-                                  and not record_plans)
-                  else "batched")
+    # tiny batches can't amortize the batched planner (measured
+    # regression at batch 1 — see AUTO_ENGINE_MIN_BATCH); batch size
+    # is a trace-time shape, so the routing costs nothing at runtime
+    engine = resolved_engine(cfg, queries.n_queries, record_plans)
     if engine == "per_query":
         if record_plans:
             raise ValueError("plan recording requires engine='batched'")
@@ -714,6 +723,70 @@ def execute_plans(index: ClusterIndex, qmaps: jax.Array, plans,
     acc, _ = jax.lax.scan(step, jnp.zeros((qmaps.shape[0],)),
                           (plans, executed))
     return acc
+
+
+# jitted once at module level: re-jitting a fresh lambda per call would
+# re-trace the dense-map build every time the split seam is used
+_dense_map_jit = jax.jit(lambda q: q.dense_map())
+
+
+def planner_executor_split(index: ClusterIndex, queries: QueryBatch,
+                           cfg: SearchConfig,
+                           budget: jax.Array | None = None,
+                           reps: int = 1,
+                           total_ms: float | None = None) -> tuple:
+    """The planner-vs-executor **timing seam** (host-side, blocking):
+    one plan-recording retrieval (:func:`retrieve_with_plans`) plus a
+    timed executor-only replay (:func:`execute_plans`) of the recorded
+    work queues. Used by the serving engine's sampled split requests
+    (repro.obs) and by benchmarks/serve_throughput.py — one seam, one
+    definition of "planner share".
+
+    ``total_ms`` — caller-measured end-to-end p50 for the same
+    (index, queries, cfg); when None the plan-recording walk itself is
+    timed over ``reps`` (its total carries the plan-buffer recording
+    overhead — fine for a sampled observability estimate, benchmarks
+    pass their plain-retrieve p50). The dense query maps are
+    materialized *outside* the timed replay: that cost is planner-side
+    and must not inflate executor time.
+
+    Returns ``(topk, (plans, executed), split)`` with ``split`` keys
+    ``total_ms`` / ``executor_ms`` / ``planner_ms`` / ``planner_share``
+    (medians over ``reps``). Both halves are compiled (warmed) before
+    any timing."""
+    import time as _time
+
+    import numpy as _np
+
+    # warm / compile both halves and materialize the recorded plans
+    topk, (plans, executed) = jax.block_until_ready(
+        retrieve_with_plans(index, queries, cfg, budget=budget))
+    qmaps = jax.block_until_ready(_dense_map_jit(queries))
+    jax.block_until_ready(
+        execute_plans(index, qmaps, plans, executed, cfg))
+    if total_ms is None:
+        lat = []
+        for _ in range(max(reps, 1)):
+            t0 = _time.perf_counter()
+            jax.block_until_ready(
+                retrieve_with_plans(index, queries, cfg, budget=budget))
+            lat.append(_time.perf_counter() - t0)
+        total_ms = float(_np.median(lat)) * 1e3
+    lat = []
+    for _ in range(max(reps, 1)):
+        t0 = _time.perf_counter()
+        jax.block_until_ready(
+            execute_plans(index, qmaps, plans, executed, cfg))
+        lat.append(_time.perf_counter() - t0)
+    executor_ms = float(_np.median(lat)) * 1e3
+    planner_ms = max(total_ms - executor_ms, 0.0)
+    split = {
+        "total_ms": total_ms,
+        "executor_ms": executor_ms,
+        "planner_ms": planner_ms,
+        "planner_share": planner_ms / max(total_ms, 1e-9),
+    }
+    return topk, (plans, executed), split
 
 
 def asc_retrieve(index: ClusterIndex, queries: QueryBatch, k: int,

@@ -2,7 +2,8 @@
 
 Builds an ASC cluster-skipping index over a synthetic corpus (or cold
 starts from a saved one via --load-dir) and serves query batches through
-the RetrievalEngine, printing latency percentiles and work counters.
+the RetrievalEngine, printing a registry-backed summary of latency
+percentiles and the pruning funnel.
 
 Lifecycle options:
   --churn N       between batches, delete+insert N docs through the
@@ -14,12 +15,28 @@ Lifecycle options:
   --save-dir D    persist the final index (versioned npz shards).
   --load-dir D    cold-start from a persisted index instead of building.
 
+Observability options (docs/observability.md):
+  --metrics-port P   serve Prometheus text on http://0.0.0.0:P/metrics
+                     (and a JSON snapshot on /metrics.json) while the
+                     loop runs.
+  --metrics-json F   at exit, write the registry snapshot to F (JSON)
+                     and the Prometheus exposition next to it (.prom) —
+                     the CI smoke job validates both offline.
+  --trace-dir D      write per-request Chrome-trace JSON (Perfetto-
+                     loadable) under D; --trace-every N samples every
+                     Nth request.
+  --profile-first-n N  additionally wrap the first N requests in a
+                     jax.profiler device capture under D/jax_profile.
+  --split-every N    every Nth request, split planner vs executor wall
+                     time into the registry (0 = only traced requests).
+
 With ``--devices N`` the index is sharded over a forced host mesh and
 served through the shard_map selective-search path — the same code that
 runs on the production (pod, data, model) mesh.
 """
 
 import argparse
+import json
 import os
 
 
@@ -41,7 +58,78 @@ def _parse():
     ap.add_argument("--save-dir", type=str, default="")
     ap.add_argument("--load-dir", type=str, default="")
     ap.add_argument("--devices", type=int, default=0)
+    ap.add_argument("--metrics-port", type=int, default=0,
+                    help="serve /metrics on this port (0 = off)")
+    ap.add_argument("--metrics-json", type=str, default="",
+                    help="write registry snapshot JSON (+ .prom text) "
+                         "here at exit")
+    ap.add_argument("--trace-dir", type=str, default="",
+                    help="write per-request Chrome-trace JSON here")
+    ap.add_argument("--trace-every", type=int, default=1,
+                    help="trace every Nth request")
+    ap.add_argument("--profile-first-n", type=int, default=0,
+                    help="jax.profiler capture for the first N requests")
+    ap.add_argument("--split-every", type=int, default=0,
+                    help="planner/executor split every Nth request "
+                         "(0 = only on traced requests)")
     return ap.parse_args()
+
+
+def _summary(registry, stats, index_m: int) -> str:
+    """The end-of-run report, rendered from the registry snapshot —
+    the same numbers /metrics exposes, not a parallel accounting."""
+    snap = registry.snapshot()
+
+    def scalar(name, default=0.0):
+        v = snap.get(name, default)
+        return v if not isinstance(v, dict) else default
+
+    lines = [f"[serve] {stats.n_queries} queries in "
+             f"{stats.n_requests} batches: mean {stats.mean_ms:.2f} ms/q, "
+             f"batch p50 {stats.p(50):.2f} ms, p99 {stats.p(99):.2f} ms"]
+    walked = scalar("funnel_tiles_walked_total")
+    if walked:
+        lines.append(
+            "[serve] funnel: "
+            f"{scalar('funnel_clusters_budgeted_total'):.0f} budgeted -> "
+            f"{scalar('funnel_clusters_scored_total'):.0f} clusters -> "
+            f"{walked:.0f} tiles walked -> "
+            f"{scalar('funnel_tiles_scored_total'):.0f} scored -> "
+            f"{scalar('funnel_doc_slots_walked_total'):.0f} doc slots -> "
+            f"{scalar('funnel_docs_scored_total'):.0f} docs scored "
+            f"(tile {scalar('funnel_tile_compaction_ratio'):.2f}, "
+            f"doc {scalar('funnel_doc_compaction_ratio'):.2f})")
+    if scalar("split_requests_total"):
+        lines.append(
+            f"[serve] planner share {scalar('planner_share'):.2f} "
+            f"over {scalar('split_requests_total'):.0f} sampled "
+            f"split(s)")
+    if scalar("lifecycle_epoch_swaps_total"):
+        lines.append(
+            f"[serve] lifecycle: epoch {scalar('lifecycle_epoch'):.0f}, "
+            f"{scalar('lifecycle_epoch_swaps_total'):.0f} swap(s), "
+            f"{scalar('index_compactions_total'):.0f} compaction(s), "
+            f"slack {scalar('index_slack'):.3f}, unsorted tail "
+            f"{scalar('index_unsorted_tail_fraction'):.3f}")
+    if scalar("adaptive_budget_clusters"):
+        lines.append(
+            f"[serve] adaptive budget -> "
+            f"{min(scalar('adaptive_budget_clusters'), index_m):.0f}"
+            f"/{index_m} clusters "
+            f"(cost {scalar('adaptive_cost_ms'):.4f} ms/cluster)")
+    return "\n".join(lines)
+
+
+def _dump_metrics(registry, path: str) -> None:
+    """Snapshot JSON at ``path`` + Prometheus text next to it, so CI
+    can validate both expositions without racing an HTTP server."""
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(registry.snapshot(), f, indent=1)
+    prom = os.path.splitext(path)[0] + ".prom"
+    with open(prom, "w") as f:
+        f.write(registry.render_prometheus())
+    print(f"[serve] metrics -> {path} + {prom}")
 
 
 def main() -> None:
@@ -61,9 +149,26 @@ def main() -> None:
     from repro.core.search import SearchConfig, retrieve
     from repro.data.synthetic import CorpusSpec, make_corpus, make_queries
     from repro.lifecycle import IndexWriter, load_index, save_index
+    from repro.obs import MetricsRegistry, Observability
     from repro.serving.engine import (AdaptiveBudget, RetrievalEngine,
-                                      distributed_retrieve,
+                                      ServeStats, distributed_retrieve,
                                       index_shard_specs)
+
+    want_obs = bool(args.metrics_port or args.metrics_json
+                    or args.trace_dir or args.profile_first_n
+                    or args.split_every)
+    obs = Observability(
+        trace_dir=args.trace_dir or None,
+        trace_sample_every=max(args.trace_every, 1),
+        profile_first_n=args.profile_first_n,
+        split_every=args.split_every) if want_obs else None
+    registry = obs.registry if obs is not None else MetricsRegistry()
+
+    server = None
+    if args.metrics_port:
+        from repro.obs.exposition import MetricsServer
+        server = MetricsServer(registry, port=args.metrics_port)
+        print(f"[serve] /metrics on port {server.port}")
 
     spec = CorpusSpec(n_docs=args.n_docs, vocab=args.vocab,
                       n_topics=max(8, args.clusters // 2))
@@ -106,7 +211,9 @@ def main() -> None:
                                                mesh.devices.shape)))
 
         import time
-        lat = []
+        # record through the same registry-backed accounting as the
+        # single-host engine, so the summary and exposition match
+        dstats = ServeStats(registry=registry)
         with mesh:
             for step in range(args.batches):
                 q, _ = make_queries(spec, args.batch_size, doc_topic,
@@ -116,24 +223,33 @@ def main() -> None:
                     is_leaf=lambda x: hasattr(x, "shape")))
                 t0 = time.perf_counter()
                 out = jax.block_until_ready(
-                    distributed_retrieve(index, q, cfg, mesh))
-                lat.append((time.perf_counter() - t0) * 1e3
-                           / args.batch_size)
-        print(f"[serve] distributed: mean {np.mean(lat[1:]):.2f} ms/q "
-              f"p99 {np.percentile(lat[1:], 99):.2f}")
+                    distributed_retrieve(
+                        index, q, cfg, mesh,
+                        registry=registry if obs is not None else None))
+                dstats.record(args.batch_size,
+                              time.perf_counter() - t0)
+        print(_summary(registry, dstats, index.m))
+        if args.metrics_json:
+            _dump_metrics(registry, args.metrics_json)
+        if server is not None:
+            server.close()
         return
 
     writer = None
     if args.churn > 0:
         # synthetic churn docs have no dense representation, so placement
         # is least-loaded; pass centroids + dense_rep for real corpora
-        writer = IndexWriter(index, seed=9)
+        writer = IndexWriter(index, seed=9, registry=registry)
         source = writer.publisher
     else:
         source = index
     ab = (AdaptiveBudget(args.budget_ms, init_cost_ms=0.05)
           if args.budget_ms > 0 else None)
-    eng = RetrievalEngine(source, cfg, adaptive=ab)
+    eng = RetrievalEngine(source, cfg, adaptive=ab, obs=obs)
+    if obs is None:
+        # no obs flags: the engine still accounts into `registry` so the
+        # final summary renders from one source of truth
+        eng.stats = ServeStats(registry=registry)
     warm, _ = make_queries(spec, args.batch_size, doc_topic, seed=997)
     eng.warmup(warm)
 
@@ -157,19 +273,18 @@ def main() -> None:
         q, _ = make_queries(spec, args.batch_size, doc_topic, seed=step)
         out = eng.search(q)
 
-    s = eng.stats
-    line = (f"[serve] {s.n_queries} queries: mean {s.mean_ms:.2f} ms/q, "
-            f"p50 {s.p(50):.2f}, p99 {s.p(99):.2f}")
-    if out is not None:
-        line += (f"; last batch scored "
-                 f"{float(out.n_scored_clusters.mean()):.1f}"
-                 f"/{index.m} clusters")
-    if writer is not None:
-        line += (f"; epoch {eng.last_epoch}, "
-                 f"{writer.mutable.n_compactions} compaction(s)")
-    if ab is not None:
-        line += f"; adaptive budget -> {ab.budget()} clusters"
-    print(line)
+    print(_summary(registry, eng.stats, index.m))
+    if out is not None and obs is None:
+        # without obs the funnel counters are empty; keep the quick
+        # work-counter readout from the last batch
+        print(f"[serve] last batch scored "
+              f"{float(out.n_scored_clusters.mean()):.1f}"
+              f"/{index.m} clusters")
+
+    if args.metrics_json:
+        _dump_metrics(registry, args.metrics_json)
+    if server is not None:
+        server.close()
 
     if args.save_dir:
         final = eng.index

@@ -33,6 +33,8 @@ offline build uses — restoring tight maxima and a fresh scale.
 
 from __future__ import annotations
 
+import time
+
 import numpy as np
 import jax.numpy as jnp
 
@@ -50,13 +52,21 @@ class MutableIndex:
     Single-writer: callers serialize access (the IndexWriter in
     lifecycle/snapshot.py does). Readers never touch this object — they
     search immutable snapshots taken with :meth:`snapshot`.
+
+    With ``registry`` (a :class:`repro.obs.MetricsRegistry`) every write
+    mirrors the staleness story into ``index_*`` metrics: insert /
+    delete / clip counters, the slack and unsorted-tail-fraction gauges
+    they drive, and a compaction-duration histogram (the writer-side
+    pause a compaction costs; docs/observability.md §lifecycle).
     """
 
     def __init__(self, index: ClusterIndex,
                  centroids: np.ndarray | None = None,
                  compact_threshold: float = 0.25,
                  seg_method: str = "random_uniform",
-                 seed: int = 0):
+                 seed: int = 0,
+                 registry=None):
+        self.registry = registry
         self.doc_tids = np.asarray(index.doc_tids).copy()
         self.doc_tw = np.asarray(index.doc_tw).copy()
         self.doc_mask = np.asarray(index.doc_mask).copy()
@@ -201,6 +211,15 @@ class MutableIndex:
         self.cluster_ndocs[c] += 1
         self._loc[int(doc_id)] = (c, slot)
         self.n_inserts += 1
+        if self.registry is not None:
+            self.registry.counter("index_inserts_total",
+                                  "documents inserted").inc()
+            if clipped:
+                self.registry.counter(
+                    "index_clipped_inserts_total",
+                    "inserts whose weights clipped at the pinned "
+                    "quantization scale").inc()
+            self._mirror_staleness()
         return int(doc_id)
 
     def delete(self, doc_id: int) -> bool:
@@ -219,6 +238,10 @@ class MutableIndex:
         self.doc_seg_mod[c, slot] = 0
         self.cluster_ndocs[c] -= 1
         self.n_deletes += 1
+        if self.registry is not None:
+            self.registry.counter("index_deletes_total",
+                                  "documents tombstoned").inc()
+            self._mirror_staleness()
         return True
 
     # -- staleness / compaction ------------------------------------------
@@ -226,6 +249,24 @@ class MutableIndex:
         """Staleness metric in [0, inf): stale-bound contributors (deleted
         docs whose maxima linger + clipped inserts) per live doc."""
         return (self.n_deletes + self.n_clipped) / max(1, self.live)
+
+    def unsorted_tail_fraction(self) -> float:
+        """Fraction of capacity outside the segment-sorted prefixes —
+        slots the planner's prefix-table doc runs cannot cover (PR 5
+        layout); grows with churn, reset to 0 by compaction."""
+        return float(1.0 - self.sorted_upto.sum()
+                     / max(self.m * self.d_pad, 1))
+
+    def _mirror_staleness(self) -> None:
+        reg = self.registry
+        reg.gauge("index_live_docs", "live (non-tombstoned) docs").set(
+            self.live)
+        reg.gauge("index_slack",
+                  "stale-bound contributors per live doc "
+                  "(compaction trigger)").set(self.slack())
+        reg.gauge("index_unsorted_tail_fraction",
+                  "capacity fraction outside segment-sorted "
+                  "prefixes").set(self.unsorted_tail_fraction())
 
     def needs_compaction(self) -> bool:
         return self.slack() > self.compact_threshold
@@ -245,6 +286,7 @@ class MutableIndex:
         retained *unclipped* float weights — the stored uint8 values
         alone max out at exactly ``255 * scale`` and could never widen
         the range."""
+        t0 = time.perf_counter()
         live_c, live_s = np.nonzero(self.doc_mask)
         n_live = live_c.size
         safe_tids = self.doc_tids[live_c, live_s]          # (n_live, t_pad)
@@ -304,6 +346,17 @@ class MutableIndex:
         self.n_deletes = 0
         self.n_clipped = len(self._clipped)   # 0 unless requantize skipped
         self.n_compactions += 1
+        if self.registry is not None:
+            from repro.obs.metrics import DURATION_BUCKETS_S
+            self.registry.counter("index_compactions_total",
+                                  "index compactions run").inc()
+            self.registry.histogram(
+                "index_compaction_duration_seconds",
+                "writer-side pause per compaction (re-pack + "
+                "requantize + rebalance)",
+                buckets=DURATION_BUCKETS_S).observe(
+                time.perf_counter() - t0)
+            self._mirror_staleness()
 
     def live_ids(self) -> np.ndarray:
         """Global ids of all live (non-tombstoned) documents."""

@@ -56,9 +56,16 @@ class SnapshotPublisher:
     worst observed overstay — the double-buffering depth in seconds; a
     growing value means some reader is sitting on an old epoch and the
     publisher is effectively triple-or-more-buffered.
+
+    With ``registry`` (a :class:`repro.obs.MetricsRegistry`) every swap,
+    pin and collection is mirrored into ``lifecycle_*`` metrics, so the
+    exposition endpoint sees writer-side state even between searches
+    (the serving engine mirrors the same numbers per request).
     """
 
-    def __init__(self, index: ClusterIndex | None = None):
+    def __init__(self, index: ClusterIndex | None = None,
+                 registry=None):
+        self.registry = registry
         self._lock = threading.Lock()
         self._current: IndexSnapshot | None = None
         # weakref only: the publisher must not pin the N-1 epoch's device
@@ -84,7 +91,13 @@ class SnapshotPublisher:
                 weakref.finalize(
                     old, self._note_collected, old.epoch, time.time())
             self._current = snap
-            return snap
+        if self.registry is not None:
+            self.registry.counter(
+                "lifecycle_epoch_swaps_total",
+                "snapshot epochs published").inc()
+            self.registry.gauge(
+                "lifecycle_epoch", "current published epoch").set(epoch)
+        return snap
 
     def _note_collected(self, epoch: int, superseded_s: float) -> None:
         lifetime = time.time() - superseded_s
@@ -92,6 +105,15 @@ class SnapshotPublisher:
             self._collected_epochs += 1
             self._max_lifetime_s = max(self._max_lifetime_s, lifetime)
             self._readers.pop(epoch, None)
+        if self.registry is not None:
+            self.registry.gauge(
+                "lifecycle_collected_epochs",
+                "superseded epochs garbage-collected").set(
+                self._collected_epochs)
+            self.registry.gauge(
+                "lifecycle_max_epoch_lifetime_seconds",
+                "longest any superseded epoch was held alive "
+                "by readers").set(self._max_lifetime_s)
 
     # -- reader accounting -------------------------------------------------
     def pin(self) -> IndexSnapshot:
@@ -102,7 +124,9 @@ class SnapshotPublisher:
                 raise RuntimeError("nothing published yet")
             snap = self._current
             self._readers[snap.epoch] = self._readers.get(snap.epoch, 0) + 1
-            return snap
+            n_live = sum(self._readers.values())
+        self._mirror_pins(n_live)
+        return snap
 
     def unpin(self, snap: IndexSnapshot) -> None:
         with self._lock:
@@ -111,6 +135,14 @@ class SnapshotPublisher:
                 self._readers[snap.epoch] = n
             else:
                 self._readers.pop(snap.epoch, None)
+            n_live = sum(self._readers.values())
+        self._mirror_pins(n_live)
+
+    def _mirror_pins(self, n_live: int) -> None:
+        if self.registry is not None:
+            self.registry.gauge(
+                "lifecycle_pinned_readers",
+                "live pinned readers across epochs").set(n_live)
 
     def reader_counts(self) -> dict[int, int]:
         """Live pinned readers per epoch (only epochs with readers)."""
@@ -161,12 +193,13 @@ class IndexWriter:
                  compact_threshold: float = 0.25,
                  publisher: SnapshotPublisher | None = None,
                  seg_method: str = "random_uniform",
-                 seed: int = 0):
+                 seed: int = 0,
+                 registry=None):
         self.mutable = MutableIndex(
             index, centroids=centroids, compact_threshold=compact_threshold,
-            seg_method=seg_method, seed=seed)
+            seg_method=seg_method, seed=seed, registry=registry)
         self.publisher = publisher if publisher is not None \
-            else SnapshotPublisher(index)
+            else SnapshotPublisher(index, registry=registry)
         self._pending = 0
 
     @property

@@ -1,0 +1,30 @@
+"""Observability: metrics registry, per-request trace spans, exposition.
+
+See docs/observability.md for the metric catalogue, the pruning-funnel
+diagram, the trace-span hierarchy and the Perfetto how-to. The pieces:
+
+  * :mod:`repro.obs.metrics` — counters / gauges / fixed-bucket weighted
+    histograms in a :class:`MetricsRegistry`, rendered as Prometheus
+    text or a JSON snapshot;
+  * :mod:`repro.obs.trace` — per-request spans exported as Chrome-trace
+    JSON (Perfetto-loadable), optional ``jax.profiler`` capture;
+  * :mod:`repro.obs.funnel` — the TopK-counter -> registry translation
+    and the :class:`Observability` bundle the serving stack threads;
+  * :mod:`repro.obs.exposition` — the ``/metrics`` HTTP endpoint.
+"""
+
+from repro.obs.funnel import (Observability, funnel_from_topk,
+                              record_funnel)
+from repro.obs.metrics import (Counter, DURATION_BUCKETS_S, Gauge,
+                               Histogram, LATENCY_BUCKETS_MS,
+                               MetricsRegistry, default_registry)
+from repro.obs.trace import (NULL_REQUEST, RequestTrace, TraceRecorder,
+                             validate_chrome_trace)
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "MetricsRegistry",
+    "default_registry", "LATENCY_BUCKETS_MS", "DURATION_BUCKETS_S",
+    "TraceRecorder", "RequestTrace", "NULL_REQUEST",
+    "validate_chrome_trace", "Observability", "funnel_from_topk",
+    "record_funnel",
+]

@@ -14,12 +14,21 @@ Time budgets: the paper's ms budget becomes a *cluster visitation budget*
 semantics match; see DESIGN.md §2). ``AdaptiveBudget`` converts a latency
 target to a budget from observed per-cluster cost — the serving-loop
 feedback controller.
+
+Observability (repro.obs, docs/observability.md): pass an
+:class:`repro.obs.Observability` to the engine and every ``search``
+records the full pruning funnel (clusters budgeted -> tiles walked ->
+tiles scored -> doc slots walked -> docs scored) plus latency histograms
+into its metrics registry; sampled requests additionally split planner
+vs executor wall time through the :func:`planner_executor_split` seam
+and emit per-request trace spans (plan / execute / topk_merge /
+epoch_pin, per-wave children) as Perfetto-loadable Chrome-trace JSON.
+With ``obs=None`` the search path is exactly the plain jitted call.
 """
 
 from __future__ import annotations
 
 import collections
-import dataclasses
 import time
 
 import jax
@@ -27,61 +36,112 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from repro.core.search import SearchConfig, retrieve, _retrieve_arrays
+from repro.core.search import (SearchConfig, planner_executor_split,
+                               resolved_engine, retrieve,
+                               _retrieve_arrays)
+from repro.core.plan import wave_summaries
 from repro.core.types import ClusterIndex, QueryBatch, TopK
 from repro.lifecycle.snapshot import IndexSnapshot, SnapshotPublisher
+from repro.obs.funnel import Observability, funnel_from_topk, record_funnel
+from repro.obs.metrics import (LATENCY_BUCKETS_MS, MetricsRegistry)
 from repro.utils import shard_map
 
 
-@dataclasses.dataclass
 class ServeStats:
-    """Rolling serve-loop accounting. ``latencies_ms`` is a bounded window
-    (percentiles over recent traffic); under sustained load an unbounded
-    list would grow forever.
+    """Serve-loop accounting on registry instruments.
+
+    Tail-latency semantics (docs/perf.md §tail-latency): ``record``
+    observes one *batch* latency into the ``serve_batch_latency_ms``
+    histogram with weight ``n_queries``, so ``p(99)`` answers "the batch
+    latency the 99th-percentile query experienced". The previous
+    implementation appended the batch-*mean* per-query ms to a deque and
+    took percentiles over those means — a percentile over batch means,
+    which underestimates the real tail whenever batch sizes or batch
+    latencies vary. ``latencies_ms`` survives as a bounded window of
+    recent per-query means for eyeballing; percentiles no longer read
+    it, and memory is O(buckets + window) under any traffic.
 
     Snapshot GC metrics (mirrored from the publisher after every search
     when serving a live index): ``epoch_reader_counts`` is the live pin
     count per epoch, ``max_epoch_lifetime_s`` the longest any superseded
     epoch has been held alive by in-flight readers, and
     ``collected_epochs`` how many old epochs have been garbage-collected
-    so far."""
+    so far.
+    """
 
-    window: int = 4096
-    n_queries: int = 0
-    total_time_s: float = 0.0
-    latencies_ms: collections.deque = None
-    epoch_reader_counts: dict = dataclasses.field(default_factory=dict)
-    max_epoch_lifetime_s: float = 0.0
-    collected_epochs: int = 0
+    def __init__(self, registry: MetricsRegistry | None = None,
+                 window: int = 4096):
+        self.registry = registry if registry is not None \
+            else MetricsRegistry()
+        self.window = window
+        self.latencies_ms: collections.deque = collections.deque(
+            maxlen=window)
+        self._hist = self.registry.histogram(
+            "serve_batch_latency_ms",
+            "batch latency, weighted by the batch's query count",
+            buckets=LATENCY_BUCKETS_MS)
+        self._queries = self.registry.counter(
+            "serve_queries_total", "queries served")
+        self._requests = self.registry.counter(
+            "serve_requests_total", "search requests (batches) served")
+        self._time = self.registry.counter(
+            "serve_time_seconds_total", "wall time spent in search")
+        # lifecycle mirror (plain attributes, same surface as before)
+        self.epoch_reader_counts: dict = {}
+        self.max_epoch_lifetime_s: float = 0.0
+        self.collected_epochs: int = 0
 
-    def __post_init__(self):
-        if self.latencies_ms is None:
-            self.latencies_ms = collections.deque(maxlen=self.window)
+    @property
+    def n_queries(self) -> int:
+        return int(self._queries.value)
+
+    @property
+    def n_requests(self) -> int:
+        return int(self._requests.value)
+
+    @property
+    def total_time_s(self) -> float:
+        return self._time.value
 
     @property
     def mean_ms(self) -> float:
-        return float(np.mean(self.latencies_ms)) if self.latencies_ms else 0.0
+        """Mean per-query latency (total time / total queries)."""
+        return self._time.value * 1e3 / max(self.n_queries, 1)
 
     def p(self, q: float) -> float:
-        return float(np.percentile(self.latencies_ms, q)) \
-            if self.latencies_ms else 0.0
+        """Weighted percentile of *batch* latency ms: the batch latency
+        the q-th percentile query experienced (histogram-bucket
+        resolution)."""
+        return self._hist.quantile(q)
 
     def record(self, n_queries: int, elapsed_s: float) -> float:
-        self.n_queries += n_queries
-        self.total_time_s += elapsed_s
-        per_query_ms = elapsed_s * 1e3 / max(n_queries, 1)
+        batch_ms = elapsed_s * 1e3
+        self._hist.observe(batch_ms, weight=max(n_queries, 1))
+        self._queries.inc(n_queries)
+        self._requests.inc()
+        self._time.inc(elapsed_s)
+        per_query_ms = batch_ms / max(n_queries, 1)
         self.latencies_ms.append(per_query_ms)
         return per_query_ms
 
 
 class AdaptiveBudget:
-    """Latency target -> cluster budget, from an online cost estimate."""
+    """Latency target -> cluster budget, from an online cost estimate.
+
+    ``observe`` with ``clusters_scored == 0`` (a fully-pruned batch)
+    carries no cost signal, but it must not freeze the estimate: after a
+    load spike inflated ``cost_ms``, a run of fully-pruned batches used
+    to leave the budget stuck at its floor forever. Empty observations
+    now decay the EMA toward ``cost_floor_ms``, so the budget recovers
+    at the same time constant the estimator rises with.
+    """
 
     def __init__(self, target_ms: float, init_cost_ms: float = 0.05,
-                 ema: float = 0.9):
+                 ema: float = 0.9, cost_floor_ms: float = 1e-3):
         self.target_ms = target_ms
         self.cost_ms = init_cost_ms
         self.ema = ema
+        self.cost_floor_ms = cost_floor_ms
 
     def budget(self) -> int:
         return max(8, int(self.target_ms / max(self.cost_ms, 1e-6)))
@@ -90,6 +150,11 @@ class AdaptiveBudget:
         if clusters_scored > 0:
             c = elapsed_ms / clusters_scored
             self.cost_ms = self.ema * self.cost_ms + (1 - self.ema) * c
+        else:
+            # no work happened: decay toward the floor instead of
+            # freezing, so a post-spike estimate cannot pin the budget
+            self.cost_ms = max(self.ema * self.cost_ms,
+                               self.cost_floor_ms)
 
 
 class RetrievalEngine:
@@ -102,21 +167,32 @@ class RetrievalEngine:
     of an in-flight query. The budget is passed to the jitted search as a
     *traced* scalar, so the ``adaptive`` latency feedback loop retargets
     the cluster budget every batch without recompiling.
+
+    ``obs`` (optional :class:`repro.obs.Observability`) turns on
+    per-request funnel/latency recording and — on sampled requests —
+    the planner/executor split + trace spans. ``self.stats`` records
+    into ``obs.registry`` when given, so the CLI, the exposition
+    endpoint and the benchmarks read one source of truth.
     """
 
     def __init__(self, source: ClusterIndex | IndexSnapshot
                  | SnapshotPublisher, cfg: SearchConfig,
                  adaptive: AdaptiveBudget | None = None,
-                 stats_window: int = 4096):
+                 stats_window: int = 4096,
+                 obs: Observability | None = None):
         if isinstance(source, ClusterIndex):
             source = IndexSnapshot.of(source, epoch=0)
         self._source = source
         self.cfg = cfg
         self.adaptive = adaptive
-        self.stats = ServeStats(window=stats_window)
+        self.obs = obs
+        self.stats = ServeStats(
+            registry=obs.registry if obs is not None else None,
+            window=stats_window)
         self.last_epoch: int | None = None
         self._fn = jax.jit(
             lambda idx, q, budget: retrieve(idx, q, cfg, budget=budget))
+        self._split_warm = False
 
     def _resolve(self) -> IndexSnapshot:
         if isinstance(self._source, SnapshotPublisher):
@@ -147,30 +223,146 @@ class RetrievalEngine:
         jax.block_until_ready(
             self._fn(snap.index, queries, self._budget(snap)))
 
+    # -- the serving hot path ---------------------------------------------
     def search(self, queries: QueryBatch) -> TopK:
+        obs = self.obs
+        if obs is None:
+            return self._search_impl(queries, None, None, False)
+        rid, trace, want_split = obs.next_request()
+        with trace:
+            with obs.tracer.maybe_profile(rid):
+                out = self._search_impl(queries, obs, trace, want_split)
+        return out
+
+    def _search_impl(self, queries: QueryBatch, obs, trace,
+                     want_split: bool) -> TopK:
+        from repro.obs.trace import NULL_REQUEST
+        if trace is None:
+            trace = NULL_REQUEST
         live = isinstance(self._source, SnapshotPublisher)
         # pin one epoch for this request (counted as a live reader when
         # serving a publisher, so GC metrics see in-flight queries)
-        snap = self._source.pin() if live else self._resolve()
+        with trace.span("epoch_pin", live=live):
+            snap = self._source.pin() if live else self._resolve()
+        budget = self._budget(snap)
         try:
-            t0 = time.perf_counter()
-            out = jax.block_until_ready(
-                self._fn(snap.index, queries, self._budget(snap)))
-            dt = time.perf_counter() - t0
+            if want_split:
+                out, dt = self._search_split(snap, queries, budget,
+                                             obs, trace)
+            else:
+                t0 = time.perf_counter()
+                out = jax.block_until_ready(
+                    self._fn(snap.index, queries, budget))
+                dt = time.perf_counter() - t0
         finally:
             if live:
                 self._source.unpin(snap)
-        per_query_ms = self.stats.record(queries.n_queries, dt)
-        self.last_epoch = snap.epoch
+        # final materialization + accounting: the host side of the top-k
+        # merge (device work is inside the span above)
+        with trace.span("topk_merge"):
+            per_query_ms = self.stats.record(queries.n_queries, dt)
+            self.last_epoch = snap.epoch
+            if obs is not None:
+                self._record_request(obs, trace, snap, queries, out,
+                                     budget, dt)
         if live:
             gc = self._source.gc_stats()
             self.stats.epoch_reader_counts = gc["live_readers"]
             self.stats.max_epoch_lifetime_s = gc["max_epoch_lifetime_s"]
             self.stats.collected_epochs = gc["collected_epochs"]
+            if obs is not None:
+                self._mirror_lifecycle(obs.registry, gc, snap)
         if self.adaptive is not None:
             self.adaptive.observe(float(out.n_scored_clusters.mean()),
                                   per_query_ms)
+            if obs is not None:
+                reg = obs.registry
+                reg.gauge("adaptive_cost_ms",
+                          "EMA per-cluster cost estimate").set(
+                    self.adaptive.cost_ms)
+                reg.gauge("adaptive_budget_clusters",
+                          "cluster budget the controller will grant "
+                          "next batch").set(self.adaptive.budget())
         return out
+
+    def _search_split(self, snap, queries, budget, obs, trace):
+        """Sampled request: run the plan-recording walk + executor-only
+        replay through the shared timing seam, emit plan/execute spans
+        (per-wave children with exact admission counts, durations
+        apportioned by each wave's walked doc slots — the waves run
+        inside one fused device computation and are not individually
+        measurable) and record the split histograms."""
+        if not self._split_warm:
+            # compile the plans/replay path outside any timing so the
+            # first sampled request doesn't record a compile as planner
+            # time (the seam warms too, but through the jit cache)
+            planner_executor_split(snap.index, queries, self.cfg,
+                                   budget=budget, reps=1)
+            self._split_warm = True
+        t_wall0 = time.perf_counter()
+        topk, (plans, executed), split = planner_executor_split(
+            snap.index, queries, self.cfg, budget=budget, reps=1)
+        dt = time.perf_counter() - t_wall0
+        reg = obs.registry
+        reg.histogram("split_planner_ms",
+                      "planner wall time per sampled request "
+                      "(bounds + admission + queues + merge)").observe(
+            split["planner_ms"])
+        reg.histogram("split_executor_ms",
+                      "executor-replay wall time per sampled "
+                      "request").observe(split["executor_ms"])
+        reg.gauge("planner_share",
+                  "last sampled request: planner wall-time share of "
+                  "the batched walk").set(split["planner_share"])
+        reg.counter("split_requests_total",
+                    "requests that ran the planner/executor split").inc()
+        if trace.enabled:
+            now_us = trace._now_us()
+            plan_us = int(split["planner_ms"] * 1e3)
+            exec_us = int(split["executor_ms"] * 1e3)
+            trace.synthetic_span("plan", now_us - plan_us - exec_us,
+                                 plan_us,
+                                 planner_share=split["planner_share"])
+            waves = wave_summaries(plans, executed)
+            total_slots = sum(w["walked_doc_slots"] for w in waves) or 1
+            trace.synthetic_span("execute", now_us - exec_us, exec_us,
+                                 n_waves=len(waves))
+            t = now_us - exec_us
+            for w in waves:
+                w_us = int(exec_us * w["walked_doc_slots"] / total_slots)
+                trace.synthetic_span(f"wave_{w['wave']:03d}", t, w_us,
+                                     **w)
+                t += w_us
+        return topk, dt
+
+    def _record_request(self, obs, trace, snap, queries, out, budget,
+                        dt) -> None:
+        n_q = queries.n_queries
+        batched = resolved_engine(self.cfg, n_q) == "batched"
+        funnel = funnel_from_topk(
+            out, batched=batched, n_q=n_q, d_pad=snap.index.d_pad,
+            budget_clusters=min(int(budget), snap.index.m))
+        record_funnel(obs.registry, funnel)
+        obs.registry.gauge("serve_epoch",
+                           "epoch of the most recent search").set(
+            snap.epoch)
+        trace.set_args(batch=n_q, epoch=snap.epoch,
+                       engine="batched" if batched else "per_query",
+                       batch_ms=round(dt * 1e3, 3),
+                       **{k: v for k, v in funnel.items()
+                          if k != "d_pad"})
+
+    @staticmethod
+    def _mirror_lifecycle(registry, gc: dict, snap) -> None:
+        registry.gauge("lifecycle_pinned_readers",
+                       "live pinned readers across epochs").set(
+            sum(gc["live_readers"].values()))
+        registry.gauge("lifecycle_max_epoch_lifetime_seconds",
+                       "longest any superseded epoch was held alive "
+                       "by readers").set(gc["max_epoch_lifetime_s"])
+        registry.gauge("lifecycle_collected_epochs",
+                       "superseded epochs garbage-collected").set(
+            gc["collected_epochs"])
 
 
 # ---------------------------------------------------------------------------
@@ -193,9 +385,16 @@ def index_shard_specs(index: ClusterIndex,
 
 def distributed_retrieve(index: ClusterIndex, queries: QueryBatch,
                          cfg: SearchConfig, mesh,
-                         multi_pod: bool = False) -> TopK:
+                         multi_pod: bool = False,
+                         registry: MetricsRegistry | None = None) -> TopK:
     """shard_map retrieval: local two-level search per cluster shard,
-    global top-k merge via all_gather over the cluster axes."""
+    global top-k merge via all_gather over the cluster axes.
+
+    With ``registry`` the (already psum'd, hence global) work counters
+    of the result are folded into the same pruning-funnel metrics the
+    single-host engine records — the recording is host-side and forces
+    a device sync, which the serving callers (launch/serve.py) do
+    anyway to time the batch."""
     caxes = ("pod", "data") if multi_pod else ("data",)
     qaxis = "model"
     ispecs = index_shard_specs(index, multi_pod)
@@ -228,8 +427,22 @@ def distributed_retrieve(index: ClusterIndex, queries: QueryBatch,
 
     out_specs = TopK(doc_ids=P(qaxis, None), scores=P(qaxis, None),
                      n_scored_docs=P(qaxis), n_scored_clusters=P(qaxis),
-                     n_scored_segments=P(qaxis), n_scored_tiles=P(qaxis),
-                     n_walked_tiles=P(qaxis), n_walked_docs=P(qaxis))
+                     n_scored_segments=P(qaxis), n_walked_tiles=P(qaxis),
+                     n_scored_tiles=P(qaxis), n_walked_docs=P(qaxis))
     fn = shard_map(local, mesh=mesh, in_specs=(ispecs, qspec),
                    out_specs=out_specs, check_vma=False)
-    return fn(index, queries)
+    out = fn(index, queries)
+    if registry is not None:
+        # counter semantics are set by the engine each *shard* ran — the
+        # auto route keys on the shard-local batch (queries shard over
+        # the model axis)
+        n_local = queries.n_queries // mesh.shape[qaxis]
+        batched = resolved_engine(cfg, max(n_local, 1)) == "batched"
+        m = index.m
+        budget = cfg.cluster_budget if cfg.cluster_budget is not None \
+            else m
+        funnel = funnel_from_topk(
+            out, batched=batched, n_q=queries.n_queries,
+            d_pad=index.d_pad, budget_clusters=min(budget, m))
+        record_funnel(registry, funnel)
+    return out
