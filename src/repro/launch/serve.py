@@ -214,13 +214,24 @@ def main() -> None:
         # record through the same registry-backed accounting as the
         # single-host engine, so the summary and exposition match
         dstats = ServeStats(registry=registry)
+
+        def shard_queries(q):
+            return jax.device_put(q, jax.tree_util.tree_map(
+                lambda _: NamedSharding(mesh, P("model", None)), q,
+                is_leaf=lambda x: hasattr(x, "shape")))
+
         with mesh:
+            # untimed warmup batch: pay jit compilation outside the
+            # recorded loop (no registry — warmup is not traffic), so
+            # dstats never folds compile time into the latency stats
+            warm, _ = make_queries(spec, args.batch_size, doc_topic,
+                                   seed=997)
+            jax.block_until_ready(distributed_retrieve(
+                index, shard_queries(warm), cfg, mesh))
             for step in range(args.batches):
                 q, _ = make_queries(spec, args.batch_size, doc_topic,
                                     seed=step)
-                q = jax.device_put(q, jax.tree_util.tree_map(
-                    lambda _: NamedSharding(mesh, P("model", None)), q,
-                    is_leaf=lambda x: hasattr(x, "shape")))
+                q = shard_queries(q)
                 t0 = time.perf_counter()
                 out = jax.block_until_ready(
                     distributed_retrieve(

@@ -20,6 +20,8 @@ route.
 
 from __future__ import annotations
 
+import threading
+
 import numpy as np
 
 from repro.obs.metrics import MetricsRegistry
@@ -47,15 +49,25 @@ AUX_COUNTERS = (
 
 
 def funnel_from_topk(out, *, batched: bool, n_q: int, d_pad: int,
-                     budget_clusters: int) -> dict[str, int]:
+                     budget_clusters: int,
+                     n_query_shards: int = 1) -> dict[str, int]:
     """Per-request funnel stage values from a TopK's (host-transferred)
     work counters. Pure arithmetic — shared by the engine, the
-    distributed wrapper, and the consistency tests."""
+    distributed wrapper, and the consistency tests.
+
+    ``n_query_shards`` — number of shards along the query ('model')
+    axis. Each query shard runs its *own* batched walk, so its
+    batch-level counters are replicated only within that shard's query
+    slots; the batch total is one representative slot per shard,
+    summed. Single-host callers leave the default 1 (slot ``[0]``)."""
     def batch_total(x) -> int:
         a = np.asarray(x)
-        # batched engine: batch-level count replicated per query; the
-        # per-query engine counts each query's own walk -> sum
-        return int(a[0]) if batched else int(a.sum())
+        if not batched:
+            # the per-query engine counts each query's own walk -> sum
+            return int(a.sum())
+        # batched engine: batch-level count replicated per query within
+        # each query shard's sub-batch
+        return int(a.reshape(n_query_shards, -1)[:, 0].sum())
 
     return {
         "clusters_budgeted": int(budget_clusters) * int(n_q),
@@ -115,13 +127,17 @@ class Observability:
                              f"got {split_every}")
         self.split_every = split_every
         self._n_requests = 0
+        self._lock = threading.Lock()
 
     def next_request(self):
         """(request_id, RequestTrace-or-null, want_split) for the next
-        serving request."""
-        rid = self._n_requests
-        self._n_requests += 1
-        trace = self.tracer.request()
-        want_split = bool(self.split_every
-                          and rid % self.split_every == 0)
+        serving request. Locked so concurrent engine threads (natural
+        with the threaded MetricsServer deployment) never get duplicate
+        rids or mis-phased split/trace sampling decisions."""
+        with self._lock:
+            rid = self._n_requests
+            self._n_requests += 1
+            trace = self.tracer.request()
+            want_split = bool(self.split_every
+                              and rid % self.split_every == 0)
         return rid, trace, want_split or trace.enabled

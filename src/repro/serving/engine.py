@@ -23,6 +23,8 @@ into its metrics registry; sampled requests additionally split planner
 vs executor wall time through the :func:`planner_executor_split` seam
 and emit per-request trace spans (plan / execute / topk_merge /
 epoch_pin, per-wave children) as Perfetto-loadable Chrome-trace JSON.
+The split replay runs out-of-band: latency histograms and the adaptive
+budget only ever observe the production jitted call, sampled or not.
 With ``obs=None`` the search path is exactly the plain jitted call.
 """
 
@@ -246,14 +248,17 @@ class RetrievalEngine:
             snap = self._source.pin() if live else self._resolve()
         budget = self._budget(snap)
         try:
+            t0 = time.perf_counter()
+            out = jax.block_until_ready(
+                self._fn(snap.index, queries, budget))
+            dt = time.perf_counter() - t0
             if want_split:
-                out, dt = self._search_split(snap, queries, budget,
-                                             obs, trace)
-            else:
-                t0 = time.perf_counter()
-                out = jax.block_until_ready(
-                    self._fn(snap.index, queries, budget))
-                dt = time.perf_counter() - t0
+                # out-of-band replay through the split seam for the
+                # share metrics + plan/execute spans; `dt` above stays
+                # the production jitted latency, so the latency
+                # histogram and the adaptive controller never observe
+                # the seam's warm/replay passes
+                self._search_split(snap, queries, budget, obs, trace)
         finally:
             if live:
                 self._source.unpin(snap)
@@ -285,13 +290,17 @@ class RetrievalEngine:
                           "next batch").set(self.adaptive.budget())
         return out
 
-    def _search_split(self, snap, queries, budget, obs, trace):
-        """Sampled request: run the plan-recording walk + executor-only
-        replay through the shared timing seam, emit plan/execute spans
-        (per-wave children with exact admission counts, durations
-        apportioned by each wave's walked doc slots — the waves run
-        inside one fused device computation and are not individually
-        measurable) and record the split histograms."""
+    def _search_split(self, snap, queries, budget, obs, trace) -> None:
+        """Sampled request, run *after* (and outside the timing of) the
+        production jitted search: replay the batch through the shared
+        timing seam — a plan-recording walk + executor-only replay —
+        emit plan/execute spans (per-wave children with exact admission
+        counts, durations apportioned by each wave's walked doc slots —
+        the waves run inside one fused device computation and are not
+        individually measurable) and record the split histograms. The
+        replay's wall time is deliberately never fed to
+        ``stats.record``/``adaptive.observe``: those see only the plain
+        jitted path's latency."""
         if not self._split_warm:
             # compile the plans/replay path outside any timing so the
             # first sampled request doesn't record a compile as planner
@@ -299,10 +308,8 @@ class RetrievalEngine:
             planner_executor_split(snap.index, queries, self.cfg,
                                    budget=budget, reps=1)
             self._split_warm = True
-        t_wall0 = time.perf_counter()
-        topk, (plans, executed), split = planner_executor_split(
+        _, (plans, executed), split = planner_executor_split(
             snap.index, queries, self.cfg, budget=budget, reps=1)
-        dt = time.perf_counter() - t_wall0
         reg = obs.registry
         reg.histogram("split_planner_ms",
                       "planner wall time per sampled request "
@@ -333,7 +340,6 @@ class RetrievalEngine:
                 trace.synthetic_span(f"wave_{w['wave']:03d}", t, w_us,
                                      **w)
                 t += w_us
-        return topk, dt
 
     def _record_request(self, obs, trace, snap, queries, out, budget,
                         dt) -> None:
@@ -435,14 +441,18 @@ def distributed_retrieve(index: ClusterIndex, queries: QueryBatch,
     if registry is not None:
         # counter semantics are set by the engine each *shard* ran — the
         # auto route keys on the shard-local batch (queries shard over
-        # the model axis)
-        n_local = queries.n_queries // mesh.shape[qaxis]
+        # the model axis), and each query shard's batched counters are
+        # replicated only within its own sub-batch, so the funnel sums
+        # one representative slot per query shard
+        n_shards = mesh.shape[qaxis]
+        n_local = queries.n_queries // n_shards
         batched = resolved_engine(cfg, max(n_local, 1)) == "batched"
         m = index.m
         budget = cfg.cluster_budget if cfg.cluster_budget is not None \
             else m
         funnel = funnel_from_topk(
             out, batched=batched, n_q=queries.n_queries,
-            d_pad=index.d_pad, budget_clusters=min(budget, m))
+            d_pad=index.d_pad, budget_clusters=min(budget, m),
+            n_query_shards=n_shards)
         record_funnel(registry, funnel)
     return out

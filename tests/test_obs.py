@@ -16,6 +16,9 @@ import json
 import os
 import subprocess
 import sys
+import threading
+import time
+import types
 import urllib.request
 
 import numpy as np
@@ -225,6 +228,34 @@ def test_funnel_invariants(index, queries):
     assert 0.0 < g("funnel_doc_compaction_ratio") <= 1.0
 
 
+def test_funnel_from_topk_sums_one_slot_per_query_shard():
+    """Batched counters are replicated per query *shard*, not per
+    batch: with n_query_shards the batch total is one representative
+    slot per shard, summed — slot [0] alone undercounts by the
+    model-axis factor."""
+    out = types.SimpleNamespace(
+        n_walked_tiles=np.array([7, 7, 7, 7, 5, 5, 5, 5]),
+        n_scored_tiles=np.array([3, 3, 3, 3, 2, 2, 2, 2]),
+        n_walked_docs=np.array([30, 30, 30, 30, 20, 20, 20, 20]),
+        n_scored_docs=np.arange(8),
+        n_scored_clusters=np.ones(8, np.int64),
+        n_scored_segments=np.ones(8, np.int64))
+    f = funnel_from_topk(out, batched=True, n_q=8, d_pad=16,
+                         budget_clusters=4, n_query_shards=2)
+    assert f["tiles_walked"] == 7 + 5
+    assert f["tiles_scored"] == 3 + 2
+    assert f["doc_slots_walked"] == 30 + 20
+    assert f["docs_scored"] == int(np.arange(8).sum())
+    # default single shard keeps the slot-[0] semantics
+    f1 = funnel_from_topk(out, batched=True, n_q=8, d_pad=16,
+                          budget_clusters=4)
+    assert f1["tiles_walked"] == 7
+    # the per-query engine sums every slot regardless of sharding
+    fp = funnel_from_topk(out, batched=False, n_q=8, d_pad=16,
+                          budget_clusters=4, n_query_shards=2)
+    assert fp["tiles_walked"] == 4 * 7 + 4 * 5
+
+
 def test_funnel_accumulates_across_requests(index, queries):
     q, _ = queries
     obs = Observability()
@@ -271,10 +302,19 @@ with mesh:
     out = jax.block_until_ready(
         distributed_retrieve(idx_s, q_s, cfg, mesh, registry=reg))
 
-n_local = q.n_queries // mesh.shape["model"]
+n_shards = mesh.shape["model"]
+n_local = q.n_queries // n_shards
 batched = resolved_engine(cfg, n_local) == "batched"
 expect = funnel_from_topk(out, batched=batched, n_q=q.n_queries,
-                          d_pad=idx.d_pad, budget_clusters=idx.m)
+                          d_pad=idx.d_pad, budget_clusters=idx.m,
+                          n_query_shards=n_shards)
+# each model shard walks its own sub-batch: the batched tile counters
+# are replicated within a shard's slots, not across shards -- slot [0]
+# alone undercounts by the model-axis factor
+assert batched
+nw = np.asarray(out.n_walked_tiles).reshape(n_shards, n_local)
+assert (nw == nw[:, :1]).all()              # replicated within a shard
+assert expect["tiles_walked"] == nw[:, 0].sum()
 for key, name in (("clusters_scored", "funnel_clusters_scored_total"),
                   ("tiles_walked", "funnel_tiles_walked_total"),
                   ("tiles_scored", "funnel_tiles_scored_total"),
@@ -333,6 +373,55 @@ def test_engine_traces_and_split_sampling(index, queries, tmp_path):
     assert obs.registry.get("split_planner_ms").count == 2
     share = obs.registry.get("planner_share").value
     assert 0.0 <= share <= 1.0
+
+
+def test_split_replay_stays_out_of_latency_stats(index, queries,
+                                                 monkeypatch):
+    """The planner/executor replay runs out-of-band: the latency
+    histogram and the adaptive controller observe only the production
+    jitted call, so a slow seam (the replay runs warm + timed passes,
+    ~3x the jitted path) cannot corrupt the reported tail or shrink the
+    cluster budget."""
+    import repro.serving.engine as engine_mod
+    real = engine_mod.planner_executor_split
+
+    def slow_split(*a, **kw):
+        time.sleep(0.25)
+        return real(*a, **kw)
+
+    monkeypatch.setattr(engine_mod, "planner_executor_split", slow_split)
+    q, _ = queries
+    obs = Observability(split_every=1)
+    eng = RetrievalEngine(index, SearchConfig(k=10, mu=0.9, eta=1.0,
+                                              engine="batched"),
+                          adaptive=AdaptiveBudget(target_ms=5.0),
+                          obs=obs)
+    eng.warmup(q)
+    eng.search(q)
+    assert obs.registry.get("split_requests_total").value == 1
+    # the >=0.5 s the seam spent (warm + timed pass) never reaches the
+    # batch-latency histogram the controller and p99 read
+    assert eng.stats.p(100) < 250.0
+
+
+def test_next_request_rids_unique_under_threads():
+    """rid assignment + sampling decisions are atomic: concurrent
+    engine threads (natural with the threaded MetricsServer) must never
+    see duplicate rids."""
+    obs = Observability(split_every=4)
+    rids: list = []
+
+    def worker():
+        for _ in range(200):
+            rid, _, _ = obs.next_request()
+            rids.append(rid)
+
+    threads = [threading.Thread(target=worker) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert sorted(rids) == list(range(8 * 200))
 
 
 def test_engine_without_obs_records_nothing_extra(index, queries):
