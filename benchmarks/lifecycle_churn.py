@@ -18,11 +18,22 @@ Claims validated:
   * incremental maintenance is much cheaper than rebuild (that's the
     point of the subsystem);
   * staleness costs work, not correctness: the incremental index admits
-    at least (about) as many clusters as the freshly rebuilt one.
+    at least (about) as many clusters as the freshly rebuilt one;
+  * durability is affordable (docs/lifecycle.md §durability): insert
+    throughput with the WAL on (grouped fsync) stays >= 0.8x WAL-off
+    (``wal_insert_overhead``), recovery replays fast
+    (``recovery_ms_per_1k_records``), and a reader keeps serving the
+    last-good epoch during a writer recovery with zero failed queries.
 """
 
 from __future__ import annotations
 
+import gc
+import math
+import os
+import shutil
+import tempfile
+import threading
 import time
 
 import jax
@@ -35,7 +46,7 @@ from repro.core.index import build_index
 from repro.core.search import SearchConfig, brute_force_topk
 from repro.core.types import SparseDocs
 from repro.data.synthetic import CorpusSpec, make_corpus, make_queries
-from repro.lifecycle import MutableIndex
+from repro.lifecycle import DurableIndexWriter, MutableIndex, WriteAheadLog
 from repro.serving.engine import RetrievalEngine
 
 SPEC = CorpusSpec(n_docs=4000, vocab=1024, n_topics=32, doc_terms=48,
@@ -67,7 +78,138 @@ def _latency(engine: RetrievalEngine, queries, reps: int = 12):
     return float(np.percentile(lat, 50)), float(np.percentile(lat, 99))
 
 
-def run() -> list[dict]:
+# -- durability costs -------------------------------------------------------
+DUR_SPEC = CorpusSpec(n_docs=600, vocab=512, n_topics=8, doc_terms=24,
+                      t_pad=32, query_terms=8, q_pad=12, seed=5)
+DUR_M, DUR_NSEG, DUR_D_PAD = 16, 4, 160
+WAL_INSERTS = 1200
+
+
+def _dur_base():
+    docs, doc_topic = make_corpus(DUR_SPEC)
+    base = build_index(docs, doc_topic % DUR_M, m=DUR_M, n_seg=DUR_NSEG,
+                       d_pad=DUR_D_PAD, seed=2)
+    return docs, doc_topic, base
+
+
+def _insert_batch(rng, n: int):
+    out = []
+    for _ in range(n):
+        nnz = int(rng.integers(4, 16))
+        out.append((rng.choice(DUR_SPEC.vocab, nnz, replace=False),
+                    rng.lognormal(0.0, 0.5, nnz).astype(np.float32)))
+    return out
+
+
+def _wal_insert_overhead(base) -> float:
+    """Paired insert throughput, WAL-on (grouped fsync) / WAL-off.
+
+    Interleaved best-of-k, GC paused during the timed loops: min time
+    is the noise-robust estimator for a fixed workload (the write path
+    is host-side numpy — a noisy-neighbor blip during one loop must
+    not fail the claim measurement-side)."""
+    batch = _insert_batch(np.random.default_rng(13), WAL_INSERTS)
+
+    def timed(with_wal: bool) -> float:
+        tmp = tempfile.mkdtemp(prefix="walbench-")
+        try:
+            wal = (WriteAheadLog(os.path.join(tmp, "wal"),
+                                 fsync="interval") if with_wal else None)
+            mi = MutableIndex(base, seed=1, wal=wal)
+            gc.disable()
+            try:
+                t0 = time.perf_counter()
+                for t, w in batch:
+                    mi.insert(t, w)
+                dt = time.perf_counter() - t0
+            finally:
+                gc.enable()
+            if wal is not None:
+                wal.close()
+            return dt
+        finally:
+            shutil.rmtree(tmp, ignore_errors=True)
+
+    t_off, t_on = math.inf, math.inf
+    for _ in range(10):
+        t_off = min(t_off, timed(False))
+        t_on = min(t_on, timed(True))
+    return t_off / t_on
+
+
+def _recovery_cost(base) -> float:
+    """ms of recovery (checkpoint load + replay) per 1k WAL records."""
+    tmp = tempfile.mkdtemp(prefix="recbench-")
+    try:
+        wal = WriteAheadLog(os.path.join(tmp, "wal"), fsync="interval")
+        mi = MutableIndex(base, seed=1, wal=wal)
+        mi.checkpoint(tmp)
+        rng = np.random.default_rng(17)
+        for t, w in _insert_batch(rng, 1500):
+            mi.insert(t, w)
+        for d in rng.choice(mi.live_ids(), 500, replace=False):
+            mi.delete(int(d))
+        wal.flush()                      # crash after this point
+        _, stats = MutableIndex.recover(tmp, attach_wal=False)
+        assert stats["n_replayed"] == 2000, stats
+        return stats["duration_s"] * 1e3 / (stats["n_replayed"] / 1e3)
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
+def _degraded_serving(base, doc_topic) -> dict:
+    """Readers ride out a writer crash + recovery on the last-good epoch.
+
+    A writer thread faults and recovers (DurableIndexWriter.recover into
+    the live publisher) while the main thread keeps searching; the
+    contract is zero failed queries and a fresh epoch once recovered."""
+    queries, _ = make_queries(DUR_SPEC, 8, doc_topic, seed=3)
+    tmp = tempfile.mkdtemp(prefix="degbench-")
+    try:
+        writer = DurableIndexWriter(base, tmp, fsync="interval",
+                                    checkpoint_every=0, seed=4)
+        rng = np.random.default_rng(23)
+        for t, w in _insert_batch(rng, 50):
+            writer.insert(t, w)
+        writer.commit()
+        eng = RetrievalEngine(writer.publisher,
+                              SearchConfig(k=K, mu=1.0, eta=1.0))
+        eng.warmup(queries)
+        epoch_before = writer.publisher.epoch
+        done = threading.Event()
+
+        def crash_and_recover():
+            # the writer "crashes" (its in-memory state is abandoned)
+            # and rebuilds from the durable state into the same publisher
+            eng.health.to("degraded", "simulated writer fault")
+            time.sleep(0.05)
+            eng.health.to("recovering")
+            DurableIndexWriter.recover(tmp, publisher=eng._source)
+            eng.health.to("healthy", "recovered")
+            done.set()
+
+        served = failed = degraded = 0
+        thread = threading.Thread(target=crash_and_recover)
+        thread.start()
+        while not done.is_set() or served == 0:
+            try:
+                out = eng.search(queries)
+                assert int(np.asarray(out.doc_ids)[0, 0]) >= 0
+                served += 1
+                if not eng.health.healthy:
+                    degraded += 1
+            except Exception:            # noqa: BLE001 — the claim counter
+                failed += 1
+        thread.join()
+        return {"degraded_queries_served": served,
+                "degraded_queries_failed": failed,
+                "queries_during_outage": degraded,
+                "epoch_advanced": eng._source.epoch > epoch_before}
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
+def run() -> dict:
     docs, doc_topic = make_corpus(SPEC)
     queries, _ = make_queries(SPEC, 32, doc_topic, seed=1)
     rep = np.asarray(dense_rep_projection(docs, dim=96))
@@ -177,7 +319,29 @@ def run() -> list[dict]:
     # harder than the fresh one (small tolerance: segmentation is random)
     assert by[("incremental", 1.0)]["pct_clusters"] >= \
         by[("full-rebuild", 1.0)]["pct_clusters"] - 10.0
-    return rows
+
+    # ---- durability costs ----------------------------------------------
+    _, dur_topic, dur_base = _dur_base()
+    wal_overhead = _wal_insert_overhead(dur_base)
+    recovery_ms = _recovery_cost(dur_base)
+    degraded = _degraded_serving(dur_base, dur_topic)
+    print(f"durability: WAL-on/WAL-off insert throughput "
+          f"{wal_overhead:.3f}x, recovery {recovery_ms:.1f} ms / 1k "
+          f"records, {degraded['degraded_queries_served']} queries "
+          f"served across a writer recovery "
+          f"({degraded['degraded_queries_failed']} failed)")
+    # the durability-is-affordable contract (ISSUE 7 acceptance)
+    assert wal_overhead >= 0.8, wal_overhead
+    assert degraded["degraded_queries_failed"] == 0, degraded
+    assert degraded["epoch_advanced"], degraded
+
+    return {
+        "rows": rows,
+        "wal_insert_overhead": round(wal_overhead, 4),
+        "recovery_ms_per_1k_records": round(recovery_ms, 3),
+        **{k: (int(v) if isinstance(v, bool) else v)
+           for k, v in degraded.items()},
+    }
 
 
 if __name__ == "__main__":

@@ -15,6 +15,19 @@ Lifecycle options:
   --save-dir D    persist the final index (versioned npz shards).
   --load-dir D    cold-start from a persisted index instead of building.
 
+Durability options (docs/lifecycle.md §durability; --churn only):
+  --durable-dir D    crash-safe write plane: WAL + checksummed
+                     checkpoints under D. When D already holds a
+                     checkpoint the process *recovers* from it (replaying
+                     the WAL tail) instead of building an index — so
+                     SIGKILL + restart resumes serving where the log
+                     ends. Writer faults degrade serving to the
+                     last-good epoch while recovery retries with
+                     backoff; SIGTERM/Ctrl-C flushes the WAL and writes
+                     a final checkpoint before exiting.
+  --fsync P          WAL fsync policy: always | interval | off.
+  --checkpoint-every N   checkpoint every N commits (0 = only at exit).
+
 Observability options (docs/observability.md):
   --metrics-port P   serve Prometheus text on http://0.0.0.0:P/metrics
                      (and a JSON snapshot on /metrics.json) while the
@@ -57,6 +70,15 @@ def _parse():
                     help="docs deleted+inserted between batches")
     ap.add_argument("--save-dir", type=str, default="")
     ap.add_argument("--load-dir", type=str, default="")
+    ap.add_argument("--durable-dir", type=str, default="",
+                    help="crash-safe write plane (WAL + checkpoints) "
+                         "under this directory; recovers from it when "
+                         "it already holds a checkpoint")
+    ap.add_argument("--fsync", type=str, default="interval",
+                    choices=("always", "interval", "off"),
+                    help="WAL fsync policy (--durable-dir)")
+    ap.add_argument("--checkpoint-every", type=int, default=8,
+                    help="checkpoint every N commits (0 = only at exit)")
     ap.add_argument("--devices", type=int, default=0)
     ap.add_argument("--metrics-port", type=int, default=0,
                     help="serve /metrics on this port (0 = off)")
@@ -130,6 +152,78 @@ def _dump_metrics(registry, path: str) -> None:
     with open(prom, "w") as f:
         f.write(registry.render_prometheus())
     print(f"[serve] metrics -> {path} + {prom}")
+
+
+def _apply_churn(writer, rng, spec, n: int, registry) -> None:
+    """One churn round: N deletes + up-to-N inserts + commit. An
+    ``IndexFullError`` does not kill the round (or the process): force a
+    compaction, back off, retry the insert; persistently-full indexes
+    skip the rest of the round's inserts instead of failing serving."""
+    import time as _time
+
+    import numpy as np
+
+    from repro.lifecycle import IndexFullError
+
+    live = writer.mutable.live_ids()
+    for d in rng.choice(live, min(n, live.size), replace=False):
+        writer.delete(int(d))
+    # cap inserts at remaining capacity so a churn rate above the
+    # delete rate degrades to steady state instead of overflowing
+    free = int(writer.mutable.free_slots.sum())
+    for _ in range(min(n, free)):
+        nnz = int(rng.integers(4, 24))
+        t = rng.choice(spec.vocab, nnz, replace=False)
+        w = rng.lognormal(0.0, 0.6, nnz).astype(np.float32)
+        backoff = 0.02
+        for attempt in range(3):
+            try:
+                writer.insert(t, w)
+                break
+            except IndexFullError:
+                registry.counter(
+                    "serve_index_full_total",
+                    "inserts rejected by a full index (forced "
+                    "compaction + backoff + retry)").inc()
+                writer.mutable.compact()
+                _time.sleep(backoff)
+                backoff *= 2
+        else:
+            print("[serve] index full even after compaction; "
+                  "skipping remaining inserts this round")
+            break
+    writer.commit()
+
+
+def _recover_writer(eng, args, registry):
+    """Bounded-retry recovery of the durable write plane. Readers keep
+    serving the engine's last-good pinned epoch the whole time; the
+    publisher only swaps forward when recovery republishes."""
+    import time as _time
+
+    from repro.lifecycle import DurableIndexWriter
+
+    backoff = 0.1
+    last: Exception | None = None
+    for attempt in range(5):
+        try:
+            eng.health.to("recovering", f"recovery attempt {attempt + 1}")
+            writer = DurableIndexWriter.recover(
+                args.durable_dir, fsync=args.fsync,
+                checkpoint_every=args.checkpoint_every,
+                publisher=eng._source, registry=registry)
+            eng.health.to("healthy", "recovered")
+            print(f"[serve] write plane recovered: {writer.recovery_stats}")
+            return writer
+        except Exception as e:          # noqa: BLE001 — retry any failure
+            last = e
+            eng.health.to("degraded", f"recovery failed: {e!r}")
+            print(f"[serve] recovery attempt {attempt + 1} failed: {e!r}; "
+                  f"retrying in {backoff:.2f}s")
+            _time.sleep(backoff)
+            backoff = min(backoff * 2, 2.0)
+    raise RuntimeError(
+        f"write-plane recovery failed after retries: {last!r}")
 
 
 def main() -> None:
@@ -250,7 +344,26 @@ def main() -> None:
     if args.churn > 0:
         # synthetic churn docs have no dense representation, so placement
         # is least-loaded; pass centroids + dense_rep for real corpora
-        writer = IndexWriter(index, seed=9, registry=registry)
+        if args.durable_dir:
+            from repro.lifecycle import DurableIndexWriter
+            from repro.lifecycle.wal import SNAPSHOT_SUBDIR
+            if os.path.exists(os.path.join(args.durable_dir,
+                                           SNAPSHOT_SUBDIR)):
+                writer = DurableIndexWriter.recover(
+                    args.durable_dir, fsync=args.fsync,
+                    checkpoint_every=args.checkpoint_every,
+                    registry=registry)
+                print(f"[serve] recovered write plane from "
+                      f"{args.durable_dir}: {writer.recovery_stats}")
+            else:
+                writer = DurableIndexWriter(
+                    index, args.durable_dir, fsync=args.fsync,
+                    checkpoint_every=args.checkpoint_every, seed=9,
+                    registry=registry)
+                print(f"[serve] durable write plane -> {args.durable_dir} "
+                      f"(fsync={args.fsync})")
+        else:
+            writer = IndexWriter(index, seed=9, registry=registry)
         source = writer.publisher
     else:
         source = index
@@ -264,45 +377,67 @@ def main() -> None:
     warm, _ = make_queries(spec, args.batch_size, doc_topic, seed=997)
     eng.warmup(warm)
 
+    # SIGTERM gets the same graceful path as Ctrl-C: flush the WAL,
+    # final checkpoint, metrics dump — a signal is not a crash
+    import signal
+
+    def _on_sigterm(signum, frame):
+        raise KeyboardInterrupt
+
+    try:
+        signal.signal(signal.SIGTERM, _on_sigterm)
+    except ValueError:
+        pass                             # not the main thread (tests)
+
     rng = np.random.default_rng(123)
     out = None
-    for step in range(args.batches):
-        if writer is not None:
-            live = writer.mutable.live_ids()
-            for d in rng.choice(live, min(args.churn, live.size),
-                                replace=False):
-                writer.delete(int(d))
-            # cap inserts at remaining capacity so a churn rate above the
-            # delete rate degrades to steady state instead of overflowing
-            free = int(writer.mutable.free_slots.sum())
-            for _ in range(min(args.churn, free)):
-                nnz = int(rng.integers(4, 24))
-                t = rng.choice(spec.vocab, nnz, replace=False)
-                w = rng.lognormal(0.0, 0.6, nnz).astype(np.float32)
-                writer.insert(t, w)
-            snap = writer.commit()
-        q, _ = make_queries(spec, args.batch_size, doc_topic, seed=step)
-        out = eng.search(q)
+    try:
+        for step in range(args.batches):
+            if writer is not None:
+                try:
+                    _apply_churn(writer, rng, spec, args.churn, registry)
+                except KeyboardInterrupt:
+                    raise
+                except Exception as e:   # noqa: BLE001
+                    # a mid-mutation writer fault leaves the in-memory
+                    # index untrustworthy; readers stay on the last-good
+                    # epoch while the durable state is recovered
+                    if not args.durable_dir:
+                        raise
+                    print(f"[serve] write plane fault: {e!r} — serving "
+                          f"degraded from last-good epoch")
+                    if eng.health.healthy:
+                        eng.health.to("degraded", repr(e))
+                    writer = _recover_writer(eng, args, registry)
+            q, _ = make_queries(spec, args.batch_size, doc_topic,
+                                seed=step)
+            out = eng.search(q)
+    except KeyboardInterrupt:
+        print("[serve] interrupted — shutting down gracefully")
+    finally:
+        if writer is not None and hasattr(writer, "close"):
+            writer.close()               # WAL flush + final checkpoint
+            print(f"[serve] final checkpoint -> {args.durable_dir}")
 
-    print(_summary(registry, eng.stats, index.m))
-    if out is not None and obs is None:
-        # without obs the funnel counters are empty; keep the quick
-        # work-counter readout from the last batch
-        print(f"[serve] last batch scored "
-              f"{float(out.n_scored_clusters.mean()):.1f}"
-              f"/{index.m} clusters")
+        print(_summary(registry, eng.stats, index.m))
+        if out is not None and obs is None:
+            # without obs the funnel counters are empty; keep the quick
+            # work-counter readout from the last batch
+            print(f"[serve] last batch scored "
+                  f"{float(out.n_scored_clusters.mean()):.1f}"
+                  f"/{index.m} clusters")
 
-    if args.metrics_json:
-        _dump_metrics(registry, args.metrics_json)
-    if server is not None:
-        server.close()
+        if args.metrics_json:
+            _dump_metrics(registry, args.metrics_json)
+        if server is not None:
+            server.close()
 
-    if args.save_dir:
-        final = eng.index
-        epoch = eng.last_epoch or 0
-        save_index(args.save_dir, final, epoch=epoch,
-                   n_shards=min(4, final.m))
-        print(f"[serve] saved epoch {epoch} -> {args.save_dir}")
+        if args.save_dir:
+            final = eng.index
+            epoch = eng.last_epoch or 0
+            save_index(args.save_dir, final, epoch=epoch,
+                       n_shards=min(4, final.m))
+            print(f"[serve] saved epoch {epoch} -> {args.save_dir}")
 
 
 if __name__ == "__main__":

@@ -1,20 +1,37 @@
 """Online index lifecycle: incremental mutation, epoch snapshots,
-persistence. See docs/lifecycle.md for the rank-safety argument."""
+persistence, and the crash-safe write plane (WAL + checksummed
+checkpoints + recovery). See docs/lifecycle.md for the rank-safety and
+durability arguments."""
 
-from repro.lifecycle.mutable import IndexFullError, MutableIndex
-from repro.lifecycle.persist import (FORMAT_VERSION, load_index,
-                                     read_manifest, save_index)
-from repro.lifecycle.snapshot import (IndexSnapshot, IndexWriter,
-                                      SnapshotPublisher)
+from repro.lifecycle.faults import (FaultInjected, FaultSchedule,
+                                    fault_point, install)
+from repro.lifecycle.mutable import (IndexFullError, MutableIndex,
+                                     WalReplayError)
+from repro.lifecycle.persist import (FORMAT_VERSION, CheckpointCorruptError,
+                                     load_index, read_manifest, save_index,
+                                     verify_checkpoint)
+from repro.lifecycle.snapshot import (DurableIndexWriter, IndexSnapshot,
+                                      IndexWriter, SnapshotPublisher)
+from repro.lifecycle.wal import WriteAheadLog, read_wal
 
 __all__ = [
     "FORMAT_VERSION",
+    "CheckpointCorruptError",
+    "DurableIndexWriter",
+    "FaultInjected",
+    "FaultSchedule",
     "IndexFullError",
     "IndexSnapshot",
     "IndexWriter",
     "MutableIndex",
     "SnapshotPublisher",
+    "WalReplayError",
+    "WriteAheadLog",
+    "fault_point",
+    "install",
     "load_index",
     "read_manifest",
+    "read_wal",
     "save_index",
+    "verify_checkpoint",
 ]

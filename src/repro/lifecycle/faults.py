@@ -1,0 +1,144 @@
+"""Deterministic fault injection for the durable write plane.
+
+Crash-safety claims are only as good as the crashes they were tested
+against, so the write path (wal.py / persist.py / mutable.py) is seeded
+with *named injection points* — ``fault_point("wal.append.pre_fsync",
+path=...)`` calls at the exact instants a real crash would bite:
+
+    wal.append.pre_write            before the frame hits the file
+    wal.append.pre_fsync            frame written, not yet fsync'd
+    persist.shard.mid_write         between two shard files of a save
+    persist.manifest.pre_write      shards written, manifest not yet
+    persist.swap.between_renames    old checkpoint swapped aside, new one
+                                    not yet promoted (the crash window the
+                                    persist.py docstring documents)
+    persist.swap.post_promote       new checkpoint promoted, swapped-aside
+                                    old copy not yet reaped
+    compact.mid_pack                COMPACT record logged, re-pack not done
+
+With no schedule installed a point is one global load + ``None`` check —
+nothing on the hot path pays for testability. Tests install a seeded
+:class:`FaultSchedule` that fires a chosen *action* on the nth hit of a
+point: ``raise`` (an exception unwinds the writer), ``exit`` (hard
+``os._exit`` — the in-process stand-in for SIGKILL), or a torn-write
+corruption of the file the point is touching (``truncate`` / ``bitflip``
+/ ``zero``, then raise). Corruption offsets come from the schedule's own
+seeded rng, so a failing case replays exactly.
+"""
+
+from __future__ import annotations
+
+import os
+import threading
+from contextlib import contextmanager
+
+import numpy as np
+
+#: actions that damage the file at the injection point before raising
+CORRUPT_ACTIONS = ("truncate", "bitflip", "zero")
+ACTIONS = ("raise", "exit") + CORRUPT_ACTIONS
+
+
+class FaultInjected(RuntimeError):
+    """Raised by a firing injection point (stands in for the crash)."""
+
+    def __init__(self, point: str, action: str):
+        super().__init__(f"injected fault at {point!r} (action={action})")
+        self.point = point
+        self.action = action
+
+
+def _corrupt(path: str, action: str, rng: np.random.Generator) -> None:
+    """Damage the tail of ``path`` the way a torn write would."""
+    size = os.path.getsize(path)
+    if size == 0:
+        return
+    if action == "truncate":
+        cut = int(rng.integers(1, min(64, size) + 1))
+        os.truncate(path, size - cut)
+    elif action == "bitflip":
+        off = size - 1 - int(rng.integers(min(256, size)))
+        with open(path, "r+b") as f:
+            f.seek(off)
+            b = f.read(1)[0]
+            f.seek(off)
+            f.write(bytes([b ^ (1 << int(rng.integers(8)))]))
+    elif action == "zero":
+        n = int(rng.integers(1, min(128, size) + 1))
+        with open(path, "r+b") as f:
+            f.seek(size - n)
+            f.write(b"\x00" * n)
+    else:                                    # pragma: no cover
+        raise ValueError(f"unknown corrupt action {action!r}")
+
+
+class FaultSchedule:
+    """A deterministic plan of which injection points fire, and how.
+
+    ``plan`` is a list of ``(point, nth, action)``: fire ``action`` on the
+    ``nth`` (1-based) time ``point`` is hit, once. Hit counts for every
+    point are kept (``hits``) so tests can assert coverage; fired entries
+    are recorded in ``fired``.
+    """
+
+    def __init__(self, plan: list[tuple[str, int, str]], seed: int = 0):
+        for point, nth, action in plan:
+            if action not in ACTIONS:
+                raise ValueError(
+                    f"unknown fault action {action!r}; choose from {ACTIONS}")
+            if nth < 1:
+                raise ValueError(f"nth is 1-based, got {nth}")
+        self.plan = list(plan)
+        self.hits: dict[str, int] = {}
+        self.fired: list[tuple[str, str]] = []
+        self._done: set[int] = set()
+        self._rng = np.random.default_rng(seed)
+        self._lock = threading.Lock()
+
+    def on_point(self, point: str, path: str | None) -> None:
+        with self._lock:
+            n = self.hits.get(point, 0) + 1
+            self.hits[point] = n
+            to_fire = None
+            for i, (p, nth, action) in enumerate(self.plan):
+                if i not in self._done and p == point and nth == n:
+                    self._done.add(i)
+                    to_fire = action
+                    break
+        if to_fire is not None:
+            self._fire(point, to_fire, path)
+
+    def _fire(self, point: str, action: str, path: str | None) -> None:
+        self.fired.append((point, action))
+        if action == "exit":
+            os._exit(17)                     # hard death: no finally blocks
+        if action in CORRUPT_ACTIONS:
+            if path is None:
+                raise ValueError(
+                    f"point {point!r} carries no file path; corrupt "
+                    f"actions need one")
+            _corrupt(path, action, self._rng)
+        raise FaultInjected(point, action)
+
+
+_ACTIVE: FaultSchedule | None = None
+
+
+def fault_point(name: str, path: str | None = None) -> None:
+    """A named crash site. No-op unless a schedule is installed."""
+    schedule = _ACTIVE
+    if schedule is not None:
+        schedule.on_point(name, path)
+
+
+@contextmanager
+def install(schedule: FaultSchedule):
+    """Install ``schedule`` for the duration of the with-block."""
+    global _ACTIVE
+    if _ACTIVE is not None:
+        raise RuntimeError("a FaultSchedule is already installed")
+    _ACTIVE = schedule
+    try:
+        yield schedule
+    finally:
+        _ACTIVE = None

@@ -29,10 +29,24 @@ Rank-safety under churn (docs/lifecycle.md has the full argument):
 scalar; when it crosses ``compact_threshold`` the index is re-packed
 through :func:`repro.core.index.pack_clusters` — the *same* code the
 offline build uses — restoring tight maxima and a fresh scale.
+
+Durability (docs/lifecycle.md §durability): constructed with a
+``wal`` (:class:`repro.lifecycle.wal.WriteAheadLog`), every mutation
+appends a logical redo record *before* touching any array, and
+:meth:`checkpoint` / :meth:`recover` bracket the crash story —
+checkpoint persists the arrays plus the writer's replay context
+(``op_seq``, rng state, exact float scale, clipped-doc side table);
+recover loads the last intact checkpoint and replays the WAL tail
+through the normal insert/delete/compact code paths, reproducing the
+uncrashed index bit-exactly. A mutation that fails mid-WAL-append (an
+injected fault, a full disk) leaves the in-memory object inconsistent
+with its own log — discard it and :meth:`recover`; that is the
+degraded-mode protocol serve.py drives.
 """
 
 from __future__ import annotations
 
+import os
 import time
 
 import numpy as np
@@ -40,10 +54,18 @@ import jax.numpy as jnp
 
 from repro.core.index import capacity_rebalance, pack_clusters
 from repro.core.types import ClusterIndex, SparseDocs
+from repro.lifecycle.faults import fault_point
+from repro.lifecycle.wal import (SNAPSHOT_SUBDIR, WAL_SUBDIR,
+                                 WriteAheadLog, read_wal)
 
 
 class IndexFullError(RuntimeError):
     """No cluster has a free slot for the inserted document."""
+
+
+class WalReplayError(RuntimeError):
+    """WAL replay diverged from the logged run — the checkpoint and the
+    log tail disagree (wrong centroids, a foreign WAL, or a real bug)."""
 
 
 class MutableIndex:
@@ -65,8 +87,12 @@ class MutableIndex:
                  compact_threshold: float = 0.25,
                  seg_method: str = "random_uniform",
                  seed: int = 0,
-                 registry=None):
+                 registry=None,
+                 wal: "WriteAheadLog | None" = None):
         self.registry = registry
+        self.wal = wal
+        self.op_seq = 0             # ops applied ever (insert/delete/compact)
+        self._replaying = False     # recovery replay: don't re-log records
         self.doc_tids = np.asarray(index.doc_tids).copy()
         self.doc_tw = np.asarray(index.doc_tw).copy()
         self.doc_mask = np.asarray(index.doc_mask).copy()
@@ -180,8 +206,6 @@ class MutableIndex:
         free = np.nonzero(~self.doc_mask[c])[0]
         tail_free = free[free >= self.sorted_upto[c]]
         slot = int(tail_free[0]) if tail_free.size else int(free[0])
-        if slot < self.sorted_upto[c]:
-            self.sorted_upto[c] = slot
         j = int(self._rng.integers(self.n_seg))
 
         qf = np.round(tw / self.scale)
@@ -192,6 +216,19 @@ class MutableIndex:
             doc_id = self._next_doc_id
         elif doc_id in self._loc:
             raise ValueError(f"doc_id {doc_id} already live")
+
+        # log intent, then apply: everything below the append is pure
+        # array mutation, so a crash either loses the op entirely (record
+        # not durable) or replays it exactly — never half-applies it. The
+        # record carries the computed placement purely so replay can
+        # assert determinism (recover()/_apply_record).
+        self.op_seq += 1
+        if self.wal is not None and not self._replaying:
+            self.wal.append_insert(self.op_seq, int(doc_id), c, slot, j,
+                                   tids, tw, dense_rep)
+
+        if slot < self.sorted_upto[c]:
+            self.sorted_upto[c] = slot
         self._next_doc_id = max(self._next_doc_id, int(doc_id) + 1)
         if clipped:
             self.n_clipped += 1
@@ -225,10 +262,15 @@ class MutableIndex:
     def delete(self, doc_id: int) -> bool:
         """Tombstone a document. seg_max is deliberately left stale: it
         still upper-bounds every live doc, which is all pruning needs."""
-        loc = self._loc.pop(int(doc_id), None)
+        did = int(doc_id)
+        loc = self._loc.get(did)
         if loc is None:
             return False
-        self._clipped.pop(int(doc_id), None)
+        self.op_seq += 1
+        if self.wal is not None and not self._replaying:
+            self.wal.append_delete(self.op_seq, did)
+        self._loc.pop(did)
+        self._clipped.pop(did, None)
         c, slot = loc
         self.doc_mask[c, slot] = False
         self.doc_ids[c, slot] = -1
@@ -287,6 +329,16 @@ class MutableIndex:
         alone max out at exactly ``255 * scale`` and could never widen
         the range."""
         t0 = time.perf_counter()
+        if requantize is None:
+            requantize = bool(self._clipped)
+        # the compaction *barrier*: log the intent (flags + the rng state
+        # the re-segmentation will consume) before any repacking, so a
+        # crash mid-pack replays the whole compaction from the record
+        self.op_seq += 1
+        if self.wal is not None and not self._replaying:
+            self.wal.append_compact(self.op_seq, rebalance, requantize,
+                                    self._rng.bit_generator.state)
+
         live_c, live_s = np.nonzero(self.doc_mask)
         n_live = live_c.size
         safe_tids = self.doc_tids[live_c, live_s]          # (n_live, t_pad)
@@ -294,8 +346,6 @@ class MutableIndex:
         ids = self.doc_ids[live_c, live_s].astype(np.int64)
         assign = live_c.astype(np.int64)
 
-        if requantize is None:
-            requantize = bool(self._clipped)
         if requantize and n_live:
             floats = tw_u8.astype(np.float32) * self.scale
             true_max = float(floats.max()) if floats.size else 0.0
@@ -323,6 +373,8 @@ class MutableIndex:
         if rebalance:
             assign = capacity_rebalance(assign, self.m, self.d_pad)
 
+        fault_point("compact.mid_pack",
+                    self.wal.path if self.wal is not None else None)
         packed = pack_clusters(
             safe_tids, tw_u8, assign, self.m, self.n_seg, self.d_pad,
             self.vocab, doc_ids=ids, seg_method=self.seg_method,
@@ -361,6 +413,190 @@ class MutableIndex:
     def live_ids(self) -> np.ndarray:
         """Global ids of all live (non-tombstoned) documents."""
         return np.fromiter(self._loc.keys(), np.int64, len(self._loc))
+
+    # -- durability --------------------------------------------------------
+    def _host_index(self) -> ClusterIndex:
+        """ClusterIndex over the live numpy mirrors (no device copy) —
+        checkpoint writes go straight from host memory."""
+        return ClusterIndex(
+            doc_tids=self.doc_tids, doc_tw=self.doc_tw,
+            doc_mask=self.doc_mask, doc_ids=self.doc_ids,
+            doc_seg=self.doc_seg, doc_seg_mod=self.doc_seg_mod,
+            seg_max_stacked=self.seg_max_stacked,
+            seg_offsets=self.seg_offsets, sorted_upto=self.sorted_upto,
+            scale=np.float32(self.scale),
+            cluster_ndocs=self.cluster_ndocs,
+            vocab=self.vocab, n_seg=self.n_seg)
+
+    def writer_state(self) -> dict:
+        """The replay context a checkpoint must carry for recovery to be
+        bit-exact: op counter, exact (float64) quantization scale, rng
+        state, clipped-doc side table, and the WAL horizon."""
+        return {
+            "op_seq": self.op_seq,
+            "next_doc_id": self._next_doc_id,
+            # the manifest's own "scale" field round-trips through
+            # float32; replayed quantization needs the exact value
+            "scale": float(self.scale),
+            "rng_state": self._rng.bit_generator.state,
+            "compact_threshold": float(self.compact_threshold),
+            "seg_method": self.seg_method,
+            "counters": {
+                "n_inserts": self.n_inserts,
+                "n_deletes": self.n_deletes,
+                "n_clipped": self.n_clipped,
+                "n_compactions": self.n_compactions,
+            },
+            "clipped": {
+                str(d): {"tids": t.tolist(),
+                         "tw": [float(x) for x in w]}
+                for d, (t, w) in self._clipped.items()},
+            "wal_lsn": self.wal.lsn if self.wal is not None else 0,
+        }
+
+    def _restore_writer_state(self, ws: dict) -> None:
+        self.op_seq = int(ws["op_seq"])
+        self._next_doc_id = int(ws["next_doc_id"])
+        self.scale = float(ws["scale"])
+        self._rng.bit_generator.state = ws["rng_state"]
+        self.compact_threshold = float(
+            ws.get("compact_threshold", self.compact_threshold))
+        c = ws.get("counters", {})
+        self.n_inserts = int(c.get("n_inserts", 0))
+        self.n_deletes = int(c.get("n_deletes", 0))
+        self.n_clipped = int(c.get("n_clipped", 0))
+        self.n_compactions = int(c.get("n_compactions", 0))
+        self._clipped = {
+            int(d): (np.asarray(v["tids"], np.int64),
+                     np.asarray(v["tw"], np.float32))
+            for d, v in ws.get("clipped", {}).items()}
+
+    def checkpoint(self, directory: str, epoch: int = 0,
+                   n_shards: int = 1) -> str:
+        """Write a durable checkpoint under ``directory`` (arrays in
+        ``<directory>/snapshot``, checksummed v5 manifest with the writer
+        replay state in ``extra``) and retire WAL segments it covers.
+        The WAL is fsync'd first, so the recorded lsn only ever points at
+        durable records."""
+        from repro.lifecycle.persist import save_index
+        state = self.writer_state()
+        if self.wal is not None:
+            self.wal.flush(fsync=True)
+        path = save_index(os.path.join(directory, SNAPSHOT_SUBDIR),
+                          self._host_index(), epoch=epoch,
+                          n_shards=n_shards, extra={"writer": state})
+        if self.wal is not None:
+            self.wal.truncate_upto(int(state["wal_lsn"]))
+        return path
+
+    @classmethod
+    def recover(cls, directory: str,
+                centroids: np.ndarray | None = None,
+                registry=None,
+                attach_wal: bool = True,
+                fsync: str = "interval",
+                **wal_kwargs) -> tuple["MutableIndex", dict]:
+        """Rebuild the uncrashed index from ``directory``: last intact
+        checkpoint + WAL-tail replay, bit-exact (tests/test_lifecycle.py
+        pins array-for-array equality, rng state included).
+
+        Pass the same ``centroids`` the original writer used (they are
+        placement inputs, not checkpoint state); a mismatch is caught by
+        the per-record placement assertions, not silently absorbed.
+        Returns ``(index, stats)`` — stats carry the replay count, torn
+        tail flag, last published epoch and duration; with ``registry``
+        they also land in ``wal_records_replayed_total`` and the
+        ``index_recovery_duration_seconds`` histogram.
+        """
+        from repro.lifecycle.persist import load_index
+        t0 = time.perf_counter()
+        index, manifest = load_index(
+            os.path.join(directory, SNAPSHOT_SUBDIR), registry=registry)
+        ws = (manifest.get("extra") or {}).get("writer")
+        if ws is None:
+            raise ValueError(
+                f"{directory!r} holds a plain save_index checkpoint, not "
+                f"a durable one (no writer state; use "
+                f"MutableIndex.checkpoint to write recoverable ones)")
+        mi = cls(index, centroids=centroids,
+                 compact_threshold=float(ws.get("compact_threshold", .25)),
+                 seg_method=ws.get("seg_method", "random_uniform"),
+                 registry=registry)
+        mi._restore_writer_state(ws)
+        records, wal_stats = read_wal(
+            os.path.join(directory, WAL_SUBDIR),
+            from_lsn=int(ws.get("wal_lsn", 0)))
+        last_epoch = int(manifest.get("epoch", 0))
+        n_applied = 0
+        mi._replaying = True
+        try:
+            for rec in records:
+                if rec["op"] == "epoch":
+                    last_epoch = int(rec["epoch"])
+                    continue
+                mi._apply_record(rec)
+                n_applied += 1
+        finally:
+            mi._replaying = False
+        if attach_wal:
+            mi.wal = WriteAheadLog(os.path.join(directory, WAL_SUBDIR),
+                                   fsync=fsync, registry=registry,
+                                   **wal_kwargs)
+        duration = time.perf_counter() - t0
+        if registry is not None:
+            from repro.obs.metrics import DURATION_BUCKETS_S
+            registry.counter(
+                "wal_records_replayed_total",
+                "WAL records replayed during recovery").inc(len(records))
+            registry.histogram(
+                "index_recovery_duration_seconds",
+                "checkpoint load + WAL tail replay, per recovery",
+                buckets=DURATION_BUCKETS_S).observe(duration)
+        stats = {
+            "checkpoint_epoch": int(manifest.get("epoch", 0)),
+            "last_published_epoch": last_epoch,
+            "checkpoint_op_seq": int(ws["op_seq"]),
+            "op_seq": mi.op_seq,
+            "n_replayed": n_applied,
+            "torn_tail": bool(wal_stats["torn"]),
+            "duration_s": duration,
+        }
+        return mi, stats
+
+    def _apply_record(self, rec: dict) -> None:
+        """Replay one WAL record through the normal write path, asserting
+        the logged outcome (op ordering, insert placement) so replay
+        divergence fails loudly instead of serving a silently different
+        index."""
+        if rec["op_seq"] != self.op_seq + 1:
+            raise WalReplayError(
+                f"WAL record op_seq {rec['op_seq']} does not follow "
+                f"state at op_seq {self.op_seq}")
+        if rec["op"] == "insert":
+            did = self.insert(rec["tids"], rec["tw"],
+                              doc_id=rec["doc_id"],
+                              dense_rep=rec["dense_rep"])
+            c, slot = self._loc[did]
+            got = (c, slot, int(self.doc_seg[c, slot]))
+            logged = (rec["c"], rec["slot"], rec["seg"])
+            if got != logged:
+                raise WalReplayError(
+                    f"replayed insert of doc {did} landed at "
+                    f"(c, slot, seg)={got}, log says {logged} — replay "
+                    f"diverged (different centroids or rng state?)")
+        elif rec["op"] == "delete":
+            if not self.delete(rec["doc_id"]):
+                raise WalReplayError(
+                    f"replayed delete of doc {rec['doc_id']} found "
+                    f"nothing to delete")
+        elif rec["op"] == "compact":
+            # restore the logged rng state (idempotent when replay is in
+            # lockstep) so the re-segmentation consumes the same stream
+            self._rng.bit_generator.state = rec["rng_state"]
+            self.compact(rebalance=rec["rebalance"],
+                         requantize=rec["requantize"])
+        else:
+            raise WalReplayError(f"unknown WAL record {rec['op']!r}")
 
     # -- read-side handoff ------------------------------------------------
     def snapshot(self) -> ClusterIndex:

@@ -13,11 +13,23 @@ checkpoint swaps the old one aside first, so a crash at any point leaves
 either the old or the new data intact on disk — ``load_index`` falls back
 to the swapped-aside copy if the crash hit the brief window between the
 two renames. Same protocol family as training/checkpoint.py.
+
+Since v5 the manifest carries each shard's sha256 and byte length, and
+loading *verifies* them: a corrupt or partial checkpoint (bitrot, torn
+write, crash between the shard writes and the manifest) is detected
+before a single array is deserialized, counted in the obs registry
+(``snapshot_corrupt_shards_total``), and the loader walks the fallback
+chain — the directory itself, then swapped-aside ``.old-*`` copies
+newest-first — taking the first candidate whose checksums all pass.
+Only when no candidate is intact does it raise
+:class:`CheckpointCorruptError` (distinct from "nothing saved here",
+which still raises ``FileNotFoundError``).
 """
 
 from __future__ import annotations
 
 import glob
+import hashlib
 import json
 import os
 import shutil
@@ -27,6 +39,7 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core.types import ClusterIndex
+from repro.lifecycle.faults import fault_point
 
 # version history:
 #   1 — seg_max (m, n_seg, V) per shard, optionally seg_max_collapsed
@@ -44,8 +57,25 @@ from repro.core.types import ClusterIndex
 #       the derived layout is bit-identical to a fresh segment-major
 #       pack of the same membership (global doc ids ride along — results
 #       are unchanged, only slot order moves)
-FORMAT_VERSION = 4
-_READABLE_VERSIONS = (1, 2, 3, 4)
+#   5 — integrity: manifest lists every shard with its sha256 + byte
+#       length ("shards": [{file, sha256, bytes}]); loads verify before
+#       deserializing. v1-v4 shards predate checksums and load unverified.
+FORMAT_VERSION = 5
+_READABLE_VERSIONS = (1, 2, 3, 4, 5)
+
+
+class CheckpointCorruptError(RuntimeError):
+    """Every checkpoint candidate (primary + swapped-aside copies) failed
+    integrity verification."""
+
+    def __init__(self, directory: str,
+                 problems: list[tuple[str, list[str]]]):
+        detail = "; ".join(
+            f"{cand}: {', '.join(errs)}" for cand, errs in problems)
+        super().__init__(
+            f"no intact checkpoint for {directory!r} — {detail}")
+        self.directory = directory
+        self.problems = problems
 
 # cluster-axis-sharded array fields, in manifest order
 _FIELDS = ("doc_tids", "doc_tw", "doc_mask", "doc_ids", "doc_seg",
@@ -115,6 +145,19 @@ def _shard_rows(m: int, n_shards: int) -> list[int]:
     return [round(s * m / n_shards) for s in range(n_shards + 1)]
 
 
+def _file_digest(path: str) -> tuple[str, int]:
+    """(sha256 hexdigest, byte length) of a file, streamed."""
+    h = hashlib.sha256()
+    nbytes = 0
+    with open(path, "rb") as f:
+        while True:
+            chunk = f.read(1 << 20)
+            if not chunk:
+                return h.hexdigest(), nbytes
+            h.update(chunk)
+            nbytes += len(chunk)
+
+
 def save_index(directory: str, index: ClusterIndex, *, epoch: int = 0,
                n_shards: int = 1, extra: dict | None = None) -> str:
     """Atomically write ``index`` under ``directory``; returns the path."""
@@ -130,10 +173,16 @@ def save_index(directory: str, index: ClusterIndex, *, epoch: int = 0,
     if os.path.exists(tmp):
         shutil.rmtree(tmp)
     os.makedirs(tmp)
+    shard_entries = []
     for s in range(n_shards):
         lo, hi = rows[s], rows[s + 1]
-        np.savez(os.path.join(tmp, f"shard_{s:04d}.npz"),
-                 **{f: a[lo:hi] for f, a in host.items()})
+        name = f"shard_{s:04d}.npz"
+        path = os.path.join(tmp, name)
+        np.savez(path, **{f: a[lo:hi] for f, a in host.items()})
+        fault_point("persist.shard.mid_write", path)
+        digest, nbytes = _file_digest(path)
+        shard_entries.append({"file": name, "sha256": digest,
+                              "bytes": nbytes})
     manifest = {
         "format_version": FORMAT_VERSION,
         "epoch": int(epoch),
@@ -146,8 +195,11 @@ def save_index(directory: str, index: ClusterIndex, *, epoch: int = 0,
         "scale": float(index.scale),
         "n_shards": n_shards,
         "shard_rows": rows,
+        "shards": shard_entries,
         "extra": extra or {},
     }
+    fault_point("persist.manifest.pre_write",
+                os.path.join(tmp, shard_entries[-1]["file"]))
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f, indent=1)
     base = os.path.basename(directory)
@@ -159,9 +211,11 @@ def save_index(directory: str, index: ClusterIndex, *, epoch: int = 0,
         if os.path.exists(old):
             shutil.rmtree(old)
         os.replace(directory, old)
+        fault_point("persist.swap.between_renames", None)
         os.replace(tmp, directory)
     else:
         os.replace(tmp, directory)
+    fault_point("persist.swap.post_promote", None)
     # reap swapped-aside copies from this save AND any earlier crashed
     # save (their pids differ) — the promoted checkpoint supersedes them
     for stale in glob.glob(os.path.join(parent, f".old-{base}-*")):
@@ -169,22 +223,79 @@ def save_index(directory: str, index: ClusterIndex, *, epoch: int = 0,
     return directory
 
 
-def _recover_path(directory: str) -> str:
-    """If ``directory`` vanished in the rename window of an interrupted
-    overwrite, fall back to the swapped-aside previous checkpoint."""
-    if os.path.exists(os.path.join(directory, "manifest.json")):
-        return directory
+def verify_checkpoint(directory: str) -> list[str]:
+    """Integrity problems with the checkpoint at ``directory`` (empty
+    list = intact). v5+ checkpoints verify every shard's byte length and
+    sha256 against the manifest; pre-v5 checkpoints predate checksums
+    and only the manifest's readability is checked."""
+    mpath = os.path.join(directory, "manifest.json")
+    if not os.path.exists(mpath):
+        return ["manifest.json missing"]
+    try:
+        with open(mpath) as f:
+            manifest = json.load(f)
+    except (OSError, ValueError) as e:
+        return [f"manifest unreadable: {e}"]
+    if int(manifest.get("format_version", 0)) < 5:
+        # pre-checksum formats: digests in the manifest (e.g. left behind
+        # by a hand-downgrade) have nothing trustworthy to say
+        return []
+    problems = []
+    for entry in manifest.get("shards", []):
+        path = os.path.join(directory, entry["file"])
+        if not os.path.exists(path):
+            problems.append(f"{entry['file']} missing")
+            continue
+        digest, nbytes = _file_digest(path)
+        if nbytes != entry["bytes"]:
+            problems.append(
+                f"{entry['file']}: {nbytes} bytes on disk, manifest "
+                f"says {entry['bytes']}")
+        elif digest != entry["sha256"]:
+            problems.append(f"{entry['file']}: sha256 mismatch")
+    return problems
+
+
+def _recover_path(directory: str, verify: bool = True,
+                  registry=None) -> str:
+    """Resolve the checkpoint to actually read: ``directory`` itself when
+    intact, else the newest intact swapped-aside ``.old-*`` copy (the
+    survivor of an interrupted or corrupted overwrite)."""
     parent = os.path.dirname(os.path.abspath(directory)) or "."
     base = os.path.basename(directory)
     survivors = sorted(glob.glob(os.path.join(parent, f".old-{base}-*")),
-                       key=os.path.getmtime)
-    if survivors:
-        return survivors[-1]
-    return directory                     # let the open() raise normally
+                       key=os.path.getmtime, reverse=True)
+    candidates = [directory] + survivors
+    if not verify:
+        for cand in candidates:
+            if os.path.exists(os.path.join(cand, "manifest.json")):
+                return cand
+        return directory                 # let the open() raise normally
+    problems_seen: list[tuple[str, list[str]]] = []
+    any_manifest = False
+    for cand in candidates:
+        problems = verify_checkpoint(cand)
+        if not problems:
+            return cand
+        if problems != ["manifest.json missing"]:
+            any_manifest = True
+            if registry is not None:
+                n_shard_problems = sum(
+                    1 for p in problems if not p.startswith("manifest"))
+                if n_shard_problems:
+                    registry.counter(
+                        "snapshot_corrupt_shards_total",
+                        "checkpoint shards failing checksum "
+                        "verification at load").inc(n_shard_problems)
+        problems_seen.append((cand, problems))
+    if not any_manifest:
+        return directory                 # nothing saved: FileNotFoundError
+    raise CheckpointCorruptError(directory, problems_seen)
 
 
-def read_manifest(directory: str) -> dict:
-    directory = _recover_path(directory)
+def read_manifest(directory: str, verify: bool = True,
+                  registry=None) -> dict:
+    directory = _recover_path(directory, verify=verify, registry=registry)
     with open(os.path.join(directory, "manifest.json")) as f:
         manifest = json.load(f)
     version = manifest.get("format_version")
@@ -196,7 +307,9 @@ def read_manifest(directory: str) -> dict:
 
 
 def load_index(directory: str,
-               shards: list[int] | None = None
+               shards: list[int] | None = None,
+               verify: bool = True,
+               registry=None
                ) -> tuple[ClusterIndex, dict]:
     """Load (a subset of the shards of) a saved index.
 
@@ -204,9 +317,15 @@ def load_index(directory: str,
     single-host cold start). Returns (index, manifest); with a shard
     subset the index's ``m`` is the subset's row count and ``doc_ids``
     stay global.
+
+    ``verify=True`` checks every shard's sha256/byte length against the
+    manifest (v5+) before reading arrays, falling back to a swapped-aside
+    previous checkpoint when the primary is corrupt or partial; note the
+    whole candidate is verified even under a shard subset, so fallback
+    decisions are consistent across hosts.
     """
-    directory = _recover_path(directory)
-    manifest = read_manifest(directory)
+    directory = _recover_path(directory, verify=verify, registry=registry)
+    manifest = read_manifest(directory, verify=False)
     pick = list(range(manifest["n_shards"])) if shards is None else shards
     parts: dict[str, list[np.ndarray]] = {
         f: [] for f in _FIELDS + _LEGACY_FIELDS}

@@ -19,6 +19,7 @@ is fixed at build time).
 from __future__ import annotations
 
 import dataclasses
+import os
 import threading
 import time
 import weakref
@@ -27,6 +28,7 @@ import numpy as np
 
 from repro.core.types import ClusterIndex
 from repro.lifecycle.mutable import MutableIndex
+from repro.lifecycle.wal import SNAPSHOT_SUBDIR, WAL_SUBDIR, WriteAheadLog
 
 
 @dataclasses.dataclass(frozen=True)
@@ -78,9 +80,15 @@ class SnapshotPublisher:
         if index is not None:
             self.publish(index)
 
-    def publish(self, index: ClusterIndex) -> IndexSnapshot:
+    def publish(self, index: ClusterIndex,
+                min_epoch: int = 0) -> IndexSnapshot:
+        """Swap in a new snapshot. ``min_epoch`` floors the assigned
+        epoch — recovery uses it so numbering resumes monotonically from
+        the last epoch the WAL saw published, even into a fresh
+        publisher."""
         with self._lock:
             epoch = self._current.epoch + 1 if self._current else 0
+            epoch = max(epoch, min_epoch)
             snap = IndexSnapshot.of(index, epoch)
             if self._current is not None:
                 old = self._current
@@ -194,10 +202,11 @@ class IndexWriter:
                  publisher: SnapshotPublisher | None = None,
                  seg_method: str = "random_uniform",
                  seed: int = 0,
-                 registry=None):
+                 registry=None,
+                 wal=None):
         self.mutable = MutableIndex(
             index, centroids=centroids, compact_threshold=compact_threshold,
-            seg_method=seg_method, seed=seed, registry=registry)
+            seg_method=seg_method, seed=seed, registry=registry, wal=wal)
         self.publisher = publisher if publisher is not None \
             else SnapshotPublisher(index, registry=registry)
         self._pending = 0
@@ -226,3 +235,105 @@ class IndexWriter:
         snap = self.publisher.publish(self.mutable.snapshot())
         self._pending = 0
         return snap
+
+
+class DurableIndexWriter(IndexWriter):
+    """IndexWriter whose write plane survives crashes.
+
+    One directory holds the whole durable state::
+
+        <directory>/snapshot/    checksummed v5 checkpoint (persist.py)
+        <directory>/wal/         redo log segments (wal.py)
+
+    Construction writes the base checkpoint the WAL replays from (unless
+    one exists already); every :meth:`commit` stamps an epoch-publish
+    record and flushes the log, and every ``checkpoint_every`` commits
+    (0 = never automatically) a fresh checkpoint retires the replayed
+    prefix. :meth:`recover` rebuilds writer + publisher state after a
+    crash — into an *existing* publisher when serving is live, so
+    readers keep the last-good epoch pinned until the recovered writer
+    republishes (the degraded-mode story in launch/serve.py).
+    """
+
+    def __init__(self, index: ClusterIndex, directory: str,
+                 fsync: str = "interval",
+                 checkpoint_every: int = 8,
+                 n_shards: int = 1,
+                 centroids: np.ndarray | None = None,
+                 compact_threshold: float = 0.25,
+                 publisher: SnapshotPublisher | None = None,
+                 seg_method: str = "random_uniform",
+                 seed: int = 0,
+                 registry=None,
+                 **wal_kwargs):
+        os.makedirs(directory, exist_ok=True)
+        wal = WriteAheadLog(os.path.join(directory, WAL_SUBDIR),
+                            fsync=fsync, registry=registry, **wal_kwargs)
+        super().__init__(index, centroids=centroids,
+                         compact_threshold=compact_threshold,
+                         publisher=publisher, seg_method=seg_method,
+                         seed=seed, registry=registry, wal=wal)
+        self.directory = directory
+        self.n_shards = n_shards
+        self.checkpoint_every = int(checkpoint_every)
+        self._commits_since_checkpoint = 0
+        self.recovery_stats: dict | None = None
+        if not os.path.exists(os.path.join(directory, SNAPSHOT_SUBDIR)):
+            self.checkpoint()
+
+    @classmethod
+    def recover(cls, directory: str,
+                fsync: str = "interval",
+                checkpoint_every: int = 8,
+                n_shards: int = 1,
+                centroids: np.ndarray | None = None,
+                publisher: SnapshotPublisher | None = None,
+                registry=None,
+                **wal_kwargs) -> "DurableIndexWriter":
+        mutable, stats = MutableIndex.recover(
+            directory, centroids=centroids, registry=registry,
+            fsync=fsync, **wal_kwargs)
+        writer = cls.__new__(cls)
+        writer.mutable = mutable
+        writer.publisher = publisher if publisher is not None \
+            else SnapshotPublisher(registry=registry)
+        writer._pending = 0
+        writer.directory = directory
+        writer.n_shards = n_shards
+        writer.checkpoint_every = int(checkpoint_every)
+        writer._commits_since_checkpoint = 0
+        writer.recovery_stats = stats
+        # republish: readers of an existing publisher move off the
+        # last-good epoch only now, when the recovered index is whole.
+        # Epoch numbering resumes after the last publish the WAL saw, so
+        # restart never reuses an epoch readers may have observed.
+        writer.publisher.publish(
+            mutable.snapshot(),
+            min_epoch=int(stats.get("last_published_epoch", 0)) + 1)
+        return writer
+
+    def commit(self) -> IndexSnapshot:
+        snap = super().commit()
+        self.mutable.wal.append_epoch(self.mutable.op_seq, snap.epoch)
+        self.mutable.wal.flush(fsync=self.mutable.wal.fsync == "always")
+        self._commits_since_checkpoint += 1
+        if (self.checkpoint_every
+                and self._commits_since_checkpoint >= self.checkpoint_every):
+            self.checkpoint()
+        return snap
+
+    def checkpoint(self) -> str:
+        """Durable checkpoint of the current state (commit-published or
+        not); retires the WAL prefix it covers."""
+        epoch = self.publisher._current.epoch \
+            if self.publisher._current is not None else 0
+        path = self.mutable.checkpoint(self.directory, epoch=epoch,
+                                       n_shards=self.n_shards)
+        self._commits_since_checkpoint = 0
+        return path
+
+    def close(self) -> None:
+        """Graceful shutdown: final checkpoint, then flush + close the
+        WAL — a clean exit recovers with zero replay."""
+        self.checkpoint()
+        self.mutable.wal.close()

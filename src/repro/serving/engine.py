@@ -159,6 +159,70 @@ class AdaptiveBudget:
                                self.cost_floor_ms)
 
 
+#: health states, in gauge order: serve_health_state reports the index
+HEALTH_STATES = ("healthy", "degraded", "recovering")
+
+
+class HealthStateMachine:
+    """Write-plane health, as the read path sees it.
+
+    ::
+
+        healthy --(writer fault)--> degraded --(recovery begins)-->
+        recovering --(recovered epoch republished)--> healthy
+
+    ``degraded -> healthy`` directly is also legal (a transient fault
+    cleared by a plain retry, no recovery needed) and ``recovering ->
+    degraded`` (a recovery attempt failed; backoff and retry). Readers
+    never block on any of this — they keep serving the publisher's
+    last-good epoch — so the machine is bookkeeping for operators
+    (``serve_health_state`` gauge, transition counter) and for the serve
+    loop's retry/backoff policy, not a request gate.
+    """
+
+    _LEGAL = {
+        "healthy": {"degraded"},
+        "degraded": {"recovering", "healthy"},
+        "recovering": {"healthy", "degraded"},
+    }
+
+    def __init__(self, registry: MetricsRegistry | None = None):
+        self.registry = registry
+        self.state = "healthy"
+        self.reason = ""
+        self.transitions: list[tuple[str, str, str]] = []
+        self._mirror()
+
+    def to(self, state: str, reason: str = "") -> None:
+        if state not in HEALTH_STATES:
+            raise ValueError(f"unknown health state {state!r}")
+        if state == self.state:
+            return
+        if state not in self._LEGAL[self.state]:
+            raise ValueError(
+                f"illegal health transition {self.state!r} -> {state!r}")
+        self.transitions.append((self.state, state, reason))
+        self.state = state
+        self.reason = reason
+        self._mirror()
+        if self.registry is not None:
+            self.registry.counter(
+                "serve_health_transitions_total",
+                "health state machine transitions",
+                labels={"to": state}).inc()
+
+    @property
+    def healthy(self) -> bool:
+        return self.state == "healthy"
+
+    def _mirror(self) -> None:
+        if self.registry is not None:
+            self.registry.gauge(
+                "serve_health_state",
+                "write-plane health: 0 healthy, 1 degraded, "
+                "2 recovering").set(HEALTH_STATES.index(self.state))
+
+
 class RetrievalEngine:
     """Batched ASC serving with latency accounting.
 
@@ -191,6 +255,10 @@ class RetrievalEngine:
         self.stats = ServeStats(
             registry=obs.registry if obs is not None else None,
             window=stats_window)
+        # write-plane health as seen from the read path; the serve loop
+        # drives transitions, searches only observe (never block)
+        self.health = HealthStateMachine(
+            registry=obs.registry if obs is not None else None)
         self.last_epoch: int | None = None
         self._fn = jax.jit(
             lambda idx, q, budget: retrieve(idx, q, cfg, budget=budget))
@@ -228,6 +296,11 @@ class RetrievalEngine:
     # -- the serving hot path ---------------------------------------------
     def search(self, queries: QueryBatch) -> TopK:
         obs = self.obs
+        if not self.health.healthy and obs is not None:
+            obs.registry.counter(
+                "serve_degraded_requests_total",
+                "requests served off the last-good epoch while the "
+                "write plane was degraded or recovering").inc()
         if obs is None:
             return self._search_impl(queries, None, None, False)
         rid, trace, want_split = obs.next_request()

@@ -1,0 +1,173 @@
+"""Real-crash recovery: SIGKILL a churning writer subprocess mid-stream,
+recover from its durable directory, finish the op stream, and re-pass
+the committed golden fixture on the recovered index.
+
+This is the end-to-end teeth behind the in-process fault-injection
+tests: no cooperative exception unwinding, no atexit — the process dies
+with buffered WAL frames in flight, and recovery must still hand back a
+bit-exact durable prefix (``recovered.op_seq`` tells us exactly which
+one).
+
+The op stream is *precomputed as concrete data* (JSON) rather than
+re-drawn from live-set-dependent rng in each process: ``live_ids()``
+iteration order differs between a recovered index and the original
+writer, so only a concrete ``[(op, args...), ...]`` list lets the parent
+deterministically finish what the killed child started. Replaying
+``ops[recovered.op_seq:]`` is well-defined because every insert, delete
+and compact consumes exactly one ``op_seq``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import signal
+import subprocess
+import sys
+import time
+
+import numpy as np
+import pytest
+
+import test_golden_regression as tg
+from repro.lifecycle import MutableIndex
+from repro.lifecycle.wal import WAL_SUBDIR, WriteAheadLog
+
+# kill only after the child reports this many applied ops — with
+# sync_every_n=8 below, at least KILL_AFTER-8 of them are durable
+KILL_AFTER = 60
+WAL_KW = dict(fsync="interval", sync_every_n=8, sync_interval_s=0.05)
+
+_CHILD = r"""
+import json, os, sys
+sys.path.insert(0, {tests_dir!r})
+import numpy as np
+import test_golden_regression as tg
+from test_crash_recovery import WAL_KW, apply_op
+from repro.lifecycle import MutableIndex
+from repro.lifecycle.wal import WAL_SUBDIR, WriteAheadLog
+
+durable_dir = sys.argv[1]
+with open(os.path.join(durable_dir, "ops.json")) as f:
+    ops = json.load(f)
+index, _ = tg._world()
+wal = WriteAheadLog(os.path.join(durable_dir, WAL_SUBDIR), **WAL_KW)
+mi = MutableIndex(index, seed=881, wal=wal)
+mi.checkpoint(durable_dir)
+for i, op in enumerate(ops):
+    apply_op(mi, op)
+    print(f"OP {{i + 1}}", flush=True)
+print("DONE", flush=True)
+"""
+
+
+def _record_golden_ops() -> list:
+    """Re-run the golden ``_churned_world`` stream against an oracle,
+    recording each op as concrete data."""
+    index, _ = tg._world()
+    mi = MutableIndex(index, seed=881)
+    rng = np.random.default_rng(882)
+    ops: list = []
+
+    def ins():
+        nnz = int(rng.integers(4, 12))
+        t = rng.choice(256, nnz, replace=False)
+        w = rng.lognormal(0.0, 0.5, nnz).astype(np.float32)
+        ops.append(["insert", t.tolist(), [float(x) for x in w]])
+        mi.insert(t, w)
+
+    def dele(n):
+        for d in rng.choice(mi.live_ids(), n, replace=False):
+            ops.append(["delete", int(d)])
+            mi.delete(int(d))
+
+    for _ in range(2):
+        dele(40)
+        for _ in range(30):
+            ins()
+    ops.append(["compact"])
+    mi.compact()
+    dele(20)
+    for _ in range(25):
+        ins()
+    return ops
+
+
+def apply_op(mi: MutableIndex, op) -> None:
+    kind = op[0]
+    if kind == "insert":
+        mi.insert(np.asarray(op[1], np.int64),
+                  np.asarray(op[2], np.float32))
+    elif kind == "delete":
+        mi.delete(int(op[1]))
+    else:
+        mi.compact()
+
+
+@pytest.mark.slow
+def test_sigkill_mid_churn_recovers_and_repasses_golden(tmp_path):
+    durable_dir = str(tmp_path / "durable")
+    os.makedirs(durable_dir)
+    ops = _record_golden_ops()
+    assert len(ops) > KILL_AFTER + 20          # the kill lands mid-stream
+    with open(os.path.join(durable_dir, "ops.json"), "w") as f:
+        json.dump(ops, f)
+
+    tests_dir = os.path.dirname(os.path.abspath(__file__))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (env.get("PYTHONPATH", ""), tests_dir) if p)
+    child = subprocess.Popen(
+        [sys.executable, "-c", _CHILD.format(tests_dir=tests_dir),
+         durable_dir],
+        stdout=subprocess.PIPE, text=True, env=env)
+    try:
+        applied = 0
+        deadline = time.monotonic() + 240
+        for line in child.stdout:
+            if line.startswith("OP "):
+                applied = int(line.split()[1])
+                if applied >= KILL_AFTER:
+                    break
+            assert not line.startswith("DONE"), \
+                "child finished before the kill — raise KILL_AFTER"
+            assert time.monotonic() < deadline
+        else:
+            pytest.fail(f"child exited early (rc={child.poll()}) after "
+                        f"{applied} ops")
+        child.kill()                           # SIGKILL: no cleanup runs
+        child.wait(timeout=60)
+    finally:
+        if child.poll() is None:
+            child.kill()
+        child.stdout.close()
+
+    # recover the durable prefix; frames buffered at kill time are lost,
+    # but never more than the group-commit window. The child kept
+    # applying ops between our last read and the kill, so `applied` is a
+    # lower bound on its true progress — the durable prefix must reach
+    # at least applied - window, and may legitimately exceed `applied`.
+    rec, stats = MutableIndex.recover(durable_dir, attach_wal=False)
+    assert 0 < rec.op_seq <= len(ops)
+    assert rec.op_seq >= applied - WAL_KW["sync_every_n"]
+    assert stats["n_replayed"] == rec.op_seq
+
+    # finish the stream exactly where the durable prefix ends: the
+    # recovered writer must complete it identically to an uncrashed one
+    for op in ops[rec.op_seq:]:
+        apply_op(rec, op)
+
+    # the recovered-and-finished index must re-pass the committed golden
+    # fixture, scores and all
+    with open(tg.GOLDEN_PATH) as f:
+        golden = json.load(f)
+    snap = rec.snapshot()
+    _, cq = tg._world()
+    from repro.core.search import brute_force_topk, retrieve
+    for name, cfg in tg.CHURNED_ENGINES.items():
+        got = tg._topk_entry(retrieve(snap, cq, cfg))
+        tg._check_entry(golden["churned"][name], got,
+                        f"recovered:{name}")
+    got = tg._topk_entry(brute_force_topk(snap, cq, tg.K))
+    tg._check_entry(golden["churned"]["brute_force"], got,
+                    "recovered:brute_force")

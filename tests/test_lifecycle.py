@@ -530,7 +530,9 @@ def test_legacy_v1_roundtrips_through_v2(small_world, tmp_path):
 
 
 def test_v1_shard_missing_required_field_raises(small_world, tmp_path):
-    """Only the derivable fields may be absent from a shard."""
+    """Only the derivable fields may be absent from a shard. (verify=False
+    gets past the v5 checksum layer, which would otherwise flag the
+    hand-rewritten shard before the loader ever looks inside it.)"""
     _, _, base = small_world
     path = save_index(str(tmp_path / "ix"), base)
     shard = os.path.join(path, "shard_0000.npz")
@@ -539,7 +541,7 @@ def test_v1_shard_missing_required_field_raises(small_world, tmp_path):
     del arrays["doc_tw"]
     np.savez(shard, **arrays)
     with pytest.raises(KeyError, match="doc_tw"):
-        load_index(path)
+        load_index(path, verify=False)
 
 
 # ---------------------------------------------------------------------------
@@ -595,3 +597,436 @@ def test_engine_mirrors_gc_stats_into_serve_stats(small_world):
     eng.search(q)
     assert eng.stats.collected_epochs >= 1
     assert eng.stats.max_epoch_lifetime_s > 0.0
+
+
+# ---------------------------------------------------------------------------
+# durable write plane: checksummed snapshots, WAL recovery, fault injection
+# ---------------------------------------------------------------------------
+
+from repro.lifecycle import (CheckpointCorruptError, DurableIndexWriter,  # noqa: E402
+                             FaultInjected, FaultSchedule, WriteAheadLog,
+                             install, verify_checkpoint)
+from repro.lifecycle.wal import SNAPSHOT_SUBDIR, WAL_SUBDIR  # noqa: E402
+
+from _prop import given, settings, st  # noqa: E402
+
+
+def _assert_same_index(a, b) -> None:
+    """Bit-exact MutableIndex equality: every ClusterIndex array, the
+    quantization scale, and every piece of writer state that shapes
+    future mutations (op counter, id allocator, rng stream)."""
+    import dataclasses
+    ha, hb = a._host_index(), b._host_index()
+    for f in dataclasses.fields(ha):
+        va, vb = getattr(ha, f.name), getattr(hb, f.name)
+        if isinstance(va, np.ndarray):
+            np.testing.assert_array_equal(va, vb, err_msg=f.name)
+        else:
+            assert va == vb, (f.name, va, vb)
+    assert a.op_seq == b.op_seq
+    assert a._next_doc_id == b._next_doc_id
+    assert a.scale == b.scale
+    assert a._loc == b._loc
+    assert a._rng.bit_generator.state == b._rng.bit_generator.state
+
+
+def _wal_mutable(base, directory, **wal_kwargs):
+    wal = WriteAheadLog(os.path.join(directory, WAL_SUBDIR),
+                        fsync=wal_kwargs.pop("fsync", "off"), **wal_kwargs)
+    return MutableIndex(base, seed=7, wal=wal)
+
+
+# -- checksummed snapshots (persist v5) -------------------------------------
+
+def test_v5_manifest_carries_shard_digests(small_world, tmp_path):
+    _, _, base = small_world
+    path = save_index(str(tmp_path / "ix"), base, n_shards=3)
+    manifest = read_manifest(path)
+    assert len(manifest["shards"]) == 3
+    for entry in manifest["shards"]:
+        assert len(entry["sha256"]) == 64
+        assert entry["bytes"] == os.path.getsize(
+            os.path.join(path, entry["file"]))
+    assert verify_checkpoint(path) == []
+
+
+def _flip_byte(path: str, offset: int = -1) -> None:
+    size = os.path.getsize(path)
+    off = offset % size
+    with open(path, "r+b") as f:
+        f.seek(off)
+        b = f.read(1)[0]
+        f.seek(off)
+        f.write(bytes([b ^ 0x01]))
+
+
+def test_corrupt_shard_detected_and_fatal_without_fallback(
+        small_world, tmp_path):
+    _, _, base = small_world
+    path = save_index(str(tmp_path / "ix"), base, n_shards=2)
+    shard = os.path.join(path, read_manifest(path)["shards"][1]["file"])
+    _flip_byte(shard, offset=100)
+
+    problems = verify_checkpoint(path)
+    assert problems and any("sha256" in p for p in problems)
+    with pytest.raises(CheckpointCorruptError) as ei:
+        load_index(path)
+    assert ei.value.problems
+
+
+def test_truncated_shard_detected(small_world, tmp_path):
+    _, _, base = small_world
+    path = save_index(str(tmp_path / "ix"), base)
+    shard = os.path.join(path, read_manifest(path)["shards"][0]["file"])
+    os.truncate(shard, os.path.getsize(shard) - 7)
+    problems = verify_checkpoint(path)
+    assert problems and any("byte" in p for p in problems)
+
+
+def test_crash_between_renames_keeps_old_checkpoint_loadable(
+        small_world, tmp_path):
+    """ISSUE-7 satellite: a crash in persist's swap window (old moved
+    aside, new not yet promoted) must leave the previous checkpoint
+    recoverable."""
+    _, _, base = small_world
+    path = str(tmp_path / "ix")
+    save_index(path, base, epoch=1)
+    with install(FaultSchedule(
+            [("persist.swap.between_renames", 1, "raise")])):
+        with pytest.raises(FaultInjected):
+            save_index(path, base, epoch=2)
+
+    loaded, manifest = load_index(path)          # falls back to .old copy
+    assert manifest["epoch"] == 1
+    np.testing.assert_array_equal(np.asarray(loaded.doc_ids),
+                                  np.asarray(base.doc_ids))
+
+
+def test_corrupt_primary_falls_back_to_swapped_aside_copy(
+        small_world, tmp_path):
+    from repro.obs.metrics import MetricsRegistry
+    _, _, base = small_world
+    path = str(tmp_path / "ix")
+    save_index(path, base, epoch=1)
+    # crash after promotion, before reaping the swapped-aside old copy
+    with install(FaultSchedule(
+            [("persist.swap.post_promote", 1, "raise")])):
+        with pytest.raises(FaultInjected):
+            save_index(path, base, epoch=2)
+    assert any(p.startswith(".old-") for p in os.listdir(tmp_path))
+    shard = os.path.join(path, read_manifest(path)["shards"][0]["file"])
+    _flip_byte(shard, offset=50)
+
+    reg = MetricsRegistry()
+    loaded, manifest = load_index(path, registry=reg)
+    assert manifest["epoch"] == 1                # older but intact
+    np.testing.assert_array_equal(np.asarray(loaded.doc_ids),
+                                  np.asarray(base.doc_ids))
+    assert reg.snapshot()["snapshot_corrupt_shards_total"] >= 1
+
+
+def test_mid_save_crash_leaves_old_checkpoint(small_world, tmp_path):
+    _, _, base = small_world
+    path = str(tmp_path / "ix")
+    save_index(path, base, epoch=1)
+    for point in ("persist.shard.mid_write", "persist.manifest.pre_write"):
+        with install(FaultSchedule([(point, 1, "raise")])):
+            with pytest.raises(FaultInjected):
+                save_index(path, base, epoch=9)
+        _, manifest = load_index(path)
+        assert manifest["epoch"] == 1, point
+
+
+# -- checkpoint + WAL-tail recovery -----------------------------------------
+
+def test_recover_equals_uncrashed_after_churn(small_world, tmp_path):
+    _, _, base = small_world
+    d = str(tmp_path)
+    mi = _wal_mutable(base, d)
+    mi.checkpoint(d)
+    rng = np.random.default_rng(41)
+    _churn(mi, rng, 60, 50)
+    mi.compact()
+    _churn(mi, rng, 30, 25)
+    mi.wal.flush()                 # crash: no close, no final checkpoint
+
+    rec, stats = MutableIndex.recover(d, attach_wal=False)
+    assert stats["n_replayed"] == mi.op_seq
+    assert not stats["torn_tail"]
+    _assert_same_index(rec, mi)
+
+
+def test_recover_after_clean_close_replays_nothing(small_world, tmp_path):
+    _, _, base = small_world
+    d = str(tmp_path)
+    mi = _wal_mutable(base, d)
+    rng = np.random.default_rng(43)
+    _churn(mi, rng, 20, 20)
+    mi.checkpoint(d)
+    mi.wal.close()
+
+    rec, stats = MutableIndex.recover(d, attach_wal=False)
+    assert stats["n_replayed"] == 0
+    _assert_same_index(rec, mi)
+
+
+def test_recovered_index_keeps_mutating_identically(small_world, tmp_path):
+    """Recovery must restore the *writer*, not just the arrays: the same
+    op stream applied after recovery and after no-crash must match
+    (rng stream, id allocator and scale all round-trip)."""
+    _, _, base = small_world
+    d = str(tmp_path)
+    mi = _wal_mutable(base, d)
+    mi.checkpoint(d)
+    rng = np.random.default_rng(47)
+    _churn(mi, rng, 30, 30)
+    mi.wal.flush()
+    rec, _ = MutableIndex.recover(d, attach_wal=False)
+
+    rng_a, rng_b = (np.random.default_rng(48) for _ in range(2))
+    _churn(mi, rng_a, 20, 20)
+    mi.compact()
+    _churn(rec, rng_b, 20, 20)
+    rec.compact()
+    _assert_same_index(rec, mi)
+
+
+def test_torn_wal_tail_recovers_durable_prefix(small_world, tmp_path):
+    import glob as _glob
+    _, _, base = small_world
+    d = str(tmp_path)
+    mi = _wal_mutable(base, d)
+    mi.checkpoint(d)
+    rng = np.random.default_rng(53)
+    _churn(mi, rng, 25, 25)
+    mi.wal.flush()
+    seg = sorted(_glob.glob(os.path.join(d, WAL_SUBDIR, "wal-*.log")))[-1]
+    os.truncate(seg, os.path.getsize(seg) - 5)   # tear the last record
+
+    rec, stats = MutableIndex.recover(d, attach_wal=False)
+    assert stats["torn_tail"]
+    assert stats["n_replayed"] == mi.op_seq - 1
+
+    # the recovered index equals an uncrashed writer that stopped one op
+    # earlier: replay the same stream minus the torn record
+    oracle = MutableIndex(base, seed=7)
+    rng = np.random.default_rng(53)
+    _churn(oracle, rng, 25, 24)
+    _assert_same_index(rec, oracle)
+
+
+def test_crash_at_compact_mid_pack_completes_on_recovery(
+        small_world, tmp_path):
+    """The COMPACT barrier record is logged before packing starts, so a
+    crash mid-compaction redoes the whole compaction on replay."""
+    _, _, base = small_world
+    d = str(tmp_path)
+    mi = _wal_mutable(base, d)
+    mi.checkpoint(d)
+    rng = np.random.default_rng(59)
+    _churn(mi, rng, 40, 30)
+    with install(FaultSchedule([("compact.mid_pack", 1, "raise")])):
+        with pytest.raises(FaultInjected):
+            mi.compact()
+    mi.wal.flush()
+    # protocol: the in-flight writer is torn down and recovered
+    rec, stats = MutableIndex.recover(d, attach_wal=False)
+    assert stats["n_replayed"] == mi.op_seq
+
+    oracle = MutableIndex(base, seed=7)
+    rng = np.random.default_rng(59)
+    _churn(oracle, rng, 40, 30)
+    oracle.compact()
+    _assert_same_index(rec, oracle)
+
+
+def test_checkpoint_truncates_replayed_wal_prefix(small_world, tmp_path):
+    _, _, base = small_world
+    d = str(tmp_path)
+    mi = _wal_mutable(base, d, segment_bytes=1 << 12)
+    mi.checkpoint(d)
+    rng = np.random.default_rng(61)
+    _churn(mi, rng, 40, 40)
+    mi.checkpoint(d)               # covers the whole tail so far
+    _churn(mi, rng, 10, 10)
+    mi.wal.flush()
+
+    rec, stats = MutableIndex.recover(d, attach_wal=False)
+    assert stats["n_replayed"] == 20           # only the post-checkpoint ops
+    _assert_same_index(rec, mi)
+
+
+def test_recover_rejects_plain_checkpoints(small_world, tmp_path):
+    _, _, base = small_world
+    d = str(tmp_path)
+    save_index(os.path.join(d, SNAPSHOT_SUBDIR), base)
+    with pytest.raises(ValueError, match="writer state"):
+        MutableIndex.recover(d)
+
+
+# -- random ops x random crash point (property) -----------------------------
+
+def _materialize(mi: MutableIndex, op) -> None:
+    kind = op[0]
+    if kind == "insert":
+        r = np.random.default_rng(op[1])
+        nnz = int(r.integers(2, 12))
+        mi.insert(r.choice(SPEC.vocab, nnz, replace=False),
+                  r.lognormal(0.0, 0.5, nnz).astype(np.float32))
+    elif kind == "delete":
+        live = mi.live_ids()
+        mi.delete(int(live[op[1] % live.size]))
+    else:
+        mi.compact()
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.lists(st.sampled_from(["insert", "delete", "compact"]),
+                min_size=1, max_size=24),
+       st.integers(min_value=0, max_value=10_000),
+       st.integers(min_value=0, max_value=24),
+       st.integers(min_value=0, max_value=3))
+def test_recover_equals_uncrashed_property(small_world, kinds, opseed,
+                                           crash_at, tear):
+    """Any op sequence, crashed at any point, recovers bit-exactly to
+    the uncrashed writer that executed the durable prefix."""
+    import shutil
+    import tempfile
+    _, _, base = small_world
+    ops = [(k, opseed + i) for i, k in enumerate(kinds)]
+    prefix = ops[: min(crash_at, len(ops))]
+
+    d = tempfile.mkdtemp(prefix="walprop-")
+    try:
+        mi = _wal_mutable(base, d)
+        mi.checkpoint(d)
+        for op in prefix:
+            _materialize(mi, op)
+        mi.wal.flush()             # crash here: nothing past this exists
+        if tear and prefix:
+            import glob as _glob
+            seg = sorted(_glob.glob(
+                os.path.join(d, WAL_SUBDIR, "wal-*.log")))[-1]
+            os.truncate(seg, max(os.path.getsize(seg) - 3 * tear, 14))
+
+        rec, stats = MutableIndex.recover(d, attach_wal=False)
+        # the durable prefix is whatever replay reached; the oracle is an
+        # uncrashed writer executing exactly that prefix
+        assert 0 <= stats["n_replayed"] <= len(prefix)
+        oracle = MutableIndex(base, seed=7)
+        for op in prefix[: stats["n_replayed"]]:
+            _materialize(oracle, op)
+        _assert_same_index(rec, oracle)
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+
+
+# -- DurableIndexWriter + health state machine ------------------------------
+
+def test_durable_writer_checkpoint_cycle_and_recover(small_world, tmp_path):
+    _, q, base = small_world
+    d = str(tmp_path / "dur")
+    writer = DurableIndexWriter(base, d, fsync="off", checkpoint_every=2,
+                                seed=9)
+    rng = np.random.default_rng(71)
+    for _ in range(3):                       # crosses checkpoint_every
+        for _ in range(10):
+            nnz = int(rng.integers(4, 16))
+            writer.insert(rng.choice(SPEC.vocab, nnz, replace=False),
+                          rng.lognormal(0.0, 0.5, nnz).astype(np.float32))
+        writer.commit()
+    epoch_before = writer.publisher.current.epoch
+    live_before = writer.mutable._host_index()
+    writer.mutable.wal.flush()               # crash without close
+
+    rec = DurableIndexWriter.recover(d, fsync="off")
+    assert rec.recovery_stats is not None
+    assert rec.publisher.current.epoch >= 1
+    _assert_same_index(rec.mutable, writer.mutable)
+    # recovered snapshot serves identically
+    a = asc_retrieve(live_before, q, k=5, mu=1.0, eta=1.0)
+    b = asc_retrieve(rec.publisher.current.index, q, k=5, mu=1.0, eta=1.0)
+    np.testing.assert_array_equal(np.asarray(a.doc_ids),
+                                  np.asarray(b.doc_ids))
+    assert epoch_before >= 1
+
+
+def test_durable_writer_close_then_recover_is_clean(small_world, tmp_path):
+    _, _, base = small_world
+    d = str(tmp_path / "dur")
+    writer = DurableIndexWriter(base, d, fsync="off", checkpoint_every=0,
+                                seed=9)
+    writer.insert([1, 2], [0.5, 0.25])
+    writer.commit()
+    writer.close()
+
+    rec = DurableIndexWriter.recover(d, fsync="off")
+    assert rec.recovery_stats["n_replayed"] == 0     # close checkpointed
+    _assert_same_index(rec.mutable, writer.mutable)
+
+
+def test_recover_republishes_into_existing_publisher(small_world,
+                                                     tmp_path):
+    """Degraded-mode serving: readers of the live publisher keep the
+    last-good epoch until recovery republishes into the same publisher."""
+    _, q, base = small_world
+    d = str(tmp_path / "dur")
+    writer = DurableIndexWriter(base, d, fsync="off", checkpoint_every=0,
+                                seed=9)
+    writer.insert([3, 4], [0.5, 0.25])
+    snap_before = writer.commit()
+    writer.mutable.wal.flush()               # writer dies here
+
+    publisher = writer.publisher             # serving keeps this object
+    pinned = publisher.current
+    assert pinned.epoch == snap_before.epoch
+
+    rec = DurableIndexWriter.recover(d, fsync="off", publisher=publisher)
+    assert rec.publisher is publisher
+    assert publisher.current.epoch == snap_before.epoch + 1
+    np.testing.assert_array_equal(
+        np.asarray(publisher.current.index.doc_ids),
+        np.asarray(pinned.index.doc_ids))
+
+
+def test_health_state_machine_transitions():
+    from repro.obs.metrics import MetricsRegistry
+    from repro.serving.engine import HealthStateMachine
+    reg = MetricsRegistry()
+    h = HealthStateMachine(registry=reg)
+    assert h.state == "healthy" and h.healthy
+
+    h.to("degraded", "writer fault")
+    h.to("recovering")
+    h.to("degraded", "attempt failed")
+    h.to("recovering")
+    h.to("healthy", "recovered")
+    assert h.healthy
+    assert [t[1] for t in h.transitions] == [
+        "degraded", "recovering", "degraded", "recovering", "healthy"]
+
+    with pytest.raises(ValueError, match="illegal"):
+        h.to("recovering")                    # healthy -> recovering
+    with pytest.raises(ValueError, match="unknown"):
+        h.to("on-fire")
+    h.to("degraded")
+    n_before = len(h.transitions)
+    h.to("degraded")                          # same-state is a no-op
+    assert len(h.transitions) == n_before
+    assert reg.snapshot()["serve_health_state"] == 1
+
+
+def test_degraded_search_serves_and_counts(small_world):
+    from repro.obs import Observability
+    _, q, base = small_world
+    obs = Observability()
+    eng = RetrievalEngine(base, SearchConfig(k=5, mu=1.0, eta=1.0),
+                          obs=obs)
+    r1 = eng.search(q)
+    eng.health.to("degraded", "writer down")
+    r2 = eng.search(q)                        # must not block or fail
+    np.testing.assert_array_equal(np.asarray(r1.doc_ids),
+                                  np.asarray(r2.doc_ids))
+    snap = obs.registry.snapshot()
+    assert snap["serve_degraded_requests_total"] == 1
+    assert snap["serve_health_state"] == 1

@@ -1,0 +1,315 @@
+"""Write-ahead-log unit tests: frame codecs, segment rotation, torn-tail
+repair, retention, and the fault-injection harness itself
+(docs/lifecycle.md §durability).
+
+The WAL's contract is *prefix durability*: whatever ``read_wal`` returns
+is an exact prefix of what was appended — a tear or bitflip anywhere
+truncates the readable log at that frame, never yields a corrupted
+record, and re-opening the log repairs the tail so appends continue from
+the durable prefix.
+"""
+
+from __future__ import annotations
+
+import glob
+import os
+
+import numpy as np
+import pytest
+
+from repro.lifecycle import (FaultInjected, FaultSchedule, WriteAheadLog,
+                             fault_point, install, read_wal)
+from repro.lifecycle.faults import CORRUPT_ACTIONS
+from repro.lifecycle.wal import (encode_compact, encode_delete,
+                                 encode_epoch, encode_insert, decode_record)
+
+
+def _wal_dir(tmp_path) -> str:
+    return os.path.join(str(tmp_path), "wal")
+
+
+def _insert_args(rng, op_seq):
+    nnz = int(rng.integers(1, 12))
+    tids = np.sort(rng.choice(200, nnz, replace=False)).astype(np.int64)
+    tw = rng.lognormal(0.0, 0.5, nnz).astype(np.float32)
+    return dict(op_seq=op_seq, doc_id=int(rng.integers(0, 10_000)),
+                c=int(rng.integers(8)), slot=int(rng.integers(64)),
+                seg=int(rng.integers(4)), tids=tids, tw=tw)
+
+
+# ---------------------------------------------------------------------------
+# record codecs
+# ---------------------------------------------------------------------------
+
+def test_insert_record_roundtrip():
+    rng = np.random.default_rng(0)
+    for with_dense in (False, True):
+        a = _insert_args(rng, op_seq=7)
+        dense = (rng.normal(size=16).astype(np.float32)
+                 if with_dense else None)
+        rec = decode_record(encode_insert(dense_rep=dense, **a))
+        assert rec["op"] == "insert"
+        for k in ("op_seq", "doc_id", "c", "slot", "seg"):
+            assert rec[k] == a[k]
+        np.testing.assert_array_equal(rec["tids"], a["tids"])
+        np.testing.assert_array_equal(rec["tw"], a["tw"])
+        if with_dense:
+            np.testing.assert_array_equal(rec["dense_rep"], dense)
+        else:
+            assert rec["dense_rep"] is None
+
+
+def test_delete_epoch_compact_roundtrip():
+    rec = decode_record(encode_delete(3, 42))
+    assert rec == {"op": "delete", "op_seq": 3, "doc_id": 42}
+
+    rec = decode_record(encode_epoch(9, 5))
+    assert rec == {"op": "epoch", "op_seq": 9, "epoch": 5}
+
+    state = np.random.default_rng(1).bit_generator.state
+    rec = decode_record(encode_compact(11, True, False, state))
+    assert (rec["op"], rec["op_seq"]) == ("compact", 11)
+    assert rec["rebalance"] and not rec["requantize"]
+    assert rec["rng_state"] == state
+
+
+def test_unknown_opcode_rejected():
+    with pytest.raises(ValueError, match="opcode"):
+        decode_record(b"\xff rest")
+
+
+# ---------------------------------------------------------------------------
+# append / read / rotation
+# ---------------------------------------------------------------------------
+
+def test_append_read_roundtrip_across_rotation(tmp_path):
+    d = _wal_dir(tmp_path)
+    # tiny segments force many rotations
+    wal = WriteAheadLog(d, fsync="off", segment_bytes=1 << 10)
+    rng = np.random.default_rng(1)
+    want = []
+    for i in range(200):
+        a = _insert_args(rng, op_seq=i + 1)
+        lsn = wal.append_insert(dense_rep=None, **a)
+        assert lsn == i                       # lsns are dense from 0
+        want.append(a)
+    wal.close()
+
+    assert len(glob.glob(os.path.join(d, "wal-*.log"))) > 3
+    records, stats = read_wal(d)
+    assert not stats["torn"]
+    assert stats["end_lsn"] == 200
+    assert [r["lsn"] for r in records] == list(range(200))
+    for rec, a in zip(records, want):
+        assert rec["op_seq"] == a["op_seq"]
+        np.testing.assert_array_equal(rec["tids"], a["tids"])
+
+
+def test_reopen_continues_lsn(tmp_path):
+    d = _wal_dir(tmp_path)
+    wal = WriteAheadLog(d, fsync="off")
+    for i in range(10):
+        wal.append_delete(i + 1, i)
+    wal.close()
+
+    wal = WriteAheadLog(d, fsync="off")
+    assert wal.lsn == 10
+    wal.append_delete(11, 99)
+    wal.close()
+    records, _ = read_wal(d)
+    assert [r["doc_id"] for r in records] == list(range(10)) + [99]
+
+
+def test_read_from_lsn_skips_prefix(tmp_path):
+    d = _wal_dir(tmp_path)
+    wal = WriteAheadLog(d, fsync="off", segment_bytes=1 << 9)
+    for i in range(50):
+        wal.append_delete(i + 1, i)
+    wal.close()
+    records, _ = read_wal(d, from_lsn=37)
+    assert [r["lsn"] for r in records] == list(range(37, 50))
+
+
+def test_fsync_policy_validated(tmp_path):
+    with pytest.raises(ValueError, match="policy"):
+        WriteAheadLog(_wal_dir(tmp_path), fsync="sometimes")
+
+
+def test_always_policy_fsyncs_every_append(tmp_path):
+    from repro.obs.metrics import MetricsRegistry
+    reg = MetricsRegistry()
+    wal = WriteAheadLog(_wal_dir(tmp_path), fsync="always", registry=reg)
+    for i in range(5):
+        wal.append_delete(i + 1, i)
+    wal.close()
+    snap = reg.snapshot()
+    assert snap["wal_records_appended_total"] == 5
+    assert snap["wal_fsyncs_total"] >= 5
+    assert snap["wal_bytes_written_total"] > 0
+
+
+# ---------------------------------------------------------------------------
+# torn tails and mid-log damage
+# ---------------------------------------------------------------------------
+
+def _fill(d, n=40, **kw):
+    wal = WriteAheadLog(d, fsync="off", **kw)
+    for i in range(n):
+        wal.append_delete(i + 1, i)
+    wal.close()
+    return sorted(glob.glob(os.path.join(d, "wal-*.log")))
+
+
+def test_torn_tail_truncated_not_fatal(tmp_path):
+    d = _wal_dir(tmp_path)
+    paths = _fill(d)
+    os.truncate(paths[-1], os.path.getsize(paths[-1]) - 3)
+
+    records, stats = read_wal(d)
+    assert stats["torn"]
+    assert len(records) == 39                 # exactly the last record lost
+    assert [r["doc_id"] for r in records] == list(range(39))
+
+
+def test_reopen_repairs_torn_tail_and_appends(tmp_path):
+    d = _wal_dir(tmp_path)
+    paths = _fill(d)
+    os.truncate(paths[-1], os.path.getsize(paths[-1]) - 3)
+
+    wal = WriteAheadLog(d, fsync="off")
+    assert wal.lsn == 39                      # tail repaired at open
+    wal.append_delete(40, 1000)
+    wal.close()
+    records, stats = read_wal(d)
+    assert not stats["torn"]
+    assert [r["doc_id"] for r in records] == list(range(39)) + [1000]
+
+
+def test_bitflip_mid_log_stops_replay_at_damage(tmp_path):
+    d = _wal_dir(tmp_path)
+    paths = _fill(d, n=60, segment_bytes=1 << 9)
+    assert len(paths) > 2
+    # flip one byte in the middle segment: every frame before it must
+    # still decode, nothing at or after it may be returned
+    victim = paths[1]
+    with open(victim, "r+b") as f:
+        f.seek(os.path.getsize(victim) // 2)
+        b = f.read(1)[0]
+        f.seek(-1, os.SEEK_CUR)
+        f.write(bytes([b ^ 0x40]))
+
+    records, stats = read_wal(d)
+    assert stats["torn"]
+    n = stats["n_records"]
+    assert 0 < n < 60
+    assert [r["doc_id"] for r in records] == list(range(n))
+
+
+def test_unreadable_header_drops_dead_segments(tmp_path):
+    d = _wal_dir(tmp_path)
+    paths = _fill(d, n=60, segment_bytes=1 << 9)
+    with open(paths[1], "r+b") as f:
+        f.write(b"XXXX")                      # destroy the magic
+
+    wal = WriteAheadLog(d, fsync="off")
+    # only segment 0's records survive; later segments are unreachable
+    # by replay and were reclaimed
+    survivors = sorted(glob.glob(os.path.join(d, "wal-*.log")))
+    assert paths[1] not in survivors
+    records, _ = read_wal(d)
+    assert all(r["lsn"] < wal.lsn for r in records)
+    wal.close()
+
+
+def test_truncate_upto_reclaims_covered_segments(tmp_path):
+    d = _wal_dir(tmp_path)
+    wal = WriteAheadLog(d, fsync="off", segment_bytes=1 << 9)
+    for i in range(60):
+        wal.append_delete(i + 1, i)
+    wal.flush(fsync=False)
+    before = len(glob.glob(os.path.join(d, "wal-*.log")))
+    assert before > 2
+
+    removed = wal.truncate_upto(wal.lsn)
+    assert removed > 0
+    # the active segment is never removed, and replay still works
+    assert os.path.exists(wal.path)
+    wal.append_delete(61, 999)
+    wal.close()
+    records, stats = read_wal(d)
+    assert records[-1]["doc_id"] == 999
+    assert not stats["torn"]
+
+    # a fresh writer adopts the truncated log at the right lsn
+    wal = WriteAheadLog(d, fsync="off")
+    assert wal.lsn == 61
+    wal.close()
+
+
+# ---------------------------------------------------------------------------
+# fault-injection harness
+# ---------------------------------------------------------------------------
+
+def test_fault_point_is_noop_without_schedule():
+    fault_point("wal.append.pre_write", None)   # must not raise
+
+
+def test_schedule_fires_on_nth_hit():
+    sched = FaultSchedule([("p", 3, "raise")])
+    with install(sched):
+        fault_point("p")
+        fault_point("p")
+        with pytest.raises(FaultInjected) as ei:
+            fault_point("p")
+        fault_point("p")                        # fires once, then disarms
+    assert ei.value.point == "p"
+    assert sched.hits["p"] == 4
+    assert sched.fired == [("p", "raise")]
+
+
+def test_schedule_validates_actions():
+    with pytest.raises(ValueError, match="action"):
+        FaultSchedule([("p", 1, "explode")])
+    with pytest.raises(ValueError, match="1-based"):
+        FaultSchedule([("p", 0, "raise")])
+
+
+def test_install_is_exclusive_and_restores():
+    with install(FaultSchedule([])):
+        with pytest.raises(RuntimeError, match="already installed"):
+            with install(FaultSchedule([])):
+                pass
+    fault_point("p")                            # uninstalled again
+
+
+@pytest.mark.parametrize("action", CORRUPT_ACTIONS)
+def test_corrupt_actions_damage_wal_tail(tmp_path, action):
+    d = _wal_dir(tmp_path)
+    wal = WriteAheadLog(d, fsync="always")
+    for i in range(20):
+        wal.append_delete(i + 1, i)
+
+    with install(FaultSchedule([("wal.append.pre_fsync", 1, action)],
+                               seed=3)):
+        with pytest.raises(FaultInjected):
+            wal.append_delete(21, 20)
+    wal.close()
+
+    # the damaged tail loses records but never corrupts the prefix
+    records, stats = read_wal(d)
+    assert stats["n_records"] <= 21
+    assert [r["doc_id"] for r in records] == \
+        list(range(stats["n_records"]))
+    # and a reopened writer repairs the tail so appends continue
+    wal = WriteAheadLog(d, fsync="off")
+    wal.append_delete(wal.lsn + 1, 555)
+    wal.close()
+    records, stats = read_wal(d)
+    assert not stats["torn"]
+    assert records[-1]["doc_id"] == 555
+
+
+def test_corrupt_action_requires_path():
+    with install(FaultSchedule([("nopath", 1, "truncate")])):
+        with pytest.raises(ValueError, match="path"):
+            fault_point("nopath", None)
