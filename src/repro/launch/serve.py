@@ -62,6 +62,10 @@ def _parse():
     ap.add_argument("--k", type=int, default=10)
     ap.add_argument("--mu", type=float, default=0.9)
     ap.add_argument("--eta", type=float, default=1.0)
+    ap.add_argument("--engine", type=str, default="auto",
+                    choices=["auto", "per_query", "batched", "pipelined"],
+                    help="search engine; pipelined = device wave "
+                         "planning with plan/execute dispatch loop")
     ap.add_argument("--batches", type=int, default=8)
     ap.add_argument("--batch-size", type=int, default=16)
     ap.add_argument("--budget-ms", type=float, default=0.0,
@@ -288,7 +292,8 @@ def main() -> None:
           f"{index.nbytes() / 2**20:.1f} MiB, "
           f"{jax.device_count()} device(s)")
 
-    cfg = SearchConfig(k=args.k, mu=args.mu, eta=args.eta)
+    cfg = SearchConfig(k=args.k, mu=args.mu, eta=args.eta,
+                       engine=args.engine)
 
     if args.devices and jax.device_count() >= 4:
         if args.churn or args.save_dir or args.budget_ms:

@@ -41,7 +41,6 @@ from jax.sharding import PartitionSpec as P
 from repro.core.search import (SearchConfig, planner_executor_split,
                                resolved_engine, retrieve,
                                _retrieve_arrays)
-from repro.core.plan import wave_summaries
 from repro.core.types import ClusterIndex, QueryBatch, TopK
 from repro.lifecycle.snapshot import IndexSnapshot, SnapshotPublisher
 from repro.obs.funnel import Observability, funnel_from_topk, record_funnel
@@ -260,8 +259,16 @@ class RetrievalEngine:
         self.health = HealthStateMachine(
             registry=obs.registry if obs is not None else None)
         self.last_epoch: int | None = None
-        self._fn = jax.jit(
-            lambda idx, q, budget: retrieve(idx, q, cfg, budget=budget))
+        if cfg.engine == "pipelined":
+            # host-driven wave loop: jitting happens per launch inside
+            # retrieve_pipelined (plan / fused-exec), not around the
+            # whole search — the host driver IS the pipeline
+            from repro.core.search import retrieve_pipelined
+            self._fn = (lambda idx, q, budget:
+                        retrieve_pipelined(idx, q, cfg, budget=budget))
+        else:
+            self._fn = jax.jit(
+                lambda idx, q, budget: retrieve(idx, q, cfg, budget=budget))
         self._split_warm = False
 
     def _resolve(self) -> IndexSnapshot:
@@ -381,7 +388,7 @@ class RetrievalEngine:
             planner_executor_split(snap.index, queries, self.cfg,
                                    budget=budget, reps=1)
             self._split_warm = True
-        _, (plans, executed), split = planner_executor_split(
+        _, waves, split = planner_executor_split(
             snap.index, queries, self.cfg, budget=budget, reps=1)
         reg = obs.registry
         reg.histogram("split_planner_ms",
@@ -393,17 +400,32 @@ class RetrievalEngine:
                       "request").observe(split["executor_ms"])
         reg.gauge("planner_share",
                   "last sampled request: planner wall-time share of "
-                  "the batched walk").set(split["planner_share"])
+                  "the walk (batched: non-replayable remainder; "
+                  "pipelined: device plan-launch stalls at the "
+                  "dispatch boundary — docs/observability.md)").set(
+            split["planner_share"])
         reg.counter("split_requests_total",
                     "requests that ran the planner/executor split").inc()
+        if "plan_launches" in split:
+            reg.gauge("pipeline_plan_launches",
+                      "device plan launches in the last sampled "
+                      "pipelined request").set(split["plan_launches"])
+            reg.gauge("pipeline_fused_waves",
+                      "waves that shared a fused executor launch in "
+                      "the last sampled pipelined request").set(
+                split["fused_waves"])
         if trace.enabled:
             now_us = trace._now_us()
             plan_us = int(split["planner_ms"] * 1e3)
             exec_us = int(split["executor_ms"] * 1e3)
+            plan_args = {"planner_share": split["planner_share"]}
+            if "plan_launches" in split:
+                plan_args.update(
+                    plan_launches=split["plan_launches"],
+                    exec_launches=split["exec_launches"],
+                    fused_waves=split["fused_waves"])
             trace.synthetic_span("plan", now_us - plan_us - exec_us,
-                                 plan_us,
-                                 planner_share=split["planner_share"])
-            waves = wave_summaries(plans, executed)
+                                 plan_us, **plan_args)
             total_slots = sum(w["walked_doc_slots"] for w in waves) or 1
             trace.synthetic_span("execute", now_us - exec_us, exec_us,
                                  n_waves=len(waves))
@@ -417,7 +439,10 @@ class RetrievalEngine:
     def _record_request(self, obs, trace, snap, queries, out, budget,
                         dt) -> None:
         n_q = queries.n_queries
-        batched = resolved_engine(self.cfg, n_q) == "batched"
+        engine = resolved_engine(self.cfg, n_q)
+        # the pipelined engine shares the batched engine's batch-level
+        # counter semantics (its TopK is bit-identical by construction)
+        batched = engine in ("batched", "pipelined")
         funnel = funnel_from_topk(
             out, batched=batched, n_q=n_q, d_pad=snap.index.d_pad,
             budget_clusters=min(int(budget), snap.index.m))
@@ -426,7 +451,7 @@ class RetrievalEngine:
                            "epoch of the most recent search").set(
             snap.epoch)
         trace.set_args(batch=n_q, epoch=snap.epoch,
-                       engine="batched" if batched else "per_query",
+                       engine=engine if batched else "per_query",
                        batch_ms=round(dt * 1e3, 3),
                        **{k: v for k, v in funnel.items()
                           if k != "d_pad"})
@@ -519,7 +544,8 @@ def distributed_retrieve(index: ClusterIndex, queries: QueryBatch,
         # one representative slot per query shard
         n_shards = mesh.shape[qaxis]
         n_local = queries.n_queries // n_shards
-        batched = resolved_engine(cfg, max(n_local, 1)) == "batched"
+        batched = resolved_engine(cfg, max(n_local, 1)) in (
+            "batched", "pipelined")
         m = index.m
         budget = cfg.cluster_budget if cfg.cluster_budget is not None \
             else m

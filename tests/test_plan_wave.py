@@ -1,0 +1,231 @@
+"""Device wave-planner suite (ISSUE 8 tentpole).
+
+Pins the three queue-compaction backends (XLA searchsorted, Pallas
+tri-matmul, argsort reference) bit-exactly against each other on every
+awkward mask shape — empty rows, full rows, odd lengths past the
+128-lane tile — and then the *whole* :class:`~repro.core.plan.WavePlan`
+produced by the jitted ``plan_wave_device`` launch across backends on
+real admission masks from a churned index. The kernels-interpret CI job
+runs this file under ``REPRO_PALLAS_INTERPRET=1`` so the Pallas
+compaction path is exercised off-TPU.
+
+Also covers the plan-buffer VMEM accounting satellite: once planning
+moved on device its queue buffers live alongside the executor's
+resident set, so ``autotune_blocks`` must charge ``plan_buffer_bytes``
+against the same budget (docs/perf.md §device-planning).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _prop import given, settings, st
+
+from repro.core.index import build_index
+from repro.core.search import (SearchConfig, VMEM_BLOCK_BUDGET,
+                               autotune_blocks, plan_buffer_bytes,
+                               retrieve_with_plans)
+from repro.data.synthetic import CorpusSpec, make_corpus, make_queries
+from repro.kernels.plan_wave.compact import (compact_front,
+                                             compact_front_pallas_jit)
+from repro.kernels.plan_wave.ops import plan_wave_device, queue_lengths
+from repro.kernels.plan_wave.ref import compact_front_ref
+
+_BACKENDS = {
+    "xla": compact_front,
+    "pallas": compact_front_pallas_jit,
+    "ref": compact_front_ref,
+}
+
+# the contract's edge cases: scalar rows, multi-lead-dim, lengths that
+# straddle the Pallas 128-lane pad, single-element rows, and the bench
+# planner's real (n_rows, d_pad) shape
+_SHAPES = [(4,), (3, 7), (2, 5, 13), (8, 130), (64, 16), (1, 1), (5, 250)]
+
+
+def _masks(shape, p, seed):
+    rng = np.random.default_rng(seed)
+    if p == 0.0:
+        return np.zeros(shape, bool)
+    if p == 1.0:
+        return np.ones(shape, bool)
+    return rng.random(shape) < p
+
+
+@settings(max_examples=16, deadline=None)
+@given(
+    shape=st.sampled_from(_SHAPES),
+    p=st.sampled_from([0.0, 0.15, 0.5, 1.0]),
+    seed=st.sampled_from([0, 7, 19]),
+)
+def test_compaction_backends_bit_identical(shape, p, seed):
+    keep = jnp.asarray(_masks(shape, p, seed))
+    outs = {name: fn(keep) for name, fn in _BACKENDS.items()}
+    idx_ref, cnt_ref = map(np.asarray, outs["ref"])
+    # the reference is itself correct: counts match popcount, the front
+    # of each row enumerates the True positions in order, and the tail
+    # clamps to the last True entry (0 when the row is empty)
+    flat = np.asarray(keep).reshape(-1, keep.shape[-1])
+    fi, fc = idx_ref.reshape(flat.shape), cnt_ref.reshape(-1)
+    for r in range(flat.shape[0]):
+        true_pos = np.flatnonzero(flat[r])
+        assert fc[r] == true_pos.size
+        np.testing.assert_array_equal(fi[r, :fc[r]], true_pos)
+        tail = true_pos[-1] if true_pos.size else 0
+        np.testing.assert_array_equal(fi[r, fc[r]:], tail)
+    for name in ("xla", "pallas"):
+        np.testing.assert_array_equal(np.asarray(outs[name][0]), idx_ref,
+                                      err_msg=f"{name} idx")
+        np.testing.assert_array_equal(np.asarray(outs[name][1]), cnt_ref,
+                                      err_msg=f"{name} count")
+
+
+_CACHE: dict = {}
+
+
+def _index(layout: str):
+    if ("idx", layout) not in _CACHE:
+        spec = CorpusSpec(n_docs=700, vocab=280, n_topics=10,
+                          doc_terms=22, t_pad=32, query_terms=8,
+                          q_pad=12, seed=211)
+        docs, doc_topic = make_corpus(spec)
+        idx = build_index(docs, doc_topic % 12, m=12, n_seg=4, d_pad=72,
+                          seed=212, sort_segments=(layout != "arrival"))
+        if layout == "dirty":
+            from repro.lifecycle import MutableIndex
+            mi = MutableIndex(idx, seed=213)
+            rng = np.random.default_rng(214)
+            for d in rng.choice(mi.live_ids(), 90, replace=False):
+                mi.delete(int(d))
+            for _ in range(60):
+                t = rng.choice(spec.vocab, 8, replace=False)
+                mi.insert(t, rng.lognormal(0, 0.5, 8).astype(np.float32))
+            idx = mi.snapshot()
+        q, _ = make_queries(spec, 6, doc_topic, seed=215)
+        _CACHE[("idx", layout)] = (idx, q)
+    return _CACHE[("idx", layout)]
+
+
+def _world(layout: str = "dirty", mu: float = 0.7, eta: float = 0.9,
+           budget=None):
+    """Seeded corpus + index + one recorded batched run whose plans give
+    real admission masks for the device-planner equality tests."""
+    key = (layout, mu, eta, budget)
+    if key not in _CACHE:
+        idx, q = _index(layout)
+        cfg = SearchConfig(k=8, mu=mu, eta=eta, engine="batched",
+                           block_q=4, block_d=8)
+        b = None if budget is None else jnp.int32(budget)
+        _, (plans, _) = retrieve_with_plans(idx, q, cfg, budget=b)
+        _CACHE[key] = (idx, plans)
+    return _CACHE[key]
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    layout=st.sampled_from(["dirty", "arrival"]),
+    mu=st.sampled_from([0.5, 0.7, 1.0]),
+    eta=st.sampled_from([0.9, 1.0]),
+    budget=st.sampled_from([None, 5]),
+    wave=st.sampled_from([0, 1, 2]),
+    block_d=st.sampled_from([8, None]),
+)
+def test_plan_wave_device_backends_bit_identical(layout, mu, eta, budget,
+                                                 wave, block_d):
+    """The full WavePlan — every queue, count and mask — is bit-equal
+    across compaction backends on real admission masks swept over
+    (mu, eta)/budget, on both the segment-major (churned) and
+    arrival-order layouts."""
+    if mu > eta:
+        mu = eta
+    idx, plans = _world(layout, mu, eta, budget)
+    cids = plans.cids[wave]
+    n_waves = int(np.asarray(plans.cids).shape[0])
+    if wave >= n_waves:
+        wave = n_waves - 1
+        cids = plans.cids[wave]
+    args = (cids, plans.live[wave], plans.admit[wave],
+            plans.seg_admit[wave], idx.doc_seg_mod[cids],
+            idx.doc_mask[cids], idx.seg_offsets[cids],
+            idx.sorted_upto[cids])
+    outs = {name: plan_wave_device(*args, block_q=4, block_d=block_d,
+                                   compaction=name)
+            for name in ("xla", "pallas", "ref")}
+    ref = outs["ref"]
+    import dataclasses
+    fields = [f.name for f in dataclasses.fields(ref)
+              if f.name not in ("block_q", "block_d")]
+    for name in ("xla", "pallas"):
+        for f in fields:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(outs[name], f)),
+                np.asarray(getattr(ref, f)),
+                err_msg=f"{name}.{f} (wave {wave})")
+    # the host only ever pulls back the clamped queue lengths
+    ql = queue_lengths(ref)
+    assert set(ql) == {"n_tiles", "n_blocks", "n_drun", "n_dblock"}
+    assert all(isinstance(v, int) and v >= 0 for v in ql.values())
+    assert ql["n_tiles"] <= int(np.asarray(cids).shape[0])
+
+
+def test_queue_lengths_consistency():
+    """Launch-count accounting invariants on a real plan: the grid-block
+    total is bounded by tiles x query blocks, and empty admission gives
+    an all-zero queue set."""
+    idx, plans = _world("dirty")
+    cids = plans.cids[0]
+    n_qb = -(-int(np.asarray(plans.admit).shape[1]) // 4)
+    plan = plan_wave_device(cids, plans.live[0], plans.admit[0],
+                            plans.seg_admit[0], idx.doc_seg_mod[cids],
+                            idx.doc_mask[cids], idx.seg_offsets[cids],
+                            idx.sorted_upto[cids], block_q=4)
+    ql = queue_lengths(plan)
+    assert ql["n_blocks"] <= ql["n_tiles"] * n_qb
+    empty = plan_wave_device(cids, plans.live[0],
+                             jnp.zeros_like(plans.admit[0]),
+                             jnp.zeros_like(plans.seg_admit[0]),
+                             idx.doc_seg_mod[cids], idx.doc_mask[cids],
+                             idx.seg_offsets[cids], idx.sorted_upto[cids],
+                             block_q=4)
+    assert queue_lengths(empty) == {"n_tiles": 0, "n_blocks": 0,
+                                    "n_drun": 0, "n_dblock": 0}
+
+
+# ---------------------------------------------------------------------------
+# plan-buffer VMEM accounting (satellite 1)
+# ---------------------------------------------------------------------------
+
+def test_autotune_charges_plan_buffers():
+    """``autotune_blocks`` charges the device plan buffers against the
+    VMEM budget: the resident-set inequality holds with the plan term
+    included, and on a geometry where the buffers are a material slice
+    of the budget the doc-axis block shrinks vs the uncharged
+    arithmetic."""
+    d_pad, t_pad, n_seg, vocab = 4096, 64, 8, 30000
+    n_q, gs = 256, 8
+    bq, bd, bv = autotune_blocks(d_pad, t_pad, n_seg, vocab, n_q, gs)
+    n_qb = -(-n_q // bq)
+    plan_b = plan_buffer_bytes(d_pad, n_seg, n_qb, gs)
+    map_bytes = 4 * bq * (bv if bv is not None else vocab + 1)
+    resident = (map_bytes + 3 * bd * t_pad + 4 * bq * bd + plan_b)
+    assert resident <= VMEM_BLOCK_BUDGET, (
+        f"resident {resident} exceeds budget {VMEM_BLOCK_BUDGET}")
+    assert plan_b > 0
+    # a bigger wave (group_size) inflates the plan buffers and can only
+    # shrink (never grow) the doc-axis block the remainder affords
+    bd_big = autotune_blocks(d_pad, t_pad, n_seg, vocab, n_q, 32)[1]
+    assert bd_big <= bd
+    # monotone in each geometry knob
+    assert (plan_buffer_bytes(2 * d_pad, n_seg, n_qb, gs) > plan_b
+            and plan_buffer_bytes(d_pad, n_seg, 2 * n_qb, gs) == 2 * plan_b
+            and plan_buffer_bytes(d_pad, n_seg, n_qb, 2 * gs) == 2 * plan_b)
+
+
+def test_autotune_explicit_overrides_still_win():
+    """Explicit SearchConfig blocks bypass the plan-buffer arithmetic
+    entirely (resolve_blocks passes them through)."""
+    from repro.core.search import resolve_blocks
+    idx, _ = _world("dirty")
+    cfg = SearchConfig(k=8, block_q=4, block_d=8, engine="batched")
+    assert resolve_blocks(idx, 6, cfg)[:2] == (4, 8)

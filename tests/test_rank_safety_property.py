@@ -36,10 +36,12 @@ import pytest
 from _prop import given, settings, st
 
 from repro.core.index import build_index
-from repro.core.plan import resolve_block_d, segment_histogram
+from repro.core.plan import (resolve_block_d, segment_histogram,
+                             wave_summaries)
 from repro.core.search import (NEG, SearchConfig, brute_force_topk,
                                execute_plans, retrieve,
-                               retrieve_with_plans, score_docs_ref)
+                               retrieve_pipelined, retrieve_with_plans,
+                               score_docs_ref)
 from repro.data.synthetic import CorpusSpec, make_corpus, make_queries
 
 NEG_F = float(np.finfo(np.float32).min)
@@ -399,3 +401,134 @@ def test_doc_run_executor_kernel_smoke(mu, block_d, layout):
                                    rtol=1e-5, atol=1e-5)
     assert np.all(np.asarray(out.n_walked_docs)
                   <= np.asarray(out.n_scored_tiles) * idx.d_pad)
+
+
+# ---------------------------------------------------------------------------
+# pipelined engine: device planning + theta-lag plan-ahead (ISSUE 8)
+# ---------------------------------------------------------------------------
+
+_TOPK_FIELDS = ("doc_ids", "scores", "n_scored_docs", "n_scored_clusters",
+                "n_scored_segments", "n_scored_tiles", "n_walked_tiles",
+                "n_walked_docs")
+
+
+@settings(max_examples=14, deadline=None)
+@given(
+    mu=st.sampled_from([0.6, 1.0]),
+    eta=st.sampled_from([0.8, 1.0]),
+    method=st.sampled_from(["asc", "anytime_star"]),
+    budget=st.sampled_from([None, 6]),
+    layout=st.sampled_from(["sorted", "arrival", "dirty"]),
+    fuse=st.sampled_from([1, 2, 4]),
+)
+def test_pipelined_engine_bit_identical_to_batched(mu, eta, method,
+                                                   budget, layout, fuse):
+    """The plan/execute pipeline (device wave planning, theta-lag
+    plan-ahead, fused executor launches) returns every TopK field *and*
+    the per-wave work summaries bit-identical to ``engine="batched"``,
+    across the fuse-width sweep: theta-lag superset admission over-plans
+    but the executor's exact refinement restores the serial frontier
+    exactly (docs/perf.md §device-planning)."""
+    import dataclasses
+    if mu > eta:
+        mu = eta
+    if method == "anytime_star":
+        eta = mu
+    idx, q, _ = _world(7, layout)
+    b = None if budget is None else jnp.int32(budget)
+    cfg = SearchConfig(k=9, mu=mu, eta=eta, method=method,
+                       engine="batched", block_q=4, block_d=8)
+    out_b, (plans, executed) = retrieve_with_plans(idx, q, cfg, budget=b)
+    cfg_p = dataclasses.replace(cfg, engine="pipelined", fuse_waves=fuse)
+    out_p, info = retrieve_pipelined(idx, q, cfg_p, budget=b,
+                                     with_info=True)
+    for f in _TOPK_FIELDS:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(out_p, f)), np.asarray(getattr(out_b, f)),
+            err_msg=f"TopK.{f} (fuse={fuse}, layout={layout})")
+    assert info["summaries"] == wave_summaries(plans, executed)
+    assert info["plan_launches"] > 0 and info["exec_launches"] > 0
+    if fuse == 1:
+        assert info["fused_waves"] == 0
+
+
+@settings(max_examples=16, deadline=None)
+@given(
+    method=st.sampled_from(["asc", "anytime_star"]),
+    lag=st.sampled_from([1, 2, 3]),
+    budget=st.sampled_from([4, 9, 10 ** 6]),
+    seed=st.sampled_from([0, 5, 17]),
+)
+def test_theta_lag_admission_is_superset(method, lag, budget, seed):
+    """Prop-3 safety of plan-ahead: admission computed from a frontier
+    snapshot ``lag`` waves stale — with the horizon widened by lag*G and
+    the clamp by one wave — admits a superset of the exact admission on
+    the live frontier, whenever the carries are related the way the
+    walk relates them (theta monotone non-decreasing, done monotone,
+    n_clusters/n_pruned each growing by at most G per wave)."""
+    from repro.core.search import _admission
+    rng = np.random.default_rng(seed)
+    n_q, G, n_seg = 5, 4, 4
+    cfg = SearchConfig(k=5, mu=0.7, eta=0.9, method=method)
+    max_s = rng.lognormal(0.0, 0.6, (n_q, G)).astype(np.float32)
+    avg_s = (max_s * rng.uniform(0.3, 1.0, (n_q, G))).astype(np.float32)
+    key = max_s if method == "asc" else avg_s
+    seg_b = (max_s[:, :, None]
+             * rng.uniform(0.2, 1.0, (n_q, G, n_seg))).astype(np.float32)
+    rank = rng.integers(0, 30, (n_q, G)).astype(np.int32)
+    glive = rng.random(G) < 0.9
+    # live-frontier carry, and a snapshot lagging it by <= lag waves:
+    # theta only rises, done only sets, counters grow by <= G per wave
+    theta_lag = rng.uniform(0.0, 2.0, n_q).astype(np.float32)
+    theta_lag[rng.random(n_q) < 0.3] = NEG_F
+    theta_ex = theta_lag + rng.uniform(0.0, 0.6, n_q).astype(np.float32)
+    done_lag = rng.random(n_q) < 0.2
+    done_ex = done_lag | (rng.random(n_q) < 0.2)
+    n_cl_lag = rng.integers(0, budget + 2, n_q).astype(np.int32)
+    n_cl_ex = n_cl_lag + rng.integers(0, lag * G + 1, n_q).astype(np.int32)
+    n_pr_lag = rng.integers(0, 12, n_q).astype(np.int32)
+    n_pr_ex = n_pr_lag + rng.integers(0, lag * G + 1, n_q).astype(np.int32)
+
+    def run(theta, done, n_cl, n_pr, gate_slack, clamp_slack):
+        return _admission(
+            cfg, glive=jnp.asarray(glive), done=jnp.asarray(done),
+            theta=jnp.asarray(theta), max_s_w=jnp.asarray(max_s),
+            avg_s_w=jnp.asarray(avg_s), key_w=jnp.asarray(key),
+            seg_b_w=jnp.asarray(seg_b), rank_w=jnp.asarray(rank),
+            n_clusters=jnp.asarray(n_cl), n_pruned=jnp.asarray(n_pr),
+            budget=jnp.int32(budget), gate_slack=gate_slack,
+            clamp_slack=clamp_slack)
+
+    admit_ex, seg_ex, _ = run(theta_ex, done_ex, n_cl_ex, n_pr_ex,
+                              None, None)
+    lc = jnp.int32(lag * G)
+    admit_lag, seg_lag, _ = run(theta_lag, done_lag, n_cl_lag, n_pr_lag,
+                                lc, jnp.minimum(lc, jnp.int32(G)))
+    a_ex, a_lag = np.asarray(admit_ex), np.asarray(admit_lag)
+    s_ex, s_lag = np.asarray(seg_ex), np.asarray(seg_lag)
+    # an exact admit the lagged plan missed would be a dropped document
+    assert not (a_ex & ~a_lag).any(), "lagged admission lost a tile"
+    assert not (s_ex & ~s_lag).any(), "lagged admission lost a segment"
+
+
+@settings(max_examples=3, deadline=None)
+@given(
+    fuse=st.sampled_from([1, 4]),
+    layout=st.sampled_from(["sorted", "dirty"]),
+)
+def test_pipelined_kernel_smoke(fuse, layout):
+    """Pipelined engine with the Pallas doc-run executor (interpret mode
+    off-TPU) — the kernels-interpret CI subset for the pipeline seam."""
+    import dataclasses
+    idx, q, by_id = _world(3, layout)
+    cfg = SearchConfig(k=5, mu=0.8, eta=1.0, block_q=4, block_d=8,
+                       use_kernel=True, bounds_impl="gemm",
+                       engine="batched")
+    out_b = retrieve(idx, q, cfg)
+    cfg_p = dataclasses.replace(cfg, engine="pipelined", fuse_waves=fuse)
+    out_p = retrieve_pipelined(idx, q, cfg_p)
+    _check_true_scores(out_p, by_id)
+    for f in _TOPK_FIELDS:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(out_p, f)), np.asarray(getattr(out_b, f)),
+            err_msg=f"TopK.{f} (kernel, fuse={fuse})")
