@@ -31,6 +31,13 @@ DEFAULT_SPEC = CorpusSpec(n_docs=6000, vocab=1024, n_topics=48,
                           doc_terms=48, t_pad=64, query_terms=16,
                           q_pad=24, seed=0)
 
+# within-cluster heterogeneity on (doc_quality_sigma): document
+# magnitudes spread inside each topic, so segment maxima discriminate at
+# the default n_seg=4 and coarse superblock bounds discriminate across
+# clusters — the corpus the superblock benchmarks/tests need for pruning
+# to fire at default (mu, eta) = (1, 1) (ROADMAP carry-over)
+HETERO_SPEC = dataclasses.replace(DEFAULT_SPEC, doc_quality_sigma=1.0)
+
 
 @lru_cache(maxsize=4)
 def corpus_bundle(spec: CorpusSpec = DEFAULT_SPEC, n_queries: int = 32,
@@ -52,6 +59,36 @@ def built_index(m: int, n_seg: int, seg_method: str = "random_uniform",
     return build_index(docs, assign, m=m, n_seg=n_seg, d_pad=d_pad,
                        seg_method=seg_method,
                        dense_rep=rep if seg_method == "kmeans_sub" else None,
+                       seed=seed)
+
+
+@lru_cache(maxsize=2)
+def corpus_large(spec: CorpusSpec):
+    """Cached (docs, doc_topic) for the large geometries: ``make_corpus``
+    at 10x DEFAULT n_docs is minutes of host loop — share one build
+    between the index pack and the query generation."""
+    return make_corpus(spec)
+
+
+@lru_cache(maxsize=4)
+def built_index_large(m: int, n_seg: int, spec: CorpusSpec,
+                      seed: int = 0, overcap: float = 2.0) -> ClusterIndex:
+    """Index builder for the superblock-scale benchmarks (m >= 2048).
+
+    ``balanced_assign`` runs one capacity-scan round per cluster — fine
+    at m <= 64, prohibitive at m = 2048 on this container — so the large
+    geometry assigns by *topic-sorted chunking*: docs sorted by latent
+    topic, sliced into m near-equal chunks. Clusters keep topical
+    coherence (what cluster skipping needs) at O(n log n) build cost,
+    and every chunk fits d_pad by construction."""
+    docs, doc_topic = corpus_large(spec)
+    d_pad = max(8, int(overcap * spec.n_docs / m))
+    order = np.argsort(np.asarray(doc_topic), kind="stable")
+    bounds = np.linspace(0, spec.n_docs, m + 1).astype(int)
+    assign = np.empty(spec.n_docs, np.int64)
+    for c in range(m):
+        assign[order[bounds[c]:bounds[c + 1]]] = c
+    return build_index(docs, assign, m=m, n_seg=n_seg, d_pad=d_pad,
                        seed=seed)
 
 

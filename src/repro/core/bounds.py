@@ -113,3 +113,27 @@ def cluster_bounds(index: ClusterIndex, queries: QueryBatch,
     avg_s = b.mean(axis=-1)
     return {"segment": b, "max_s": max_s, "avg_s": avg_s,
             "bound_sum": bound_sum}
+
+
+def superblock_bounds(index: ClusterIndex, qmaps: jax.Array,
+                      use_kernel: bool = False) -> dict[str, jax.Array]:
+    """Level-0 bound statistics from the coarse superblock table, each
+    ``(n_q, S)`` (plus ``"segment"`` at ``(n_q, S, n_seg)``).
+
+    Same fused contraction as :func:`cluster_bounds` ``impl="gemm"``,
+    over ``super_max_stacked.reshape(S * (n_seg + 1), V)`` — an
+    ``O(S * V)`` GEMM instead of ``O(m * V)``. Because the coarse table
+    elementwise-dominates every member's fine table and query-map
+    weights are non-negative, each statistic here dominates the same
+    statistic of every member cluster: a superblock pruned by the
+    (mu, eta) test at level 0 could not have had any member admitted by
+    the identical test at level 1 (docs/perf.md §superblock)."""
+    S, n_seg_p1, V = index.super_max_stacked.shape
+    n_seg = n_seg_p1 - 1
+    qmap = qmaps[:, :V]
+    fused_table = index.super_max_stacked.reshape(S * n_seg_p1, V)
+    fused = _gemm_bounds(fused_table, qmap, index.scale, use_kernel)
+    fused = fused.reshape(qmap.shape[0], S, n_seg_p1)
+    b = fused[..., :n_seg]
+    return {"segment": b, "max_s": b.max(axis=-1), "avg_s": b.mean(axis=-1),
+            "bound_sum": fused[..., n_seg]}

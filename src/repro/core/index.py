@@ -49,6 +49,92 @@ def capacity_rebalance(assign: np.ndarray, m: int, d_pad: int,
     return assign.astype(np.int32)
 
 
+def group_superblocks(seg_max_collapsed: np.ndarray,
+                      n_super: int | None = None) -> np.ndarray:
+    """Group the m clusters into S superblocks: (m,) int32 ``super_of``.
+
+    Deterministic, rng-free centroid k-means over the clusters' collapsed
+    bound rows (``seg_max_collapsed``): farthest-point seeding from
+    cluster 0, a few Lloyd refinements, then a capacity-bounded greedy
+    assignment (cap = ceil(m / S)) in assignment-confidence order so no
+    superblock overflows its padded member slab. Being rng-free is
+    load-bearing: WAL-replayed compactions and v1–v5 legacy loads
+    re-derive the *identical* grouping from the same bound table
+    (lifecycle/persist.py), with no generator state to persist.
+
+    ``n_super`` defaults to ceil(sqrt(m)) — the S that balances the
+    level-0 bound pass (O(S)) against the expected fine survivors
+    (docs/perf.md §superblock has the arithmetic).
+    """
+    x = np.asarray(seg_max_collapsed, np.float32)
+    m = x.shape[0]
+    S = (max(1, int(np.ceil(np.sqrt(m)))) if n_super is None
+         else int(n_super))
+    S = max(1, min(S, m))
+    if S == 1:
+        return np.zeros((m,), np.int32)
+    cap = -(-m // S)
+
+    def d2(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+        return ((a * a).sum(1)[:, None] + (b * b).sum(1)[None, :]
+                - 2.0 * (a @ b.T))
+
+    # farthest-point seeding from cluster 0
+    seeds = [0]
+    dmin = d2(x, x[:1])[:, 0]
+    for _ in range(1, S):
+        nxt = int(np.argmax(dmin))
+        seeds.append(nxt)
+        dmin = np.minimum(dmin, d2(x, x[nxt:nxt + 1])[:, 0])
+    cent = x[np.asarray(seeds)].copy()
+    for _ in range(4):
+        a = np.argmin(d2(x, cent), axis=1)
+        for s in range(S):
+            mem = x[a == s]
+            if len(mem):
+                cent[s] = mem.mean(axis=0)
+
+    # capacity-bounded greedy in confidence order (stable argsorts keep
+    # every tie-break deterministic)
+    dist = d2(x, cent)
+    pref = np.argsort(dist, axis=1, kind="stable")
+    conf = np.argsort(dist.min(axis=1), kind="stable")
+    super_of = np.full((m,), -1, np.int32)
+    counts = np.zeros((S,), np.int64)
+    for c in conf:
+        for s in pref[c]:
+            if counts[s] < cap:
+                super_of[c] = s
+                counts[s] += 1
+                break
+    return super_of
+
+
+def superblock_tables(super_of: np.ndarray, seg_max_stacked: np.ndarray,
+                      n_super: int | None = None
+                      ) -> tuple[np.ndarray, np.ndarray]:
+    """Derive the level-0 tables from a grouping + the fine bound table:
+    (``super_members`` (S, cap) int32 ascending / -1 padded,
+    ``super_max_stacked`` (S, n_seg + 1, V) uint8 = elementwise max over
+    member rows). Exact by construction — the dominance invariant
+    ``super_max_stacked[super_of[c]] >= seg_max_stacked[c]`` holds with
+    equality somewhere in every coordinate's argmax member."""
+    super_of = np.asarray(super_of, np.int32)
+    st = np.asarray(seg_max_stacked)
+    S = (int(super_of.max()) + 1 if n_super is None else int(n_super))
+    S = max(1, S)
+    counts = np.bincount(super_of, minlength=S)
+    cap = max(1, int(counts.max()))
+    super_members = np.full((S, cap), -1, np.int32)
+    super_max = np.zeros((S,) + st.shape[1:], st.dtype)
+    for s in range(S):
+        mem = np.nonzero(super_of == s)[0]
+        if len(mem):
+            super_members[s, :len(mem)] = mem
+            super_max[s] = st[mem].max(axis=0)
+    return super_members, super_max
+
+
 def pack_clusters(
     safe_tids: np.ndarray,
     tw_u8: np.ndarray,
@@ -152,11 +238,18 @@ def pack_clusters(
     # compaction) indexes segment tables with this directly, instead of
     # re-modding doc_seg once per wave
     doc_seg_mod = (doc_seg % n_seg).astype(np.int32)
+    # level-0 superblock grouping + coarse bound table (rng-free, so
+    # compaction replay and legacy loads regroup identically)
+    super_of = group_superblocks(seg_max_stacked[:, n_seg])
+    super_members, super_max_stacked = superblock_tables(
+        super_of, seg_max_stacked)
     return dict(doc_tids=doc_tids, doc_tw=doc_tw, doc_mask=doc_mask,
                 doc_ids=out_ids, doc_seg=doc_seg, doc_seg_mod=doc_seg_mod,
                 seg_max_stacked=seg_max_stacked, seg_offsets=seg_offsets,
                 sorted_upto=sorted_upto,
-                cluster_ndocs=cluster_ndocs)
+                cluster_ndocs=cluster_ndocs, super_of=super_of,
+                super_members=super_members,
+                super_max_stacked=super_max_stacked)
 
 
 def build_index(
@@ -221,6 +314,9 @@ def build_index(
         sorted_upto=jnp.asarray(packed["sorted_upto"]),
         scale=jnp.float32(scale),
         cluster_ndocs=jnp.asarray(packed["cluster_ndocs"]),
+        super_of=jnp.asarray(packed["super_of"]),
+        super_members=jnp.asarray(packed["super_members"]),
+        super_max_stacked=jnp.asarray(packed["super_max_stacked"]),
         vocab=V,
         n_seg=n_seg,
     )

@@ -79,7 +79,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.bounds import cluster_bounds
+from repro.core.bounds import (_gemm_bounds, cluster_bounds,
+                               superblock_bounds)
 from repro.core.plan import (WavePlan, _union_doc_admission, doc_admission,
                              plan_wave, resolve_block_d)
 from repro.core.types import ClusterIndex, QueryBatch, TopK
@@ -155,6 +156,19 @@ class SearchConfig:
                                        # into one executor launch (1 | 2 |
                                        # 4; "auto" = 4). 1 still pipelines
                                        # (plans run one launch ahead).
+    superblocks: bool = False          # two-level walk on the batched
+                                       # engine: a level-0 (mu, eta)
+                                       # admission pass over the coarse
+                                       # superblock bound table emits only
+                                       # surviving superblocks' member
+                                       # clusters into the fine bounds
+                                       # GEMM — O(S + survivors) bound
+                                       # cost instead of O(m)
+                                       # (docs/perf.md §superblock).
+                                       # engine="auto" batches below
+                                       # AUTO_ENGINE_MIN_BATCH still route
+                                       # to the (single-level, rank-safe)
+                                       # per_query oracle.
 
     def __post_init__(self):
         if not (0.0 < self.mu <= self.eta <= 1.0):
@@ -181,6 +195,10 @@ class SearchConfig:
                                  f"got {v!r}")
         if self.doc_union not in ("qblock", "batch"):
             raise ValueError(f"unknown doc_union {self.doc_union!r}")
+        if self.superblocks and self.engine == "pipelined":
+            raise ValueError("superblocks=True requires the batched "
+                             "engine — the pipelined dispatch loop plans "
+                             "against the full cluster order")
 
 
 # executor resident-set target for block autotuning: roughly a quarter
@@ -313,6 +331,9 @@ def brute_force_topk(index: ClusterIndex, queries: QueryBatch,
         n_scored_segments=jnp.full((nq,), index.m * index.n_seg, jnp.int32),
         n_scored_tiles=m_full, n_walked_tiles=m_full,
         n_walked_docs=jnp.full((nq,), index.m * index.d_pad, jnp.int32),
+        n_bounded_clusters=m_full,
+        n_walked_superblocks=jnp.full((nq,), index.n_super, jnp.int32),
+        n_pruned_superblocks=jnp.zeros((nq,), jnp.int32),
     )
 
 
@@ -731,6 +752,225 @@ def _search_batch(index: ClusterIndex, qmaps: jax.Array, seg_b: jax.Array,
     return out + (rec,) if record_plans else out
 
 
+def _search_batch_super(index: ClusterIndex, qmaps: jax.Array,
+                        cfg: SearchConfig,
+                        budget: jax.Array | None = None) -> tuple:
+    """Two-level batch-frontier visitation (docs/perf.md §superblock).
+
+    Level 0 prices the whole batch against the S coarse superblock bound
+    rows up front — an O(S * V) GEMM instead of the O(m * V) fine bound
+    pass — and the walk proceeds one *superblock* per wave in a shared
+    fair-interleave order over superblocks. Per wave, the (mu, eta) test
+    on the coarse bounds decides per query whether the superblock
+    survives; only when *some* query admits it are the member clusters'
+    fine bound rows gathered and priced (``lax.cond`` — a pruned
+    superblock's members never touch the fine GEMM), after which the
+    wave runs the exact single-level planner/executor over the members.
+    Because the coarse table elementwise-dominates every member's rows
+    and query maps are non-negative, a level-0 prune implies every
+    member would fail the identical level-1 test — the survivor set is a
+    superset of the single-level admission set, so Propositions 1-4
+    apply unchanged (exact result sets at mu = eta = 1, Prop-3
+    mu-approximation otherwise; pinned by
+    tests/test_rank_safety_property.py::TestSuperblock*).
+
+    Two documented semantic differences from ``_search_batch``:
+
+      * the budget rank-horizon is positional in the *shared* walk order
+        over live member slots (``live_rank``) rather than each query's
+        own fine-bound rank — the per-query rank over all m clusters is
+        exactly the array this engine avoids computing;
+      * ``n_walked_tiles`` counts member tiles of *walked* superblocks
+        only (level-0-pruned waves never walk), and the level-0 funnel
+        counters are batch-level scalars replicated per query, like the
+        tile counters (TopK docstring).
+    """
+    m, k = index.m, cfg.k
+    dp = index.d_pad
+    S, cap = index.n_super, index.super_cap
+    n_seg = index.n_seg
+    V = index.vocab
+    n_q = qmaps.shape[0]
+    block_q, block_d, _ = resolve_blocks(index, n_q, cfg)
+    n_qb = -(-n_q // block_q)
+
+    budget = _resolve_budget(cfg, m, budget)
+    mu = jnp.float32(cfg.mu)
+    eta = jnp.float32(cfg.eta)
+    exit_div = eta if cfg.method == "asc" else mu
+
+    # ---- level 0: coarse bounds + shared superblock order ----
+    sup = superblock_bounds(index, qmaps, use_kernel=cfg.use_kernel)
+    _, sup_max, sup_avg, sup_key = _method_stats(sup, cfg)   # (n_q, S)
+    sup_rank = jnp.argsort(jnp.argsort(-sup_key, axis=1), axis=1)
+    prio = sup_rank.min(axis=0).astype(jnp.float32)          # (S,)
+    tie = sup_key.max(axis=0)
+    tie = tie / (jnp.abs(tie).max() + 1.0)
+    shared_s = jnp.argsort(prio - tie)                       # (S,)
+
+    # per-query suffix max of the coarse key along the shared walk: the
+    # coarse key dominates every member's key, so once the suffix drops
+    # to theta/exit_div every unvisited *cluster* is provably pruned —
+    # the early exit is as safe as the single-level one.
+    key_shared = sup_key[:, shared_s]                        # (n_q, S)
+    suffix = jnp.flip(
+        jax.lax.cummax(jnp.flip(key_shared, axis=1), axis=1), axis=1)
+
+    members_ord = index.super_members[shared_s]              # (S, cap)
+    mem_live = members_ord >= 0
+    # budget rank-horizon for the two-level walk: global position of each
+    # live member slot along the shared superblock walk (see docstring)
+    live_rank = (jnp.cumsum(mem_live.reshape(-1).astype(jnp.int32))
+                 - 1).reshape(S, cap)
+    sup_max_o = sup_max[:, shared_s]                         # (n_q, S)
+    sup_avg_o = sup_avg[:, shared_s]
+    sup_key_o = sup_key[:, shared_s]
+
+    kc = min(k, cap * dp)
+    qmap_v = qmaps[:, :V]
+
+    def cond(state):
+        w, done = state[0], state[1]
+        return jnp.logical_and(w < S, jnp.logical_not(jnp.all(done)))
+
+    def body(state):
+        (w, done, top_scores, top_ids, n_docs, n_clusters, n_segments,
+         n_pruned, n_tiles_exec, n_tiles_walk, n_docs_walk,
+         n_bounded, n_sup_walked) = state
+        theta = top_scores[:, k - 1]                         # (n_q,)
+        members = members_ord[w]                             # (cap,)
+        glive = members >= 0
+        cids = jnp.where(glive, members, 0)
+        rank_w = jnp.broadcast_to(live_rank[w][None], (n_q, cap))
+
+        # level-0 admission: the identical (mu, eta) test on the coarse
+        # bounds (no budget at level 0 — the horizon gates members)
+        if cfg.method == "asc":
+            sup_pruned = ((sup_max_o[:, w] <= theta / mu)
+                          & (sup_avg_o[:, w] <= theta / eta))
+        else:
+            sup_pruned = sup_key_o[:, w] <= theta / mu
+        s_admit = ~done & ~sup_pruned                        # (n_q,)
+        walked = jnp.any(s_admit)
+
+        def heavy(args):
+            (done, top_scores, top_ids, n_docs, n_clusters, n_segments,
+             n_pruned, n_tiles_exec, n_docs_walk) = args
+            # the survivors' share of the fine bound pass: one fused
+            # GEMM over this superblock's member rows only
+            sub = index.seg_max_stacked[cids]        # (cap, n_seg+1, V)
+            fused = _gemm_bounds(sub.reshape(cap * (n_seg + 1), V),
+                                 qmap_v, index.scale, cfg.use_kernel)
+            fused = fused.reshape(n_q, cap, n_seg + 1)
+            if cfg.method == "asc":
+                seg_b_w = fused[..., :n_seg]
+                max_s_w = seg_b_w.max(axis=-1)
+                avg_s_w = seg_b_w.mean(axis=-1)
+                key_w = max_s_w
+            else:
+                bs = fused[..., n_seg]
+                seg_b_w, max_s_w, avg_s_w, key_w = (bs[..., None], bs,
+                                                    bs, bs)
+            # level-0-pruned queries: force their member bounds to NEG
+            # so the shared _admission registers every member as pruned
+            # (valid — theta cleared the dominating coarse bound, which
+            # is >= 0 >= NEG — and the budget horizon bookkeeping stays
+            # identical to a wave that priced the members)
+            mq = s_admit[:, None]
+            max_s_w = jnp.where(mq, max_s_w, NEG)
+            avg_s_w = jnp.where(mq, avg_s_w, NEG)
+            key_w = jnp.where(mq, key_w, NEG)
+            seg_b_w = jnp.where(mq[:, :, None], seg_b_w, NEG)
+
+            plan, newly_pruned = _plan_admission(
+                cfg, cids=cids, glive=glive, done=done, theta=theta,
+                max_s_w=max_s_w, avg_s_w=avg_s_w, key_w=key_w,
+                seg_b_w=seg_b_w, rank_w=rank_w, n_clusters=n_clusters,
+                n_pruned=n_pruned, budget=budget,
+                dseg_mod_w=index.doc_seg_mod[cids],
+                dmask_w=index.doc_mask[cids], block_q=block_q,
+                block_d=block_d, soff_w=index.seg_offsets[cids],
+                su_w=index.sorted_upto[cids])
+            n_pruned += newly_pruned
+            scores = _execute_wave(index, plan, qmaps, cfg)
+            doc_admit = scores > NEG                  # (n_q, cap, dp)
+
+            cand = jnp.where(scores > theta[:, None, None], scores,
+                             NEG).reshape(n_q, cap * dp)
+            g_top, g_pos = jax.lax.top_k(cand, kc)
+            ids_flat = index.doc_ids[plan.cids].reshape(-1)
+            g_ids = jnp.where(g_top > NEG, ids_flat[g_pos], -1)
+            if kc < k:
+                g_top = jnp.pad(g_top, ((0, 0), (0, k - kc)),
+                                constant_values=NEG)
+                g_ids = jnp.pad(g_ids, ((0, 0), (0, k - kc)),
+                                constant_values=-1)
+            merged_s = jnp.concatenate([top_scores, g_top], axis=1)
+            merged_i = jnp.concatenate([top_ids, g_ids], axis=1)
+            top_scores, sel = jax.lax.top_k(merged_s, k)
+            top_ids = jnp.take_along_axis(merged_i, sel, axis=1)
+
+            n_docs += doc_admit.sum(axis=(1, 2)).astype(jnp.int32)
+            n_clusters += plan.admit.sum(axis=1).astype(jnp.int32)
+            n_segments += plan.seg_admit.sum(axis=(1, 2)).astype(
+                jnp.int32)
+            n_tiles_exec += plan.n_blocks
+            n_docs_walk += plan.walked_docs()
+            return (done, top_scores, top_ids, n_docs, n_clusters,
+                    n_segments, n_pruned, n_tiles_exec, n_docs_walk,
+                    glive.sum().astype(jnp.int32), jnp.int32(cap * n_qb))
+
+        def skip(args):
+            (done, top_scores, top_ids, n_docs, n_clusters, n_segments,
+             n_pruned, n_tiles_exec, n_docs_walk) = args
+            # every live member is pruned for every not-done query
+            # (dominance) — pruned clusters inside the budget horizon
+            # stay budget-free, exactly as _admission would count them
+            live_q = glive[None, :] & ~done[:, None]
+            gate = rank_w < (budget + n_pruned)[:, None]
+            n_pruned += (live_q & gate).sum(axis=1).astype(jnp.int32)
+            return (done, top_scores, top_ids, n_docs, n_clusters,
+                    n_segments, n_pruned, n_tiles_exec, n_docs_walk,
+                    jnp.int32(0), jnp.int32(0))
+
+        args = (done, top_scores, top_ids, n_docs, n_clusters,
+                n_segments, n_pruned, n_tiles_exec, n_docs_walk)
+        (done, top_scores, top_ids, n_docs, n_clusters, n_segments,
+         n_pruned, n_tiles_exec, n_docs_walk, bounded_w, walk_w) = (
+            jax.lax.cond(walked, heavy, skip, args))
+        n_bounded += bounded_w
+        n_tiles_walk += walk_w
+        n_sup_walked += walked.astype(jnp.int32)
+
+        theta_new = top_scores[:, k - 1]
+        nxt = jnp.minimum(w + 1, S - 1)
+        remaining = jax.lax.dynamic_slice_in_dim(
+            suffix, nxt, 1, axis=1)[:, 0]                    # (n_q,)
+        done = (done
+                | (remaining <= theta_new / exit_div)
+                | (n_clusters >= budget))
+        return (w + 1, done, top_scores, top_ids, n_docs, n_clusters,
+                n_segments, n_pruned, n_tiles_exec, n_tiles_walk,
+                n_docs_walk, n_bounded, n_sup_walked)
+
+    init = (jnp.int32(0), jnp.zeros((n_q,), bool),
+            jnp.full((n_q, k), NEG), jnp.full((n_q, k), -1, jnp.int32),
+            jnp.zeros((n_q,), jnp.int32), jnp.zeros((n_q,), jnp.int32),
+            jnp.zeros((n_q,), jnp.int32), jnp.zeros((n_q,), jnp.int32),
+            jnp.int32(0), jnp.int32(0), jnp.int32(0), jnp.int32(0),
+            jnp.int32(0))
+    (_, _, top_scores, top_ids, n_docs, n_clusters, n_segments, _,
+     n_tiles_exec, n_tiles_walk, n_docs_walk, n_bounded,
+     n_sup_walked) = jax.lax.while_loop(cond, body, init)
+    top_ids = jnp.where(top_scores > NEG, top_ids, -1)
+    full = lambda v: jnp.full((n_q,), v, jnp.int32)
+    # early-exited tail superblocks were never walked: count as pruned
+    return (top_ids, top_scores, n_docs, n_clusters, n_segments,
+            full(n_tiles_exec), full(n_tiles_walk), full(n_docs_walk),
+            full(n_bounded), full(n_sup_walked),
+            full(jnp.int32(S) - n_sup_walked))
+
+
 def _method_stats(stats: dict, cfg: SearchConfig) -> tuple:
     """(seg_b, max_s, avg_s, order_key) for the configured method."""
     if cfg.method == "asc":
@@ -754,9 +994,6 @@ def _retrieve_arrays(index: ClusterIndex, queries: QueryBatch,
     materialized exactly once and threaded through bound estimation
     *and* scoring."""
     qmaps = queries.dense_map()                               # (n_q, V+1)
-    stats = cluster_bounds(index, queries, impl=cfg.bounds_impl,
-                           use_kernel=cfg.use_kernel, qmaps=qmaps)
-    seg_b, max_s, avg_s, order_key = _method_stats(stats, cfg)
     # tiny batches can't amortize the batched planner (measured
     # regression at batch 1 — see AUTO_ENGINE_MIN_BATCH); batch size
     # is a trace-time shape, so the routing costs nothing at runtime
@@ -764,24 +1001,48 @@ def _retrieve_arrays(index: ClusterIndex, queries: QueryBatch,
     if engine == "pipelined":
         raise ValueError("engine='pipelined' is host-driven — call "
                          "retrieve_pipelined(), not retrieve()")
+    if cfg.superblocks and engine == "batched":
+        if record_plans:
+            raise ValueError("plan recording is not supported with "
+                             "superblocks=True — the two-level walk "
+                             "prices members inside a lax.cond")
+        # the two-level engine never runs the full O(m) bound pass:
+        # it prices superblocks up front and members on admission
+        return _search_batch_super(index, qmaps, cfg, budget=budget)
+    stats = cluster_bounds(index, queries, impl=cfg.bounds_impl,
+                           use_kernel=cfg.use_kernel, qmaps=qmaps)
+    seg_b, max_s, avg_s, order_key = _method_stats(stats, cfg)
+    # single-level engines report the degenerate level-0 funnel: every
+    # cluster bounded, every superblock walked, none pruned
+    nq = queries.n_queries
+    degenerate = (jnp.full((nq,), index.m, jnp.int32),
+                  jnp.full((nq,), index.n_super, jnp.int32),
+                  jnp.zeros((nq,), jnp.int32))
     if engine == "per_query":
         if record_plans:
             raise ValueError("plan recording requires engine='batched'")
         fn = jax.vmap(
             lambda qmap, b, mx, av, key: _search_one_query(
                 index, qmap, b, mx, av, key, cfg, budget=budget))
-        return fn(qmaps, seg_b, max_s, avg_s, order_key)
-    return _search_batch(index, qmaps, seg_b, max_s, avg_s, order_key,
-                         cfg, budget=budget, record_plans=record_plans)
+        return fn(qmaps, seg_b, max_s, avg_s, order_key) + degenerate
+    out = _search_batch(index, qmaps, seg_b, max_s, avg_s, order_key,
+                        cfg, budget=budget, record_plans=record_plans)
+    if record_plans:
+        return tuple(out[:-1]) + degenerate + (out[-1],)
+    return out + degenerate
 
 
 def _topk_of(arrays: tuple) -> TopK:
     (ids, scores, n_docs, n_clusters, n_segments,
-     n_tiles, n_walked, n_walked_docs) = arrays
+     n_tiles, n_walked, n_walked_docs,
+     n_bounded, n_walked_super, n_pruned_super) = arrays
     return TopK(doc_ids=ids, scores=scores, n_scored_docs=n_docs,
                 n_scored_clusters=n_clusters, n_scored_segments=n_segments,
                 n_scored_tiles=n_tiles, n_walked_tiles=n_walked,
-                n_walked_docs=n_walked_docs)
+                n_walked_docs=n_walked_docs,
+                n_bounded_clusters=n_bounded,
+                n_walked_superblocks=n_walked_super,
+                n_pruned_superblocks=n_pruned_super)
 
 
 @partial(jax.jit, static_argnames=("cfg",))
@@ -1110,6 +1371,10 @@ def retrieve_pipelined(index: ClusterIndex, queries: QueryBatch,
     :func:`repro.core.plan.wave_summaries`)."""
     import time as _time
 
+    if cfg.superblocks:
+        raise ValueError("superblocks=True requires the batched "
+                         "engine — the pipelined dispatch loop plans "
+                         "against the full cluster order")
     n_q = queries.n_queries
     m, G, k = index.m, cfg.group_size, cfg.k
     n_groups = -(-m // G)
@@ -1241,7 +1506,10 @@ def retrieve_pipelined(index: ClusterIndex, queries: QueryBatch,
                 n_scored_clusters=n_clusters, n_scored_segments=n_segments,
                 n_scored_tiles=full(n_tiles_exec),
                 n_walked_tiles=full(n_tiles_walk),
-                n_walked_docs=full(n_docs_walk))
+                n_walked_docs=full(n_docs_walk),
+                n_bounded_clusters=full(m),
+                n_walked_superblocks=full(index.n_super),
+                n_pruned_superblocks=full(0))
     if not with_info:
         return topk
     info = {

@@ -127,6 +127,9 @@ class QueryBatch:
         "sorted_upto",
         "scale",
         "cluster_ndocs",
+        "super_of",
+        "super_members",
+        "super_max_stacked",
     ),
     meta_fields=("vocab", "n_seg"),
 )
@@ -178,6 +181,25 @@ class ClusterIndex:
               executor's residual mask keeps per-doc output exact.
     scale:    () float32                w_fp = w_u8 * scale.
     cluster_ndocs: (m,) int32           live docs per cluster.
+    super_of: (m,) int32 — superblock id of each cluster in [0, S). The
+              level-0 grouping is computed once at pack time
+              (core/index.py ``group_superblocks``: deterministic kmeans
+              over the clusters' collapsed bound rows, S ~ sqrt(m)) and
+              is *stable under churn*: inserts max-fold into the owning
+              superblock's table, deletes touch nothing, compaction
+              regroups from the re-packed bounds.
+    super_members: (S, super_cap) int32 — member cluster ids per
+              superblock, ascending, -1 padded. The inverse of
+              ``super_of``; the two-level walk gathers a pruned-in
+              superblock's member tiles from here.
+    super_max_stacked: (S, n_seg + 1, V) uint8 — the *coarse* stacked
+              bound table: elementwise max over the member clusters'
+              ``seg_max_stacked`` rows. Invariant (the whole rank-safety
+              argument of the two-level walk, docs/perf.md §superblock):
+              ``super_max_stacked[super_of[c]] >= seg_max_stacked[c]``
+              elementwise, at all times — pack computes it exactly,
+              inserts max-fold both tables, deletes tombstone only
+              (both stay valid upper bounds), compaction rebuilds both.
 
     ``seg_max`` / ``seg_max_collapsed`` remain available as zero-copy
     views into the stacked table.
@@ -194,6 +216,9 @@ class ClusterIndex:
     sorted_upto: jax.Array
     scale: jax.Array
     cluster_ndocs: jax.Array
+    super_of: jax.Array
+    super_members: jax.Array
+    super_max_stacked: jax.Array
     vocab: int
     n_seg: int
 
@@ -220,6 +245,16 @@ class ClusterIndex:
         return self.doc_tids.shape[2]
 
     @property
+    def n_super(self) -> int:
+        """S — number of superblocks of the level-0 grouping."""
+        return self.super_max_stacked.shape[0]
+
+    @property
+    def super_cap(self) -> int:
+        """Padded member slots per superblock."""
+        return self.super_members.shape[1]
+
+    @property
     def n_docs(self) -> jax.Array:
         return self.cluster_ndocs.sum()
 
@@ -240,7 +275,8 @@ class ClusterIndex:
             for x in (self.doc_tids, self.doc_tw, self.doc_mask,
                       self.doc_ids, self.doc_seg, self.doc_seg_mod,
                       self.seg_max_stacked, self.seg_offsets,
-                      self.sorted_upto)
+                      self.sorted_upto, self.super_of,
+                      self.super_members, self.super_max_stacked)
         )
 
 
@@ -248,7 +284,8 @@ class ClusterIndex:
     _register,
     data_fields=("doc_ids", "scores", "n_scored_docs", "n_scored_clusters",
                  "n_scored_segments", "n_scored_tiles", "n_walked_tiles",
-                 "n_walked_docs"),
+                 "n_walked_docs", "n_bounded_clusters",
+                 "n_walked_superblocks", "n_pruned_superblocks"),
     meta_fields=(),
 )
 @dataclasses.dataclass(frozen=True)
@@ -277,6 +314,18 @@ class TopK:
     tests/test_rank_safety_property.py): ``n_walked_docs <=
     n_scored_tiles * d_pad`` with equality iff no doc run is skipped,
     and every admitted doc (``n_scored_docs``) lies inside a walked run.
+    n_bounded_clusters / n_walked_superblocks / n_pruned_superblocks:
+    (n_q,) int32 — the level-0 funnel of the two-level walk
+    (``SearchConfig.superblocks``, docs/perf.md §superblock). For the
+    two-level batched engine these are batch-level counts replicated per
+    query (like the tile counters): superblocks any live query admitted
+    at level 0 (walked), superblocks every query pruned — including the
+    early-exited tail (pruned, walked + pruned == S), and the member
+    clusters of walked superblocks that entered the fine bounds GEMM
+    (bounded — the O(S + survivors) term; ``n_bounded_clusters <=
+    members of walked superblocks <= m``). Single-level engines report
+    the degenerate funnel: bounded == m (one dense GEMM prices every
+    cluster), walked == S, pruned == 0.
     """
 
     doc_ids: jax.Array
@@ -287,6 +336,9 @@ class TopK:
     n_scored_tiles: jax.Array
     n_walked_tiles: jax.Array
     n_walked_docs: jax.Array
+    n_bounded_clusters: jax.Array
+    n_walked_superblocks: jax.Array
+    n_pruned_superblocks: jax.Array
 
 
 def tree_bytes(tree: Any) -> int:

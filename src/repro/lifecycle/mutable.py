@@ -107,6 +107,16 @@ class MutableIndex:
         self.seg_max_stacked = np.asarray(index.seg_max_stacked).copy()
         self.seg_max = self.seg_max_stacked[:, : index.n_seg]
         self.seg_max_collapsed = self.seg_max_stacked[:, index.n_seg]
+        # level-0 superblock layer: grouping is stable under insert /
+        # delete (docs stay in their cluster, clusters stay in their
+        # superblock); the coarse table mirrors seg_max's maintenance —
+        # insert max-folds keep dominance exact, deletes leave it stale
+        # but still dominating, compaction rebuilds it tight
+        self.super_of = np.asarray(index.super_of).copy()
+        self.super_members = np.asarray(index.super_members).copy()
+        self.super_max_stacked = np.asarray(index.super_max_stacked).copy()
+        self.super_max = self.super_max_stacked[:, : index.n_seg]
+        self.super_max_collapsed = self.super_max_stacked[:, index.n_seg]
         # segment-major layout metadata: the prefix table describes the
         # sorted prefix [0, sorted_upto) of each cluster; inserts append
         # into the unsorted tail and may shrink sorted_upto (below)
@@ -245,6 +255,12 @@ class MutableIndex:
         self.doc_seg_mod[c, slot] = j % self.n_seg
         np.maximum.at(self.seg_max[c, j], tids, q)   # monotone => exact
         np.maximum.at(self.seg_max_collapsed[c], tids, q)
+        # mirror the fold into the cluster's superblock row so the coarse
+        # table keeps elementwise-dominating every member (rank safety of
+        # the level-0 prune rests on exactly this invariant)
+        sb = int(self.super_of[c])
+        np.maximum.at(self.super_max[sb, j], tids, q)
+        np.maximum.at(self.super_max_collapsed[sb], tids, q)
         self.cluster_ndocs[c] += 1
         self._loc[int(doc_id)] = (c, slot)
         self.n_inserts += 1
@@ -388,6 +404,11 @@ class MutableIndex:
         self.seg_max_stacked = packed["seg_max_stacked"]
         self.seg_max = self.seg_max_stacked[:, : self.n_seg]
         self.seg_max_collapsed = self.seg_max_stacked[:, self.n_seg]
+        self.super_of = packed["super_of"]
+        self.super_members = packed["super_members"]
+        self.super_max_stacked = packed["super_max_stacked"]
+        self.super_max = self.super_max_stacked[:, : self.n_seg]
+        self.super_max_collapsed = self.super_max_stacked[:, self.n_seg]
         self.seg_offsets = packed["seg_offsets"]
         self.sorted_upto = packed["sorted_upto"]
         self.cluster_ndocs = packed["cluster_ndocs"]
@@ -426,6 +447,8 @@ class MutableIndex:
             seg_offsets=self.seg_offsets, sorted_upto=self.sorted_upto,
             scale=np.float32(self.scale),
             cluster_ndocs=self.cluster_ndocs,
+            super_of=self.super_of, super_members=self.super_members,
+            super_max_stacked=self.super_max_stacked,
             vocab=self.vocab, n_seg=self.n_seg)
 
     def writer_state(self) -> dict:
@@ -615,6 +638,9 @@ class MutableIndex:
             sorted_upto=jnp.asarray(self.sorted_upto),
             scale=jnp.float32(self.scale),
             cluster_ndocs=jnp.asarray(self.cluster_ndocs),
+            super_of=jnp.asarray(self.super_of),
+            super_members=jnp.asarray(self.super_members),
+            super_max_stacked=jnp.asarray(self.super_max_stacked),
             vocab=self.vocab,
             n_seg=self.n_seg,
         )

@@ -60,8 +60,18 @@ from repro.lifecycle.faults import fault_point
 #   5 — integrity: manifest lists every shard with its sha256 + byte
 #       length ("shards": [{file, sha256, bytes}]); loads verify before
 #       deserializing. v1-v4 shards predate checksums and load unverified.
-FORMAT_VERSION = 5
-_READABLE_VERSIONS = (1, 2, 3, 4, 5)
+#   6 — superblock grouping super_of (m,): the level-0 pruning layer's
+#       cluster -> superblock assignment (stable under churn, so it must
+#       be stored, not recomputed from drifted bounds). The coarse
+#       tables themselves (super_members, super_max_stacked) are *never*
+#       stored — they are always derived at load from (super_of,
+#       seg_max_stacked), which both keeps shards smaller and makes the
+#       dominance invariant true by construction after any load. v1-v5
+#       shards derive super_of by re-running the deterministic
+#       (rng-free) grouping over the collapsed bound rows — bit-exact
+#       vs. a fresh v6 pack of the same index.
+FORMAT_VERSION = 6
+_READABLE_VERSIONS = (1, 2, 3, 4, 5, 6)
 
 
 class CheckpointCorruptError(RuntimeError):
@@ -80,7 +90,7 @@ class CheckpointCorruptError(RuntimeError):
 # cluster-axis-sharded array fields, in manifest order
 _FIELDS = ("doc_tids", "doc_tw", "doc_mask", "doc_ids", "doc_seg",
            "doc_seg_mod", "seg_max_stacked", "seg_offsets", "sorted_upto",
-           "cluster_ndocs")
+           "cluster_ndocs", "super_of")
 
 
 def _derive_stacked(arrays: dict, manifest: dict) -> "np.ndarray":
@@ -96,6 +106,14 @@ def _derive_stacked(arrays: dict, manifest: dict) -> "np.ndarray":
 def _derive_seg_mod(arrays: dict, manifest: dict) -> "np.ndarray":
     """v1/v2 shards predate the hoisted modded segment map."""
     return (arrays["doc_seg"] % manifest["n_seg"]).astype(np.int32)
+
+
+def _derive_super_of(arrays: dict, manifest: dict) -> "np.ndarray":
+    """v1-v5 shards predate the superblock grouping: re-run the
+    deterministic grouping over the collapsed bound rows (runs after the
+    seg_max_stacked derivation — _DERIVABLE is ordered)."""
+    from repro.core.index import group_superblocks
+    return group_superblocks(arrays["seg_max_stacked"][:, manifest["n_seg"]])
 
 
 def _derive_segment_major(arrays: dict, manifest: dict) -> None:
@@ -131,6 +149,7 @@ def _derive_segment_major(arrays: dict, manifest: dict) -> None:
 _DERIVABLE = {
     "seg_max_stacked": _derive_stacked,
     "doc_seg_mod": _derive_seg_mod,
+    "super_of": _derive_super_of,
 }
 # fields derived jointly by the segment-major migration (they permute
 # several arrays at once, so they run after the per-field derivations)
@@ -349,6 +368,13 @@ def load_index(directory: str,
     if shards is None and arrays["doc_tids"].shape[0] != manifest["m"]:
         raise ValueError("shard rows do not reassemble the manifest's m")
 
+    # the coarse tables are derived on every load (never stored): the
+    # member lists and max-folds come straight from (super_of,
+    # seg_max_stacked), so dominance holds by construction
+    from repro.core.index import superblock_tables
+    super_members, super_max = superblock_tables(
+        arrays["super_of"], arrays["seg_max_stacked"])
+
     index = ClusterIndex(
         doc_tids=jnp.asarray(arrays["doc_tids"]),
         doc_tw=jnp.asarray(arrays["doc_tw"]),
@@ -361,6 +387,9 @@ def load_index(directory: str,
         sorted_upto=jnp.asarray(arrays["sorted_upto"]),
         scale=jnp.float32(manifest["scale"]),
         cluster_ndocs=jnp.asarray(arrays["cluster_ndocs"]),
+        super_of=jnp.asarray(arrays["super_of"]),
+        super_members=jnp.asarray(super_members),
+        super_max_stacked=jnp.asarray(super_max),
         vocab=manifest["vocab"],
         n_seg=manifest["n_seg"],
     )

@@ -45,6 +45,20 @@ AUX_COUNTERS = (
      "clusters admitted by the (mu, eta) test, summed over queries"),
     ("segments_scored", "funnel_segments_scored_total",
      "segments admitted by the bound test, summed over queries"),
+    # level-0 (superblock) counters — ISSUE 9. These sit *above* the
+    # funnel's widest stage but are not in FUNNEL_STAGES: the stage
+    # tuple stays a monotone within-walk funnel, while superblock
+    # pruning gates which clusters get *bounded* at all
+    # (docs/observability.md §superblock-funnel).
+    ("superblocks_walked", "funnel_superblocks_walked_total",
+     "superblocks whose coarse bound cleared the level-0 (mu, eta) "
+     "test for some query (single-level engines report all S)"),
+    ("superblocks_pruned", "funnel_superblocks_pruned_total",
+     "superblocks the level-0 test pruned for every query (plus the "
+     "early-exited tail; 0 on single-level engines)"),
+    ("clusters_bounded", "funnel_clusters_bounded_total",
+     "clusters whose fine bound rows entered the bounds GEMM "
+     "(members of walked superblocks; m on single-level engines)"),
 )
 
 
@@ -77,6 +91,14 @@ def funnel_from_topk(out, *, batched: bool, n_q: int, d_pad: int,
         "docs_scored": int(np.asarray(out.n_scored_docs).sum()),
         "clusters_scored": int(np.asarray(out.n_scored_clusters).sum()),
         "segments_scored": int(np.asarray(out.n_scored_segments).sum()),
+        # level-0 counters are batch-level on the batched engine
+        # (replicated per query within each query shard, exactly like
+        # the tile counters — the same one-slot-per-shard arithmetic
+        # applies), per-query degenerate constants on the reference
+        # engine (each query "walks" all S superblocks -> sum)
+        "superblocks_walked": batch_total(out.n_walked_superblocks),
+        "superblocks_pruned": batch_total(out.n_pruned_superblocks),
+        "clusters_bounded": batch_total(out.n_bounded_clusters),
         "d_pad": int(d_pad),
     }
 

@@ -332,6 +332,11 @@ class RetrievalEngine:
             out = jax.block_until_ready(
                 self._fn(snap.index, queries, budget))
             dt = time.perf_counter() - t0
+            # plan recording (the split seam's replay hook) does not
+            # exist on the two-level walk — sampled superblock requests
+            # skip the split, keeping production latency untouched
+            if self.cfg.superblocks:
+                want_split = False
             if want_split:
                 # out-of-band replay through the split seam for the
                 # share metrics + plan/execute spans; `dt` above stays
@@ -484,7 +489,14 @@ def index_shard_specs(index: ClusterIndex,
         doc_seg_mod=P(c, None),
         seg_max_stacked=P(c, None, None), seg_offsets=P(c, None),
         sorted_upto=P(c), scale=P(),
-        cluster_ndocs=P(c), vocab=index.vocab, n_seg=index.n_seg)
+        cluster_ndocs=P(c),
+        # the superblock layer does not shard over clusters: super_of is
+        # a per-cluster row (shards fine), but the coarse tables span
+        # *global* cluster ids and are replicated — the distributed path
+        # is single-level (superblocks raise below), the specs just keep
+        # the pytree structurally complete
+        super_of=P(c), super_members=P(), super_max_stacked=P(),
+        vocab=index.vocab, n_seg=index.n_seg)
 
 
 def distributed_retrieve(index: ClusterIndex, queries: QueryBatch,
@@ -501,6 +513,11 @@ def distributed_retrieve(index: ClusterIndex, queries: QueryBatch,
     anyway to time the batch."""
     caxes = ("pod", "data") if multi_pod else ("data",)
     qaxis = "model"
+    if cfg.superblocks:
+        raise ValueError(
+            "superblocks=True is not supported on the distributed path: "
+            "the replicated coarse tables index global cluster ids, "
+            "which a cluster shard's local arrays cannot resolve")
     ispecs = index_shard_specs(index, multi_pod)
     qspec = QueryBatch(tids=P(qaxis, None), tw=P(qaxis, None),
                        mask=P(qaxis, None), vocab=queries.vocab)
@@ -510,8 +527,8 @@ def distributed_retrieve(index: ClusterIndex, queries: QueryBatch,
         # engine (batched by default: shard-local waves are planned into
         # compacted work queues and executed exactly like the single-host
         # core — each local tile fetched once per batch, only if admitted)
-        ids, scores, nd, nc, ns, nt, nw, nwd = _retrieve_arrays(
-            index_local, q_local, cfg)
+        (ids, scores, nd, nc, ns, nt, nw, nwd,
+         nbc, nws, nps) = _retrieve_arrays(index_local, q_local, cfg)
         # merge the per-shard top-k across the cluster axes
         for ax in caxes:
             all_scores = jax.lax.all_gather(scores, ax, axis=1, tiled=True)
@@ -524,15 +541,25 @@ def distributed_retrieve(index: ClusterIndex, queries: QueryBatch,
         nt = jax.lax.psum(nt, caxes)
         nw = jax.lax.psum(nw, caxes)
         nwd = jax.lax.psum(nwd, caxes)
+        # clusters-bounded is per-shard work -> psum to the global m;
+        # the superblock walk/prune counters are NOT psum'd: they count
+        # against the *replicated* coarse table, so summing over cluster
+        # shards would overcount it shards-fold (the PR-6 shard-shape
+        # lesson, applied at level 0)
+        nbc = jax.lax.psum(nbc, caxes)
         return TopK(doc_ids=ids, scores=scores, n_scored_docs=nd,
                     n_scored_clusters=nc, n_scored_segments=ns,
                     n_scored_tiles=nt, n_walked_tiles=nw,
-                    n_walked_docs=nwd)
+                    n_walked_docs=nwd, n_bounded_clusters=nbc,
+                    n_walked_superblocks=nws, n_pruned_superblocks=nps)
 
     out_specs = TopK(doc_ids=P(qaxis, None), scores=P(qaxis, None),
                      n_scored_docs=P(qaxis), n_scored_clusters=P(qaxis),
                      n_scored_segments=P(qaxis), n_walked_tiles=P(qaxis),
-                     n_scored_tiles=P(qaxis), n_walked_docs=P(qaxis))
+                     n_scored_tiles=P(qaxis), n_walked_docs=P(qaxis),
+                     n_bounded_clusters=P(qaxis),
+                     n_walked_superblocks=P(qaxis),
+                     n_pruned_superblocks=P(qaxis))
     fn = shard_map(local, mesh=mesh, in_specs=(ispecs, qspec),
                    out_specs=out_specs, check_vma=False)
     out = fn(index, queries)

@@ -50,6 +50,16 @@ ENGINES = {
                                    method="anytime", engine="batched",
                                    cluster_budget=4, block_q=4,
                                    block_d=8),
+    # two-level (superblock) engine (ISSUE 9): the level-0 frontier's
+    # shared walk order and coarse admission are part of the pinned
+    # surface — safe mode must keep matching brute force bit-for-bit
+    "superblock_asc_safe": SearchConfig(k=K, mu=1.0, eta=1.0,
+                                        method="asc", engine="batched",
+                                        superblocks=True, block_q=4,
+                                        block_d=8),
+    "superblock_approx": SearchConfig(k=K, mu=0.8, eta=1.0,
+                                      method="asc", engine="batched",
+                                      superblocks=True, block_q=4),
 }
 
 # configs re-pinned on the churned-index snapshot (deterministic
@@ -58,6 +68,9 @@ ENGINES = {
 CHURNED_ENGINES = {
     "batched_asc_safe": ENGINES["batched_asc_safe"],
     "batched_asc": ENGINES["batched_asc"],
+    # stale-but-dominating coarse bounds after churn (insert max-folds,
+    # delete tombstones): the two-level frontier over them is pinned too
+    "superblock_asc_safe": ENGINES["superblock_asc_safe"],
 }
 
 

@@ -529,6 +529,83 @@ def test_legacy_v1_roundtrips_through_v2(small_world, tmp_path):
                                   np.asarray(b.doc_ids))
 
 
+def _downgrade_to_v5(path: str) -> None:
+    """Rewrite a saved checkpoint into the v5 on-disk layout: drop the
+    stored ``super_of`` grouping from every shard and mark the manifest
+    ``format_version: 5``, recomputing the v5 checksum entries for the
+    rewritten shard files."""
+    import glob
+    import hashlib
+    import json
+    for shard in glob.glob(os.path.join(path, "shard_*.npz")):
+        with np.load(shard) as z:
+            arrays = {f: z[f] for f in z.files}
+        arrays.pop("super_of")              # v5 predates superblocks
+        np.savez(shard, **arrays)
+    mpath = os.path.join(path, "manifest.json")
+    with open(mpath) as f:
+        manifest = json.load(f)
+    manifest["format_version"] = 5
+    for entry in manifest.get("shards", []):
+        p = os.path.join(path, entry["file"])
+        with open(p, "rb") as f:
+            entry["sha256"] = hashlib.sha256(f.read()).hexdigest()
+        entry["bytes"] = os.path.getsize(p)
+    with open(mpath, "w") as f:
+        json.dump(manifest, f)
+
+
+@pytest.mark.parametrize("n_shards", [1, 3])
+def test_legacy_v5_derives_superblocks_bit_exactly(small_world, tmp_path,
+                                                   n_shards):
+    """A v5 checkpoint (no stored grouping) loads with ``super_of``
+    re-derived by the rng-free centroid k-means over the collapsed bound
+    rows — bit-exact against the fresh pack — and the coarse tables
+    rebuilt from it (they are *never* stored, at any version)."""
+    _, _, base = small_world
+    path = save_index(str(tmp_path / "ix"), base, n_shards=n_shards)
+    _downgrade_to_v5(path)
+    assert read_manifest(path)["format_version"] == 5
+    loaded, manifest = load_index(path)
+    assert manifest["format_version"] == 5
+    np.testing.assert_array_equal(np.asarray(loaded.super_of),
+                                  np.asarray(base.super_of))
+    np.testing.assert_array_equal(np.asarray(loaded.super_members),
+                                  np.asarray(base.super_members))
+    np.testing.assert_array_equal(np.asarray(loaded.super_max_stacked),
+                                  np.asarray(base.super_max_stacked))
+
+
+def test_v6_roundtrip_preserves_churned_grouping(small_world, tmp_path):
+    """After churn the stored grouping is *not* recomputable from the
+    drifted bound rows — v6 persists ``super_of`` so a save/load
+    round-trip keeps the exact grouping, rebuilds dominating coarse
+    tables, and the two-level engine answers identically."""
+    from repro.core.search import SearchConfig, retrieve
+    _, q, base = small_world
+    mi = MutableIndex(base, seed=2)
+    _churn(mi, np.random.default_rng(17), n_del=120, n_ins=80)
+    snap = mi.snapshot()
+    path = save_index(str(tmp_path / "ix"), snap, n_shards=2)
+    loaded, manifest = load_index(path)
+    assert manifest["format_version"] == FORMAT_VERSION >= 6
+    np.testing.assert_array_equal(np.asarray(loaded.super_of),
+                                  np.asarray(snap.super_of))
+    np.testing.assert_array_equal(np.asarray(loaded.super_max_stacked),
+                                  np.asarray(snap.super_max_stacked))
+    # dominance survives the round-trip (the rank-safety invariant)
+    sup = np.asarray(loaded.super_max_stacked)
+    sof = np.asarray(loaded.super_of)
+    assert (sup[sof] >= np.asarray(loaded.seg_max_stacked)).all()
+    cfg = SearchConfig(k=10, mu=1.0, eta=1.0, engine="batched",
+                       superblocks=True, block_q=4)
+    a, b = retrieve(snap, q, cfg), retrieve(loaded, q, cfg)
+    np.testing.assert_array_equal(np.asarray(a.doc_ids),
+                                  np.asarray(b.doc_ids))
+    np.testing.assert_array_equal(np.asarray(a.scores),
+                                  np.asarray(b.scores))
+
+
 def test_v1_shard_missing_required_field_raises(small_world, tmp_path):
     """Only the derivable fields may be absent from a shard. (verify=False
     gets past the v5 checksum layer, which would otherwise flag the

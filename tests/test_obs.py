@@ -239,21 +239,34 @@ def test_funnel_from_topk_sums_one_slot_per_query_shard():
         n_walked_docs=np.array([30, 30, 30, 30, 20, 20, 20, 20]),
         n_scored_docs=np.arange(8),
         n_scored_clusters=np.ones(8, np.int64),
-        n_scored_segments=np.ones(8, np.int64))
+        n_scored_segments=np.ones(8, np.int64),
+        # level-0 counters are batch-level too (ISSUE 9): same
+        # one-representative-slot-per-shard arithmetic as the tile
+        # counters, same undercount if slot [0] were used alone
+        n_walked_superblocks=np.array([4, 4, 4, 4, 3, 3, 3, 3]),
+        n_pruned_superblocks=np.array([2, 2, 2, 2, 3, 3, 3, 3]),
+        n_bounded_clusters=np.array([9, 9, 9, 9, 6, 6, 6, 6]))
     f = funnel_from_topk(out, batched=True, n_q=8, d_pad=16,
                          budget_clusters=4, n_query_shards=2)
     assert f["tiles_walked"] == 7 + 5
     assert f["tiles_scored"] == 3 + 2
     assert f["doc_slots_walked"] == 30 + 20
     assert f["docs_scored"] == int(np.arange(8).sum())
+    assert f["superblocks_walked"] == 4 + 3
+    assert f["superblocks_pruned"] == 2 + 3
+    assert f["clusters_bounded"] == 9 + 6
     # default single shard keeps the slot-[0] semantics
     f1 = funnel_from_topk(out, batched=True, n_q=8, d_pad=16,
                           budget_clusters=4)
     assert f1["tiles_walked"] == 7
+    assert f1["superblocks_walked"] == 4
+    assert f1["clusters_bounded"] == 9
     # the per-query engine sums every slot regardless of sharding
     fp = funnel_from_topk(out, batched=False, n_q=8, d_pad=16,
                           budget_clusters=4, n_query_shards=2)
     assert fp["tiles_walked"] == 4 * 7 + 4 * 5
+    assert fp["superblocks_walked"] == 4 * 4 + 4 * 3
+    assert fp["clusters_bounded"] == 4 * 9 + 4 * 6
 
 
 def test_funnel_accumulates_across_requests(index, queries):
@@ -315,11 +328,23 @@ assert batched
 nw = np.asarray(out.n_walked_tiles).reshape(n_shards, n_local)
 assert (nw == nw[:, :1]).all()              # replicated within a shard
 assert expect["tiles_walked"] == nw[:, 0].sum()
+# level-0 counters (ISSUE 9): n_bounded_clusters is psum'd over the
+# cluster axes (each data shard bounds its local slab -> global m),
+# then replicated per model shard like every batch-level counter --
+# the funnel's one-slot-per-shard total is m per model-shard walk
+assert expect["clusters_bounded"] == idx.m * n_shards
+assert expect["superblocks_walked"] == idx.n_super * n_shards
+assert expect["superblocks_pruned"] == 0
 for key, name in (("clusters_scored", "funnel_clusters_scored_total"),
                   ("tiles_walked", "funnel_tiles_walked_total"),
                   ("tiles_scored", "funnel_tiles_scored_total"),
                   ("doc_slots_walked", "funnel_doc_slots_walked_total"),
-                  ("docs_scored", "funnel_docs_scored_total")):
+                  ("docs_scored", "funnel_docs_scored_total"),
+                  ("clusters_bounded", "funnel_clusters_bounded_total"),
+                  ("superblocks_walked",
+                   "funnel_superblocks_walked_total"),
+                  ("superblocks_pruned",
+                   "funnel_superblocks_pruned_total")):
     got = reg.get(name).value
     assert got == expect[key], (name, got, expect[key])
 assert reg.get("funnel_docs_scored_total").value > 0

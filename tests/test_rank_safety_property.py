@@ -409,7 +409,8 @@ def test_doc_run_executor_kernel_smoke(mu, block_d, layout):
 
 _TOPK_FIELDS = ("doc_ids", "scores", "n_scored_docs", "n_scored_clusters",
                 "n_scored_segments", "n_scored_tiles", "n_walked_tiles",
-                "n_walked_docs")
+                "n_walked_docs", "n_bounded_clusters",
+                "n_walked_superblocks", "n_pruned_superblocks")
 
 
 @settings(max_examples=14, deadline=None)
@@ -532,3 +533,187 @@ def test_pipelined_kernel_smoke(fuse, layout):
         np.testing.assert_array_equal(
             np.asarray(getattr(out_p, f)), np.asarray(getattr(out_b, f)),
             err_msg=f"TopK.{f} (kernel, fuse={fuse})")
+
+
+# ---------------------------------------------------------------------------
+# hierarchical superblock pruning: two-level engine (ISSUE 9)
+# ---------------------------------------------------------------------------
+
+def _regrouped(idx, n_super: int, seed: int):
+    """Random superblock partition of the index's m clusters with tables
+    rebuilt through ``superblock_tables`` — the grouping axis of the
+    two-level property sweep. Rank safety must hold for *every*
+    partition (dominance is true by construction), not just the
+    centroid-kmeans one ``pack_clusters`` chose."""
+    from repro.core.index import superblock_tables
+    rng = np.random.default_rng(seed)
+    # every superblock id occupied so S == n_super exactly
+    super_of = np.concatenate([
+        np.arange(n_super, dtype=np.int32),
+        rng.integers(0, n_super, idx.m - n_super).astype(np.int32)])
+    rng.shuffle(super_of)
+    members, smax = superblock_tables(super_of, idx.seg_max_stacked,
+                                      n_super=n_super)
+    return idx.replace(super_of=jnp.asarray(super_of),
+                       super_members=jnp.asarray(members),
+                       super_max_stacked=jnp.asarray(smax))
+
+
+@settings(max_examples=18, deadline=None)
+@given(
+    mu=st.sampled_from([0.4, 0.6, 0.8, 1.0]),
+    eta=st.sampled_from([0.7, 0.9, 1.0]),
+    n_q=st.sampled_from([4, 8]),
+    method=st.sampled_from(["asc", "anytime_star"]),
+    layout=st.sampled_from(["sorted", "arrival", "dirty"]),
+    grouping=st.sampled_from([None, (2, 7), (5, 11), (16, 13)]),
+)
+def test_superblock_engine_vs_per_query_oracle(mu, eta, n_q, method,
+                                               layout, grouping):
+    """The two-level (superblock) engine against the preserved per-query
+    oracle, across random S / random partitions: exact top-k at
+    (mu, eta) = (1, 1), the Prop-3 mu-approximation bound otherwise,
+    true-score integrity always. Coarse-bound dominance makes level-0
+    pruning superset-safe — a pruned superblock's every member fails the
+    identical level-1 test — so Props 1–4 carry over unchanged."""
+    if mu > eta:
+        mu = eta
+    if method == "anytime_star":
+        eta = mu
+    idx, q, by_id = _world(n_q, layout)
+    if grouping is not None:
+        idx = _regrouped(idx, *grouping)
+    k = 10
+    cfg = SearchConfig(k=k, mu=mu, eta=eta, method=method,
+                       engine="batched", superblocks=True, block_q=4)
+    out = retrieve(idx, q, cfg)
+    _check_true_scores(out, by_id)
+    cfg_pq = SearchConfig(k=k, mu=mu, eta=eta, method=method,
+                          engine="per_query")
+    ps = _sorted_scores(retrieve(idx, q, cfg_pq))
+    ss = _sorted_scores(out)
+    if mu == 1.0 and eta == 1.0:
+        np.testing.assert_allclose(ss, ps, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(
+            ss, _sorted_scores(_oracle(n_q, k, layout)), rtol=1e-5,
+            atol=1e-5)
+    else:
+        o = _sorted_scores(_oracle(n_q, k, layout))
+        a = np.where(ss > NEG_F / 2, ss, 0.0)
+        assert np.all(a.mean(1) >= mu * o.mean(1) - 1e-4), (
+            f"superblock engine: Prop-3 violated at mu={mu} eta={eta} "
+            f"method={method} layout={layout} grouping={grouping}")
+
+
+@settings(max_examples=14, deadline=None)
+@given(
+    mu=st.sampled_from([0.5, 0.8, 1.0]),
+    n_q=st.sampled_from([4, 8]),
+    layout=st.sampled_from(["sorted", "dirty"]),
+    budget=st.sampled_from([None, 5, 11]),
+    grouping=st.sampled_from([None, (3, 7), (9, 11)]),
+)
+def test_superblock_counter_invariants(mu, n_q, layout, budget, grouping):
+    """The observable side of level-0 pruning (the ISSUE-9 invariants):
+
+      * ``clusters_bounded <= members_of_walked_superblocks <= m`` —
+        only members of walked superblocks enter the fine bounds GEMM,
+        and each superblock is walked at most once per batch;
+      * ``walked + pruned == S`` (the early-exited tail counts pruned);
+      * per-query admission never exceeds the bounded pool;
+      * budgets are respected through the two-level frontier."""
+    idx, q, by_id = _world(n_q, layout)
+    if grouping is not None:
+        idx = _regrouped(idx, *grouping)
+    cfg = SearchConfig(k=10, mu=mu, eta=1.0, engine="batched",
+                       superblocks=True, block_q=4)
+    b = None if budget is None else jnp.int32(budget)
+    out = retrieve(idx, q, cfg, budget=b)
+    _check_true_scores(out, by_id)
+    S, cap = idx.n_super, idx.super_cap
+    nbc = np.asarray(out.n_bounded_clusters)
+    nws = np.asarray(out.n_walked_superblocks)
+    nps = np.asarray(out.n_pruned_superblocks)
+    # batch-level counters replicated per query
+    assert (nbc == nbc[0]).all() and (nws == nws[0]).all()
+    assert np.all(nws + nps == S)
+    members_walked = int(nws[0]) * cap
+    assert int(nbc[0]) <= members_walked, (nbc[0], members_walked)
+    assert int(nbc[0]) <= idx.m
+    assert np.all(np.asarray(out.n_scored_clusters) <= nbc)
+    if budget is not None:
+        assert int(out.n_scored_clusters.max()) <= budget
+
+
+@pytest.mark.parametrize("layout", ["sorted", "dirty"])
+def test_superblock_bound_dominance(layout):
+    """``super_max_stacked[super_of[c]] >= seg_max_stacked[c]``
+    elementwise — for the freshly packed index and, critically, after
+    churn: MutableIndex inserts max-fold into the coarse row and deletes
+    tombstone only (stale-but-dominating), so the invariant that makes
+    level-0 pruning rank-safe survives arbitrary edit sequences."""
+    idx, _, _ = _world(8, layout)
+    sup = np.asarray(idx.super_max_stacked)
+    fine = np.asarray(idx.seg_max_stacked)
+    sof = np.asarray(idx.super_of)
+    assert sof.shape == (idx.m,)
+    assert (sup[sof] >= fine).all(), "coarse bound lost dominance"
+    # and the member table is consistent with the grouping
+    mem = np.asarray(idx.super_members)
+    for s in range(idx.n_super):
+        np.testing.assert_array_equal(
+            np.sort(mem[s][mem[s] >= 0]), np.nonzero(sof == s)[0])
+
+
+def test_heterogeneity_makes_pruning_fire_at_defaults():
+    """The ROADMAP carry-over: with the within-cluster heterogeneity
+    knob on (doc_quality_sigma > 0), both segment pruning and superblock
+    pruning fire at the *default* (mu, eta) = (1, 1), n_seg = 4 — the
+    homogeneous default corpus keeps bounds too uniform for safe pruning
+    to trigger, which previously hid level-0/segment wins in every
+    default-parameter benchmark."""
+    from repro.core.index import build_index
+    spec = CorpusSpec(n_docs=900, vocab=320, n_topics=12, doc_terms=24,
+                      t_pad=32, query_terms=8, q_pad=12,
+                      doc_quality_sigma=1.0, seed=101)
+    docs, doc_topic = make_corpus(spec)
+    idx = build_index(docs, doc_topic % 16, m=16, n_seg=4, d_pad=80,
+                      seed=102)
+    q, _ = make_queries(spec, 8, doc_topic, seed=103)
+    cfg = SearchConfig(k=5, mu=1.0, eta=1.0, engine="batched",
+                       superblocks=True, block_q=4)
+    out = retrieve(idx, q, cfg)
+    assert int(np.asarray(out.n_pruned_superblocks)[0]) > 0, (
+        "superblock pruning did not fire at default (mu, eta)")
+    # segment pruning: strictly fewer segments admitted than a
+    # no-segment-test walk of the admitted clusters would score
+    seg = np.asarray(out.n_scored_segments).sum()
+    cl = np.asarray(out.n_scored_clusters).sum()
+    assert seg < cl * idx.n_seg, (seg, cl)
+    # exactness is untouched: (1, 1) pruning is the safe kind
+    np.testing.assert_allclose(_sorted_scores(out),
+                               _sorted_scores(brute_force_topk(idx, q, 5)),
+                               rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=4, deadline=None)
+@given(
+    mu=st.sampled_from([0.7, 1.0]),
+    layout=st.sampled_from(["sorted", "dirty"]),
+)
+def test_superblock_kernel_smoke(mu, layout):
+    """Two-level engine with the Pallas bounds kernel on both GEMMs
+    (coarse level-0 table and gathered fine member rows; interpret mode
+    off-TPU) — the kernels-interpret CI subset for the superblock seam."""
+    idx, q, by_id = _world(4, layout)
+    cfg = SearchConfig(k=5, mu=mu, eta=1.0, engine="batched",
+                       superblocks=True, block_q=4, use_kernel=True,
+                       bounds_impl="gemm")
+    out = retrieve(idx, q, cfg)
+    _check_true_scores(out, by_id)
+    if mu == 1.0:
+        np.testing.assert_allclose(_sorted_scores(out),
+                                   _sorted_scores(_oracle(4, 5, layout)),
+                                   rtol=1e-5, atol=1e-5)
+    assert np.all(np.asarray(out.n_walked_superblocks)
+                  + np.asarray(out.n_pruned_superblocks) == idx.n_super)
