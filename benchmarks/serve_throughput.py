@@ -27,16 +27,17 @@ Beyond qps, the batched engine reports the frontier-compaction picture:
     *union-scope comparison* runs the batched engine twice — per-qblock
     vs ``doc_union="batch"`` (the pre-ISSUE-5 batch-wide union) — and
     records ``doc_compaction_per_qblock`` / ``doc_compaction_batch_union``.
-    The comparison uses a finer-segmented index of the same corpus
-    (``UNION_CFG``): at the main bench's n_seg=4 the synthetic topical
-    clusters give every segment near-identical maxima, so per-query
-    segment admission is already ~dense and both scopes sit on the
-    dead-tail floor — there is no per-query sparsity for any union
-    scope to preserve. With segment bounds that discriminate (n_seg=16)
-    the batch union saturates while the per-qblock union stays sparse;
-    the per-qblock value must be strictly below the batch-union one,
-    and the counters are deterministic (no timing), so the assert is
-    container-noise-free.
+    The comparison runs at the *production* n_seg=4 on the
+    heterogeneous corpus (``UNION_CFG`` + HETERO_SPEC): on the
+    homogeneous default corpus every segment has near-identical maxima
+    at coarse segmentation, so per-query admission is ~dense and both
+    scopes sit on the dead-tail floor — but with within-cluster quality
+    spread the segment bounds discriminate even at n_seg=4, the batch
+    union saturates while the per-qblock union stays sparse, and the
+    comparison prices the union scopes on the same segmentation the
+    serving benchmarks use. The per-qblock value must be strictly below
+    the batch-union one, and the counters are deterministic (no
+    timing), so the assert is container-noise-free.
 
 Claims checked: >= 3x queries/sec over the per-query path at batch 8
 and 64 (ISSUE 2/5), scored_tiles strictly below walked_tiles at batch
@@ -77,9 +78,13 @@ OBS_BATCH = 64               # batch where obs-on vs obs-off is paired
 OBS_OVERHEAD_CLAIM = 1.05    # obs-enabled p50 must stay within 5%
 UNION_BATCH = 256            # batch where the two union scopes are
                              # compared (doc_compaction_batch_union)
-# the union-scope comparison config: fine segmentation so segment
-# bounds discriminate, small blocks so skipping has granularity
-UNION_CFG = dict(n_seg=16, mu=0.8, eta=0.8, block_q=8, block_d=4)
+# the union-scope comparison config: production segmentation (n_seg=4,
+# matching the main bench index) on the *heterogeneous* corpus
+# (HETERO_SPEC), whose within-cluster quality spread makes segment
+# maxima discriminate at coarse segmentation — the ROADMAP carry-over
+# that previously forced this comparison onto an n_seg=16 index; small
+# blocks so skipping has granularity
+UNION_CFG = dict(n_seg=4, mu=0.8, eta=0.8, block_q=8, block_d=4)
 BLOCK_Q = 16                 # executor query-block size for the bench
 BLOCK_D = 16                 # executor doc sub-tile request (rounded up
                              # to a divisor of d_pad by the planner)
@@ -252,13 +257,22 @@ def _obs_overhead(index, queries, cfg, reps: int) -> dict:
 
 
 def _union_scope_compare(smoke_index, queries, smoke: bool) -> dict:
-    """Per-qblock vs batch-wide doc-run unions on the same corpus, at
-    the comparison config (UNION_CFG — see module docstring for why the
-    comparison needs discriminating segment bounds). Counter-only: one
-    retrieve per scope, no timing. Full mode builds the finer-segmented
-    index of the same corpus; smoke reuses the tiny smoke index."""
-    index = smoke_index if smoke else built_index(m=48,
-                                                  n_seg=UNION_CFG["n_seg"])
+    """Per-qblock vs batch-wide doc-run unions at the comparison config
+    (UNION_CFG — see module docstring for why the comparison needs
+    discriminating segment bounds). Counter-only: one retrieve per
+    scope, no timing. Full mode runs at the production n_seg=4 on the
+    heterogeneous corpus — the quality spread inside each topical
+    cluster is what lets coarse segment maxima discriminate — with
+    topic-matched queries generated against that corpus; smoke reuses
+    the tiny smoke index and the caller's queries."""
+    if smoke:
+        index = smoke_index
+    else:
+        _, doc_topic, *_ = corpus_bundle(HETERO_SPEC)
+        index = built_index(m=48, n_seg=UNION_CFG["n_seg"],
+                            spec=HETERO_SPEC)
+        queries, _ = make_queries(HETERO_SPEC, UNION_BATCH, doc_topic,
+                                  seed=7)
     out = {"union_compare_cfg": dict(UNION_CFG)}
     for scope, key in (("qblock", "per_qblock"), ("batch", "batch_union")):
         cfg = SearchConfig(k=10, mu=UNION_CFG["mu"], eta=UNION_CFG["eta"],

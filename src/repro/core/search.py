@@ -348,7 +348,8 @@ def _resolve_budget(cfg: SearchConfig, m: int,
 def _search_one_query(index: ClusterIndex, qmap: jax.Array,
                       seg_b: jax.Array, max_s: jax.Array, avg_s: jax.Array,
                       order_key: jax.Array, cfg: SearchConfig,
-                      budget: jax.Array | None = None) -> tuple:
+                      budget: jax.Array | None = None,
+                      mu_eta: jax.Array | None = None) -> tuple:
     """The grouped-visitation loop for a single query (reference engine).
 
     seg_b (m, n_seg), max_s/avg_s/order_key (m,). Returns (ids, scores,
@@ -357,6 +358,8 @@ def _search_one_query(index: ClusterIndex, qmap: jax.Array,
     ``budget`` is an optional *traced* cluster-budget override so the
     serving feedback loop can retarget latency without recompiling
     (cfg.cluster_budget is static and would re-trace on every change).
+    ``mu_eta`` (optional traced (2,) float32) overrides (cfg.mu, cfg.eta)
+    the same way — the streaming front-end's per-request fidelity knob.
     """
     m = index.m
     G = cfg.group_size
@@ -375,8 +378,11 @@ def _search_one_query(index: ClusterIndex, qmap: jax.Array,
     # into the visitation order (Table 7's ASC+budget > Anytime+budget).
     budget = _resolve_budget(cfg, m, budget)
 
-    mu = jnp.float32(cfg.mu)
-    eta = jnp.float32(cfg.eta)
+    if mu_eta is None:
+        mu = jnp.float32(cfg.mu)
+        eta = jnp.float32(cfg.eta)
+    else:
+        mu, eta = mu_eta[0], mu_eta[1]
     # exit divisor: remaining clusters are all pruned once the sorted key
     # drops to theta/exit_div (see module docstring / Prop 2 analysis).
     exit_div = eta if cfg.method == "asc" else mu
@@ -456,7 +462,7 @@ def _search_one_query(index: ClusterIndex, qmap: jax.Array,
 
 def _admission(cfg: SearchConfig, *, glive, done, theta, max_s_w, avg_s_w,
                key_w, seg_b_w, rank_w, n_clusters, n_pruned, budget,
-               gate_slack=None, clamp_slack=None) -> tuple:
+               gate_slack=None, clamp_slack=None, mu_eta=None) -> tuple:
     """One wave's (mu, eta)/segment admission + budget rank-horizon —
     the bound arithmetic shared by the serial planner, the device plan
     launch, and the fused executor's exact refinement. Returns
@@ -468,9 +474,22 @@ def _admission(cfg: SearchConfig, *, glive, done, theta, max_s_w, avg_s_w,
     the executor by L clusters must admit a *superset* of the exact
     wave, which holds once the horizon is widened by L (n_pruned grows
     by at most L across the lag) and the clamp by one wave of G
-    clusters (docs/perf.md §device-planning has the proof)."""
-    mu = jnp.float32(cfg.mu)
-    eta = jnp.float32(cfg.eta)
+    clusters (docs/perf.md §device-planning has the proof).
+
+    ``mu_eta`` (optional traced (n_q, 2) float32) overrides the static
+    (cfg.mu, cfg.eta) *per query*: every divisor below is already
+    applied against the per-query theta, so a batch can mix degraded
+    and full-fidelity requests and each query's Prop 1-3 guarantees
+    hold at its own (mu, eta). With ``mu_eta=None`` the arithmetic is
+    byte-identical to the scalar path (the bit-equality tests pin it)."""
+    if mu_eta is None:
+        mu = jnp.float32(cfg.mu)                     # scalar
+        eta = jnp.float32(cfg.eta)
+        mu_s, eta_s = mu, eta                        # vs (n_q, G, n_seg)
+    else:
+        mu = mu_eta[:, 0:1]                          # (n_q, 1)
+        eta = mu_eta[:, 1:2]
+        mu_s, eta_s = mu[..., None], eta[..., None]  # (n_q, 1, 1)
 
     if cfg.method == "asc":
         pruned = ((max_s_w <= theta[:, None] / mu)
@@ -490,7 +509,7 @@ def _admission(cfg: SearchConfig, *, glive, done, theta, max_s_w, avg_s_w,
     newly_pruned = (live_q & pruned & gate).sum(axis=1).astype(jnp.int32)
 
     if cfg.doc_prune:
-        div = eta if cfg.method == "asc" else mu
+        div = eta_s if cfg.method == "asc" else mu_s
         seg_admit = seg_b_w > theta[:, None, None] / div
     else:
         seg_admit = jnp.ones_like(seg_b_w, dtype=bool)
@@ -502,8 +521,8 @@ def _plan_admission(cfg: SearchConfig, *, cids, glive, done, theta,
                     max_s_w, avg_s_w, key_w, seg_b_w, rank_w,
                     n_clusters, n_pruned, budget, dseg_mod_w, dmask_w,
                     block_q, block_d, soff_w=None, su_w=None,
-                    gate_slack=None,
-                    clamp_slack=None) -> tuple[WavePlan, jax.Array]:
+                    gate_slack=None, clamp_slack=None,
+                    mu_eta=None) -> tuple[WavePlan, jax.Array]:
     """Planner half of one wave: (mu, eta)/segment admission + budget
     rank-horizon (:func:`_admission`), compacted into the wave's work
     queues (tile, query-block, and per-qblock doc-run/sub-tile levels).
@@ -516,7 +535,7 @@ def _plan_admission(cfg: SearchConfig, *, cids, glive, done, theta,
         cfg, glive=glive, done=done, theta=theta, max_s_w=max_s_w,
         avg_s_w=avg_s_w, key_w=key_w, seg_b_w=seg_b_w, rank_w=rank_w,
         n_clusters=n_clusters, n_pruned=n_pruned, budget=budget,
-        gate_slack=gate_slack, clamp_slack=clamp_slack)
+        gate_slack=gate_slack, clamp_slack=clamp_slack, mu_eta=mu_eta)
     plan = plan_wave(cids, glive, admit, seg_admit, block_q,
                      dseg_mod_w, dmask_w, block_d=block_d,
                      seg_offsets=soff_w, sorted_upto=su_w,
@@ -580,7 +599,8 @@ def _search_batch(index: ClusterIndex, qmaps: jax.Array, seg_b: jax.Array,
                   max_s: jax.Array, avg_s: jax.Array, order_key: jax.Array,
                   cfg: SearchConfig,
                   budget: jax.Array | None = None,
-                  record_plans: bool = False) -> tuple:
+                  record_plans: bool = False,
+                  mu_eta: jax.Array | None = None) -> tuple:
     """Batch-frontier visitation: every query walks the same cluster order,
     each wave planned (admission -> compact work queues) then executed.
 
@@ -601,8 +621,11 @@ def _search_batch(index: ClusterIndex, qmaps: jax.Array, seg_b: jax.Array,
     n_qb = -(-n_q // block_q)
 
     budget = _resolve_budget(cfg, m, budget)
-    mu = jnp.float32(cfg.mu)
-    eta = jnp.float32(cfg.eta)
+    if mu_eta is None:
+        mu = jnp.float32(cfg.mu)
+        eta = jnp.float32(cfg.eta)
+    else:                                # per-request fidelity: (n_q,)
+        mu, eta = mu_eta[:, 0], mu_eta[:, 1]
     exit_div = eta if cfg.method == "asc" else mu
 
     # rank[q, c]: position of cluster c in query q's own bound order.
@@ -648,7 +671,7 @@ def _search_batch(index: ClusterIndex, qmaps: jax.Array, seg_b: jax.Array,
             dseg_mod_w=index.doc_seg_mod[cids],
             dmask_w=index.doc_mask[cids], block_q=block_q,
             block_d=block_d, soff_w=index.seg_offsets[cids],
-            su_w=index.sorted_upto[cids])
+            su_w=index.sorted_upto[cids], mu_eta=mu_eta)
 
     first_wave = (shared_p[:G], jnp.zeros((G,), bool),
                   jnp.zeros((n_q,), bool), jnp.full((n_q,), NEG),
@@ -754,7 +777,8 @@ def _search_batch(index: ClusterIndex, qmaps: jax.Array, seg_b: jax.Array,
 
 def _search_batch_super(index: ClusterIndex, qmaps: jax.Array,
                         cfg: SearchConfig,
-                        budget: jax.Array | None = None) -> tuple:
+                        budget: jax.Array | None = None,
+                        mu_eta: jax.Array | None = None) -> tuple:
     """Two-level batch-frontier visitation (docs/perf.md §superblock).
 
     Level 0 prices the whole batch against the S coarse superblock bound
@@ -795,8 +819,11 @@ def _search_batch_super(index: ClusterIndex, qmaps: jax.Array,
     n_qb = -(-n_q // block_q)
 
     budget = _resolve_budget(cfg, m, budget)
-    mu = jnp.float32(cfg.mu)
-    eta = jnp.float32(cfg.eta)
+    if mu_eta is None:
+        mu = jnp.float32(cfg.mu)
+        eta = jnp.float32(cfg.eta)
+    else:                                # per-request fidelity: (n_q,)
+        mu, eta = mu_eta[:, 0], mu_eta[:, 1]
     exit_div = eta if cfg.method == "asc" else mu
 
     # ---- level 0: coarse bounds + shared superblock order ----
@@ -890,7 +917,7 @@ def _search_batch_super(index: ClusterIndex, qmaps: jax.Array,
                 dseg_mod_w=index.doc_seg_mod[cids],
                 dmask_w=index.doc_mask[cids], block_q=block_q,
                 block_d=block_d, soff_w=index.seg_offsets[cids],
-                su_w=index.sorted_upto[cids])
+                su_w=index.sorted_upto[cids], mu_eta=mu_eta)
             n_pruned += newly_pruned
             scores = _execute_wave(index, plan, qmaps, cfg)
             doc_admit = scores > NEG                  # (n_q, cap, dp)
@@ -983,7 +1010,8 @@ def _method_stats(stats: dict, cfg: SearchConfig) -> tuple:
 def _retrieve_arrays(index: ClusterIndex, queries: QueryBatch,
                      cfg: SearchConfig,
                      budget: jax.Array | None = None,
-                     record_plans: bool = False) -> tuple:
+                     record_plans: bool = False,
+                     mu_eta: jax.Array | None = None) -> tuple:
     """(ids, scores, n_docs, n_clusters, n_segments, n_tiles_scored,
     n_tiles_walked, n_docs_walked), each leading n_q — plus the recorded
     wave plans as a trailing element when ``record_plans`` (batched
@@ -1008,7 +1036,8 @@ def _retrieve_arrays(index: ClusterIndex, queries: QueryBatch,
                              "prices members inside a lax.cond")
         # the two-level engine never runs the full O(m) bound pass:
         # it prices superblocks up front and members on admission
-        return _search_batch_super(index, qmaps, cfg, budget=budget)
+        return _search_batch_super(index, qmaps, cfg, budget=budget,
+                                   mu_eta=mu_eta)
     stats = cluster_bounds(index, queries, impl=cfg.bounds_impl,
                            use_kernel=cfg.use_kernel, qmaps=qmaps)
     seg_b, max_s, avg_s, order_key = _method_stats(stats, cfg)
@@ -1021,12 +1050,20 @@ def _retrieve_arrays(index: ClusterIndex, queries: QueryBatch,
     if engine == "per_query":
         if record_plans:
             raise ValueError("plan recording requires engine='batched'")
+        if mu_eta is None:
+            fn = jax.vmap(
+                lambda qmap, b, mx, av, key: _search_one_query(
+                    index, qmap, b, mx, av, key, cfg, budget=budget))
+            return fn(qmaps, seg_b, max_s, avg_s, order_key) + degenerate
         fn = jax.vmap(
-            lambda qmap, b, mx, av, key: _search_one_query(
-                index, qmap, b, mx, av, key, cfg, budget=budget))
-        return fn(qmaps, seg_b, max_s, avg_s, order_key) + degenerate
+            lambda qmap, b, mx, av, key, me: _search_one_query(
+                index, qmap, b, mx, av, key, cfg, budget=budget,
+                mu_eta=me))
+        return (fn(qmaps, seg_b, max_s, avg_s, order_key, mu_eta)
+                + degenerate)
     out = _search_batch(index, qmaps, seg_b, max_s, avg_s, order_key,
-                        cfg, budget=budget, record_plans=record_plans)
+                        cfg, budget=budget, record_plans=record_plans,
+                        mu_eta=mu_eta)
     if record_plans:
         return tuple(out[:-1]) + degenerate + (out[-1],)
     return out + degenerate
@@ -1047,12 +1084,19 @@ def _topk_of(arrays: tuple) -> TopK:
 
 @partial(jax.jit, static_argnames=("cfg",))
 def retrieve(index: ClusterIndex, queries: QueryBatch,
-             cfg: SearchConfig, budget: jax.Array | None = None) -> TopK:
+             cfg: SearchConfig, budget: jax.Array | None = None,
+             mu_eta: jax.Array | None = None) -> TopK:
     """Batched cluster-based retrieval with the configured method.
 
     ``budget`` (optional, traced) overrides ``cfg.cluster_budget`` without
-    retracing — the serving engine's adaptive-latency knob."""
-    return _topk_of(_retrieve_arrays(index, queries, cfg, budget=budget))
+    retracing — the serving engine's adaptive-latency knob. ``mu_eta``
+    (optional, traced (n_q, 2) float32) overrides (cfg.mu, cfg.eta)
+    per query, so one batch can mix full-fidelity and degraded requests
+    (the streaming front-end's closed-loop ladder, docs/serving.md);
+    rows must satisfy the SearchConfig invariant 0 < mu <= eta <= 1 —
+    traced values cannot be validated here, callers own it."""
+    return _topk_of(_retrieve_arrays(index, queries, cfg, budget=budget,
+                                     mu_eta=mu_eta))
 
 
 @partial(jax.jit, static_argnames=("cfg",))

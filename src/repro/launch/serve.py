@@ -28,6 +28,17 @@ Durability options (docs/lifecycle.md §durability; --churn only):
   --fsync P          WAL fsync policy: always | interval | off.
   --checkpoint-every N   checkpoint every N commits (0 = only at exit).
 
+Streaming options (docs/serving.md):
+  --frontend M       off | closed | open. With closed/open the launcher
+                     feeds queries one at a time (optionally paced by
+                     --arrival-qps) through the StreamingFrontend's
+                     bounded queue with per-request deadlines
+                     (--deadline-ms), shedding over-capacity submits
+                     (--max-queue). ``closed`` additionally runs the
+                     (mu, eta)/budget degradation ladder against
+                     --slo-p99-ms; SIGTERM stops intake, drains under
+                     --drain-deadline-ms, then checkpoints.
+
 Observability options (docs/observability.md):
   --metrics-port P   serve Prometheus text on http://0.0.0.0:P/metrics
                      (and a JSON snapshot on /metrics.json) while the
@@ -98,6 +109,27 @@ def _parse():
     ap.add_argument("--split-every", type=int, default=0,
                     help="planner/executor split every Nth request "
                          "(0 = only on traced requests)")
+    ap.add_argument("--frontend", type=str, default="off",
+                    choices=("off", "closed", "open"),
+                    help="streaming front-end mode: off = offline "
+                         "batches (default); closed = deadline-aware "
+                         "queue with the closed-loop (mu, eta) "
+                         "degradation ladder; open = same queue with "
+                         "the ladder disabled (baseline)")
+    ap.add_argument("--arrival-qps", type=float, default=0.0,
+                    help="frontend mode: pace submits at this rate "
+                         "(0 = as fast as possible)")
+    ap.add_argument("--max-queue", type=int, default=64,
+                    help="frontend mode: bounded queue depth; beyond "
+                         "it submits are shed with a typed Rejected")
+    ap.add_argument("--deadline-ms", type=float, default=200.0,
+                    help="frontend mode: per-request deadline")
+    ap.add_argument("--slo-p99-ms", type=float, default=50.0,
+                    help="frontend mode: p99 SLO the degradation "
+                         "controller defends")
+    ap.add_argument("--drain-deadline-ms", type=float, default=1000.0,
+                    help="frontend mode: graceful-shutdown drain "
+                         "budget; queued requests past it are shed")
     return ap.parse_args()
 
 
@@ -199,17 +231,28 @@ def _apply_churn(writer, rng, spec, n: int, registry) -> None:
     writer.commit()
 
 
-def _recover_writer(eng, args, registry):
+def _recover_writer(eng, args, registry, backoff_cap_s: float = 2.0):
     """Bounded-retry recovery of the durable write plane. Readers keep
     serving the engine's last-good pinned epoch the whole time; the
-    publisher only swaps forward when recovery republishes."""
+    publisher only swaps forward when recovery republishes. Retries
+    back off exponentially to ``backoff_cap_s`` with up to 25% jitter
+    (a fleet restarting against one shared volume must not retry in
+    lockstep); every attempt increments
+    ``writer_recovery_attempts_total``."""
     import time as _time
+
+    import numpy as np
 
     from repro.lifecycle import DurableIndexWriter
 
+    attempts = registry.counter(
+        "writer_recovery_attempts_total",
+        "write-plane recovery attempts (success and failure)")
+    rng = np.random.default_rng(17)
     backoff = 0.1
     last: Exception | None = None
     for attempt in range(5):
+        attempts.inc()
         try:
             eng.health.to("recovering", f"recovery attempt {attempt + 1}")
             writer = DurableIndexWriter.recover(
@@ -222,10 +265,12 @@ def _recover_writer(eng, args, registry):
         except Exception as e:          # noqa: BLE001 — retry any failure
             last = e
             eng.health.to("degraded", f"recovery failed: {e!r}")
+            sleep_s = min(backoff, backoff_cap_s) * (
+                1.0 + 0.25 * float(rng.random()))
             print(f"[serve] recovery attempt {attempt + 1} failed: {e!r}; "
-                  f"retrying in {backoff:.2f}s")
-            _time.sleep(backoff)
-            backoff = min(backoff * 2, 2.0)
+                  f"retrying in {sleep_s:.2f}s")
+            _time.sleep(sleep_s)
+            backoff = min(backoff * 2, backoff_cap_s)
     raise RuntimeError(
         f"write-plane recovery failed after retries: {last!r}")
 
@@ -394,9 +439,31 @@ def main() -> None:
     except ValueError:
         pass                             # not the main thread (tests)
 
+    frontend = None
+    if args.frontend != "off":
+        from repro.serving.frontend import FrontendConfig, StreamingFrontend
+        frontend = StreamingFrontend(eng, FrontendConfig(
+            max_batch=args.batch_size, max_queue=args.max_queue,
+            default_deadline_ms=args.deadline_ms,
+            slo_p99_ms=args.slo_p99_ms,
+            drain_deadline_ms=args.drain_deadline_ms,
+            closed_loop=(args.frontend == "closed")))
+        from repro.serving.frontend import query_rows as _rows
+        frontend.warmup(next(_rows(warm)))
+        frontend.start()
+        print(f"[serve] streaming frontend ({args.frontend} loop): "
+              f"queue<={args.max_queue}, deadline {args.deadline_ms:.0f} "
+              f"ms, SLO p99 {args.slo_p99_ms:.0f} ms")
+
     rng = np.random.default_rng(123)
     out = None
     try:
+        import time as _time
+
+        from repro.serving.frontend import query_rows
+        interval_s = (1.0 / args.arrival_qps
+                      if args.arrival_qps > 0 else 0.0)
+        futures = []
         for step in range(args.batches):
             if writer is not None:
                 try:
@@ -416,10 +483,28 @@ def main() -> None:
                     writer = _recover_writer(eng, args, registry)
             q, _ = make_queries(spec, args.batch_size, doc_topic,
                                 seed=step)
-            out = eng.search(q)
+            if frontend is None:
+                out = eng.search(q)
+            else:
+                for row in query_rows(q):
+                    futures.append(frontend.submit(row))
+                    if interval_s:
+                        _time.sleep(interval_s)
+        for f in futures:
+            f.result()                   # typed outcome, never hangs
     except KeyboardInterrupt:
         print("[serve] interrupted — shutting down gracefully")
     finally:
+        # graceful-drain ordering: stop intake and drain the queue
+        # under its bounded deadline FIRST, so in-flight requests see a
+        # consistent epoch; only then flush the WAL + final checkpoint
+        if frontend is not None:
+            drained = frontend.shutdown()
+            cons = frontend.conservation()
+            print(f"[serve] frontend drained: {drained['drained']} "
+                  f"served, {drained['shed']} shed at deadline; "
+                  f"totals {cons} (ladder max level "
+                  f"{frontend.controller.level_max})")
         if writer is not None and hasattr(writer, "close"):
             writer.close()               # WAL flush + final checkpoint
             print(f"[serve] final checkpoint -> {args.durable_dir}")

@@ -16,27 +16,57 @@ path=...)`` calls at the exact instants a real crash would bite:
                                     old copy not yet reaped
     compact.mid_pack                COMPACT record logged, re-pack not done
 
+The streaming front-end (serving/frontend.py) adds serve-loop points so
+overload behavior is deterministically testable:
+
+    frontend.dispatch.slow_executor before a formed batch executes
+                                    (``delay:<ms>`` = a stalled device)
+    frontend.queue.overflow         an over-capacity submit was just shed
+                                    (fires *after* the typed rejection,
+                                    so a ``raise`` can never hang it)
+    frontend.clock.skew             every frontend clock read
+                                    (``skew:<ms>`` jumps one reading)
+
 With no schedule installed a point is one global load + ``None`` check —
 nothing on the hot path pays for testability. Tests install a seeded
 :class:`FaultSchedule` that fires a chosen *action* on the nth hit of a
 point: ``raise`` (an exception unwinds the writer), ``exit`` (hard
-``os._exit`` — the in-process stand-in for SIGKILL), or a torn-write
+``os._exit`` — the in-process stand-in for SIGKILL), a torn-write
 corruption of the file the point is touching (``truncate`` / ``bitflip``
-/ ``zero``, then raise). Corruption offsets come from the schedule's own
-seeded rng, so a failing case replays exactly.
+/ ``zero``, then raise), or one of the parametric serve-loop actions:
+``delay:<ms>`` (sleep that long at the point, then return normally — a
+slow executor, not a crash) and ``skew:<ms>`` (return the offset as the
+point's payload; the call site applies it to its clock reading).
+Corruption offsets come from the schedule's own seeded rng, so a failing
+case replays exactly.
 """
 
 from __future__ import annotations
 
 import os
 import threading
+import time
 from contextlib import contextmanager
 
 import numpy as np
 
 #: actions that damage the file at the injection point before raising
 CORRUPT_ACTIONS = ("truncate", "bitflip", "zero")
+#: parametric actions, spelled ``name:<ms>`` — these do not raise
+PARAM_ACTIONS = ("delay", "skew")
 ACTIONS = ("raise", "exit") + CORRUPT_ACTIONS
+
+
+def _parse_action(action: str) -> tuple[str, float | None]:
+    """Split ``"delay:50"`` into ``("delay", 50.0)``; plain actions
+    come back with a ``None`` argument."""
+    base, sep, arg = action.partition(":")
+    if not sep:
+        return action, None
+    try:
+        return base, float(arg)
+    except ValueError:
+        return action, None
 
 
 class FaultInjected(RuntimeError):
@@ -83,9 +113,16 @@ class FaultSchedule:
 
     def __init__(self, plan: list[tuple[str, int, str]], seed: int = 0):
         for point, nth, action in plan:
-            if action not in ACTIONS:
+            base, arg = _parse_action(action)
+            if base in PARAM_ACTIONS:
+                if arg is None or arg < 0:
+                    raise ValueError(
+                        f"parametric action {action!r} needs a "
+                        f"non-negative ms argument, e.g. '{base}:50'")
+            elif action not in ACTIONS:
                 raise ValueError(
-                    f"unknown fault action {action!r}; choose from {ACTIONS}")
+                    f"unknown fault action {action!r}; choose from "
+                    f"{ACTIONS + PARAM_ACTIONS}")
             if nth < 1:
                 raise ValueError(f"nth is 1-based, got {nth}")
         self.plan = list(plan)
@@ -95,7 +132,7 @@ class FaultSchedule:
         self._rng = np.random.default_rng(seed)
         self._lock = threading.Lock()
 
-    def on_point(self, point: str, path: str | None) -> None:
+    def on_point(self, point: str, path: str | None) -> float | None:
         with self._lock:
             n = self.hits.get(point, 0) + 1
             self.hits[point] = n
@@ -106,10 +143,18 @@ class FaultSchedule:
                     to_fire = action
                     break
         if to_fire is not None:
-            self._fire(point, to_fire, path)
+            return self._fire(point, to_fire, path)
+        return None
 
-    def _fire(self, point: str, action: str, path: str | None) -> None:
+    def _fire(self, point: str, action: str,
+              path: str | None) -> float | None:
         self.fired.append((point, action))
+        base, arg = _parse_action(action)
+        if base == "delay":                  # a stall, not a crash
+            time.sleep(arg / 1e3)
+            return None
+        if base == "skew":                   # payload for the call site
+            return arg
         if action == "exit":
             os._exit(17)                     # hard death: no finally blocks
         if action in CORRUPT_ACTIONS:
@@ -124,11 +169,14 @@ class FaultSchedule:
 _ACTIVE: FaultSchedule | None = None
 
 
-def fault_point(name: str, path: str | None = None) -> None:
-    """A named crash site. No-op unless a schedule is installed."""
+def fault_point(name: str, path: str | None = None) -> float | None:
+    """A named crash site. No-op unless a schedule is installed.
+    Returns the firing action's payload (``skew:<ms>`` actions) or
+    None; crash-style actions raise instead of returning."""
     schedule = _ACTIVE
     if schedule is not None:
-        schedule.on_point(name, path)
+        return schedule.on_point(name, path)
+    return None
 
 
 @contextmanager

@@ -87,6 +87,18 @@ class ServeStats:
             "serve_requests_total", "search requests (batches) served")
         self._time = self.registry.counter(
             "serve_time_seconds_total", "wall time spent in search")
+        # end-to-end (queue + service) per-request latency, recorded by
+        # the streaming front-end: a cumulative histogram for the
+        # exposition plus a bounded recent window, because the closed-
+        # loop degradation controller needs a p99 that *recovers* when
+        # the overload clears — a forever histogram would hold the
+        # breach long after the queue drained (docs/serving.md). The
+        # histogram is registered lazily on first observe_request so an
+        # engine serving without a front-end exposes only the batch-
+        # level instruments.
+        self._req_hist = None
+        self.request_latencies_ms: collections.deque = collections.deque(
+            maxlen=window)
         # lifecycle mirror (plain attributes, same surface as before)
         self.epoch_reader_counts: dict = {}
         self.max_epoch_lifetime_s: float = 0.0
@@ -125,6 +137,26 @@ class ServeStats:
         self.latencies_ms.append(per_query_ms)
         return per_query_ms
 
+    def observe_request(self, latency_ms: float) -> None:
+        """One end-to-end request latency (queue wait + service),
+        recorded by the streaming front-end at completion time."""
+        if self._req_hist is None:
+            self._req_hist = self.registry.histogram(
+                "serve_request_latency_ms",
+                "end-to-end request latency (queue wait + service)",
+                buckets=LATENCY_BUCKETS_MS)
+        self._req_hist.observe(latency_ms)
+        self.request_latencies_ms.append(latency_ms)
+
+    def windowed_p(self, q: float) -> float:
+        """Percentile of *recent* end-to-end request latency — the
+        closed-loop degradation controller's SLO signal (exact over the
+        window, not bucketed; 0.0 before any request completes)."""
+        if not self.request_latencies_ms:
+            return 0.0
+        return float(np.percentile(
+            np.asarray(self.request_latencies_ms, dtype=np.float64), q))
+
 
 class AdaptiveBudget:
     """Latency target -> cluster budget, from an online cost estimate.
@@ -161,14 +193,23 @@ class AdaptiveBudget:
 #: health states, in gauge order: serve_health_state reports the index
 HEALTH_STATES = ("healthy", "degraded", "recovering")
 
+#: independent degradation causes the machine tracks. ``writer_fault``
+#: is the PR 7 write-plane arc; ``overload`` is the streaming
+#: front-end's closed-loop (mu, eta) degradation (docs/serving.md).
+HEALTH_CAUSES = ("writer_fault", "overload")
+
+#: composite severity: a degraded cause dominates a recovering one
+_STATE_SEVERITY = {"healthy": 0, "recovering": 1, "degraded": 2}
+
 
 class HealthStateMachine:
-    """Write-plane health, as the read path sees it.
+    """Serving health, as the read path sees it — per *cause*.
 
     ::
 
-        healthy --(writer fault)--> degraded --(recovery begins)-->
-        recovering --(recovered epoch republished)--> healthy
+        healthy --(fault/overload)--> degraded --(recovery begins /
+        ladder steps back up)--> recovering --(recovered epoch
+        republished / ladder back at full fidelity)--> healthy
 
     ``degraded -> healthy`` directly is also legal (a transient fault
     cleared by a plain retry, no recovery needed) and ``recovering ->
@@ -177,6 +218,18 @@ class HealthStateMachine:
     last-good epoch — so the machine is bookkeeping for operators
     (``serve_health_state`` gauge, transition counter) and for the serve
     loop's retry/backoff policy, not a request gate.
+
+    Two *causes* progress independently through that matrix:
+    ``writer_fault`` (the durable write plane, PR 7) and ``overload``
+    (the streaming front-end's closed-loop degradation ladder). The
+    legality check is per cause — a writer fault while the front-end is
+    shedding load is ``to("degraded", cause="writer_fault")`` on a
+    machine whose overload cause is already degraded, and both must
+    clear before ``state`` reads healthy again. The composite ``state``
+    is the worst cause (degraded > recovering > healthy), mirrored in
+    ``serve_health_state``; per-cause states are mirrored in
+    ``serve_health_cause_state{cause=...}``. ``cause`` defaults to
+    ``writer_fault`` so every pre-existing call site keeps its meaning.
     """
 
     _LEGAL = {
@@ -187,28 +240,40 @@ class HealthStateMachine:
 
     def __init__(self, registry: MetricsRegistry | None = None):
         self.registry = registry
-        self.state = "healthy"
+        self.cause_states = {c: "healthy" for c in HEALTH_CAUSES}
         self.reason = ""
-        self.transitions: list[tuple[str, str, str]] = []
+        self.transitions: list[tuple[str, str, str, str]] = []
         self._mirror()
 
-    def to(self, state: str, reason: str = "") -> None:
+    @property
+    def state(self) -> str:
+        """Composite health: the worst state over all causes."""
+        return max(self.cause_states.values(),
+                   key=_STATE_SEVERITY.__getitem__)
+
+    def to(self, state: str, reason: str = "",
+           cause: str = "writer_fault") -> None:
         if state not in HEALTH_STATES:
             raise ValueError(f"unknown health state {state!r}")
-        if state == self.state:
+        if cause not in HEALTH_CAUSES:
+            raise ValueError(f"unknown health cause {cause!r}; "
+                             f"choose from {HEALTH_CAUSES}")
+        cur = self.cause_states[cause]
+        if state == cur:
             return
-        if state not in self._LEGAL[self.state]:
+        if state not in self._LEGAL[cur]:
             raise ValueError(
-                f"illegal health transition {self.state!r} -> {state!r}")
-        self.transitions.append((self.state, state, reason))
-        self.state = state
+                f"illegal health transition {cur!r} -> {state!r} "
+                f"(cause={cause})")
+        self.transitions.append((cur, state, reason, cause))
+        self.cause_states[cause] = state
         self.reason = reason
         self._mirror()
         if self.registry is not None:
             self.registry.counter(
                 "serve_health_transitions_total",
                 "health state machine transitions",
-                labels={"to": state}).inc()
+                labels={"to": state, "cause": cause}).inc()
 
     @property
     def healthy(self) -> bool:
@@ -218,8 +283,15 @@ class HealthStateMachine:
         if self.registry is not None:
             self.registry.gauge(
                 "serve_health_state",
-                "write-plane health: 0 healthy, 1 degraded, "
+                "composite serving health: 0 healthy, 1 degraded, "
                 "2 recovering").set(HEALTH_STATES.index(self.state))
+            for cause, st in self.cause_states.items():
+                self.registry.gauge(
+                    "serve_health_cause_state",
+                    "per-cause health: 0 healthy, 1 degraded, "
+                    "2 recovering",
+                    labels={"cause": cause}).set(
+                    HEALTH_STATES.index(st))
 
 
 class RetrievalEngine:
@@ -262,13 +334,23 @@ class RetrievalEngine:
         if cfg.engine == "pipelined":
             # host-driven wave loop: jitting happens per launch inside
             # retrieve_pipelined (plan / fused-exec), not around the
-            # whole search — the host driver IS the pipeline
+            # whole search — the host driver IS the pipeline. Per-request
+            # (mu, eta) is not plumbed through the device plan launches;
+            # the front-end refuses the combination up front.
             from repro.core.search import retrieve_pipelined
-            self._fn = (lambda idx, q, budget:
-                        retrieve_pipelined(idx, q, cfg, budget=budget))
+
+            def _fn(idx, q, budget, mu_eta=None):
+                if mu_eta is not None:
+                    raise ValueError(
+                        "per-request mu_eta is not supported on "
+                        "engine='pipelined'")
+                return retrieve_pipelined(idx, q, cfg, budget=budget)
+
+            self._fn = _fn
         else:
             self._fn = jax.jit(
-                lambda idx, q, budget: retrieve(idx, q, cfg, budget=budget))
+                lambda idx, q, budget, mu_eta=None: retrieve(
+                    idx, q, cfg, budget=budget, mu_eta=mu_eta))
         self._split_warm = False
 
     def _resolve(self) -> IndexSnapshot:
@@ -295,13 +377,24 @@ class RetrievalEngine:
             b = m + 1                      # unbudgeted
         return jnp.int32(b)
 
-    def warmup(self, queries: QueryBatch) -> None:
+    def warmup(self, queries: QueryBatch, mu_eta=None) -> None:
+        """Pay jit compilation outside the recorded loop. ``mu_eta``
+        selects the per-request-fidelity trace (a different jit cache
+        entry than the scalar path — the frontend warms that one)."""
         snap = self._resolve()
         jax.block_until_ready(
-            self._fn(snap.index, queries, self._budget(snap)))
+            self._fn(snap.index, queries, self._budget(snap), mu_eta))
 
     # -- the serving hot path ---------------------------------------------
-    def search(self, queries: QueryBatch) -> TopK:
+    def search(self, queries: QueryBatch,
+               mu_eta: jnp.ndarray | None = None,
+               budget_frac: float | None = None) -> TopK:
+        """Serve one batch. ``mu_eta`` (optional (n_q, 2) float32) is the
+        per-request fidelity override — the streaming front-end stamps
+        each request with its degradation-ladder step so one batch mixes
+        degraded and full-fidelity requests. ``budget_frac`` scales the
+        effective cluster budget (the ladder's batch-level knob: the most
+        degraded request in the batch sets it)."""
         obs = self.obs
         if not self.health.healthy and obs is not None:
             obs.registry.counter(
@@ -309,15 +402,18 @@ class RetrievalEngine:
                 "requests served off the last-good epoch while the "
                 "write plane was degraded or recovering").inc()
         if obs is None:
-            return self._search_impl(queries, None, None, False)
+            return self._search_impl(queries, None, None, False,
+                                     mu_eta, budget_frac)
         rid, trace, want_split = obs.next_request()
         with trace:
             with obs.tracer.maybe_profile(rid):
-                out = self._search_impl(queries, obs, trace, want_split)
+                out = self._search_impl(queries, obs, trace, want_split,
+                                        mu_eta, budget_frac)
         return out
 
     def _search_impl(self, queries: QueryBatch, obs, trace,
-                     want_split: bool) -> TopK:
+                     want_split: bool, mu_eta=None,
+                     budget_frac: float | None = None) -> TopK:
         from repro.obs.trace import NULL_REQUEST
         if trace is None:
             trace = NULL_REQUEST
@@ -327,10 +423,15 @@ class RetrievalEngine:
         with trace.span("epoch_pin", live=live):
             snap = self._source.pin() if live else self._resolve()
         budget = self._budget(snap)
+        if budget_frac is not None:
+            # ladder degradation: scale the *effective* budget (clamped
+            # to m first so an unbudgeted m+1 sentinel scales sanely)
+            b = min(int(budget), snap.index.m)
+            budget = jnp.int32(max(8, int(b * budget_frac)))
         try:
             t0 = time.perf_counter()
             out = jax.block_until_ready(
-                self._fn(snap.index, queries, budget))
+                self._fn(snap.index, queries, budget, mu_eta))
             dt = time.perf_counter() - t0
             # plan recording (the split seam's replay hook) does not
             # exist on the two-level walk — sampled superblock requests
